@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: timing, result records, CSV emission."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def save(name: str, payload: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps(payload, indent=1, default=float))
+
+
+def emit_csv(rows: List[Dict]) -> None:
+    """name,us_per_call,derived CSV per the harness contract."""
+    for r in rows:
+        name = r["name"]
+        us = r.get("us_per_call", r.get("wall_s", 0.0) * 1e6)
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call", "wall_s"))
+        print(f"{name},{us:.1f},{derived}")
+
+
+def hist_stats(hist, idx=None):
+    def pick(x):
+        a = np.asarray(x, np.float64)
+        return a if idx is None else a[idx]
+    p = pick(hist.power_total)
+    return {
+        "util": float(pick(hist.util).mean()),
+        "p_avg_mw": float(p.mean() / 1e6),
+        "p_max_mw": float(p.max() / 1e6),
+        "p_swing_mw": float((p.max() - p.min()) / 1e6),
+        "pue": float(pick(hist.pue).mean()),
+        "t_tower_c": float(pick(hist.t_tower_return).mean()),
+    }

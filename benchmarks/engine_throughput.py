@@ -1,0 +1,70 @@
+"""Twin-engine throughput: simulated-seconds per wall-second and scenario
+sweep scaling — the compiled-scan engine vs the paper's Python simulators
+(paper baseline: FastSim sequential at 688x real-time; original RAPS figure
+runs take ~3-25 min per scenario)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import save
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.systems.config import get_system
+
+
+def _run_once(sys_, table, scens, t1):
+    final, hist = eng.simulate_sweep(sys_, table, scens, 0.0, t1)
+    jax.block_until_ready(final.t)
+    return final
+
+
+def run(quick: bool = False):
+    rows = []
+    for sys_name, n_jobs, hours in [("marconi100", 600, 12),
+                                    ("frontier", 800, 6)]:
+        sys_ = get_system(sys_name)
+        js = generate(sys_, WorkloadSpec(
+            n_jobs=n_jobs, duration_s=hours * 3600.0, load=1.0,
+            trace_len=16, seed=1))
+        table = js.to_table()
+        t1 = hours * 3600.0
+        n_steps = int(t1 / sys_.dt)
+        for n_scen in ([1, 4] if quick else [1, 4, 16]):
+            scens = [T.Scenario.make("fcfs", "easy")] * n_scen
+            _run_once(sys_, table, scens, t1)  # compile
+            t0 = time.perf_counter()
+            _run_once(sys_, table, scens, t1)
+            wall = time.perf_counter() - t0
+            rows.append({
+                "name": f"engine/{sys_name}-x{n_scen}",
+                "us_per_call": wall / (n_steps * n_scen) * 1e6,
+                "wall_s": wall,
+                "steps_per_s": n_steps * n_scen / wall,
+                "speedup_vs_realtime": t1 * n_scen / wall,
+                "scenarios": n_scen,
+                "nodes": sys_.n_nodes,
+                "jobs": n_jobs,
+            })
+        # static-scenario fast path (compile-time policy; §Perf-twin)
+        f, _ = eng.simulate_static(sys_, table, "fcfs", "first-fit", 0.0, t1)
+        jax.block_until_ready(f.t)
+        t0 = time.perf_counter()
+        f, _ = eng.simulate_static(sys_, table, "fcfs", "first-fit", 0.0, t1)
+        jax.block_until_ready(f.t)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "name": f"engine/{sys_name}-static",
+            "us_per_call": wall / n_steps * 1e6,
+            "wall_s": wall,
+            "steps_per_s": n_steps / wall,
+            "speedup_vs_realtime": t1 / wall,
+            "scenarios": 1,
+            "nodes": sys_.n_nodes,
+            "jobs": n_jobs,
+        })
+    save("engine_throughput", {"rows": rows})
+    return rows

@@ -1,0 +1,75 @@
+"""Paper Fig. 10 / §4.4: ML-guided scheduling on Fugaku (F-Data).
+
+(a) under high load the ML policy lowers power per timestep by prioritizing
+smaller jobs; (b) L2-normalized multi-objective comparison across policies
+(wait, turnaround, energy, EDP, power peak — lower is better)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import hist_stats, save, timed
+from repro.core import engine as eng
+from repro.core import stats as stats_mod
+from repro.core import types as T
+from repro.datasets.loaders import load_fugaku
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.ml.pipeline import MLSchedulerModel, attach_scores
+from repro.systems.config import get_system
+
+POLICIES = ["fcfs", "sjf", "priority", "ljf", "ml"]
+OBJECTIVES = ["avg_wait_s", "avg_turnaround_s", "avg_job_energy_j", "edp",
+              "max_power_mw"]
+
+
+def run(quick: bool = False):
+    sys_full = get_system("fugaku")
+    sys_ = sys_full.scaled(8192) if quick else sys_full.scaled(32768)
+
+    # train phase on historical month; test on a high-load week
+    train_js = generate(sys_, WorkloadSpec(
+        n_jobs=1500 if quick else 4000, duration_s=14 * 86400.0, load=0.8,
+        trace_len=8, n_accounts=64, seed=30))
+    (model, fit_wall) = (MLSchedulerModel.fit(train_js, k=5,
+                                              n_trees=8, depth=6), 0.0)
+    test_js = generate(sys_, WorkloadSpec(
+        n_jobs=500 if quick else 1500,
+        duration_s=(1.0 if quick else 2.0) * 86400.0, load=1.8,
+        trace_len=8, n_accounts=64, seed=31, max_frac_nodes=0.15))
+    attach_scores(test_js, model)
+    test_js.assign_prepop_placement(0.0, sys_.n_nodes)
+    table = test_js.to_table()
+    t1 = (0.5 if quick else 1.5) * 86400.0
+
+    scens = [T.Scenario.make(p, "first-fit") for p in POLICIES]
+    (finals, hists), wall = timed(eng.simulate_sweep, sys_, table, scens,
+                                  0.0, t1)
+    rows = []
+    obj = np.zeros((len(POLICIES), len(OBJECTIVES)))
+    for i, p in enumerate(POLICIES):
+        final_i = jaxtree_index(finals, i)
+        hist_i = jaxtree_index(hists, i)
+        s = stats_mod.summarize(sys_, table, final_i, hist_i)
+        obj[i] = [s[o] for o in OBJECTIVES]
+        st = hist_stats(hists, i)
+        st.update(name=f"fig10/{p}", wall_s=wall / len(POLICIES),
+                  completed=s["jobs_completed"],
+                  avg_wait_s=s["avg_wait_s"],
+                  avg_turnaround_s=s["avg_turnaround_s"],
+                  edp=s["edp"])
+        rows.append(st)
+
+    # L2-normalized multi-objective score (paper Fig. 10b; lower = better)
+    norm = np.linalg.norm(obj, axis=0) + 1e-9
+    scores = (obj / norm).mean(axis=1)
+    for i, p in enumerate(POLICIES):
+        rows[i]["l2_multiobjective"] = float(scores[i])
+    save("fig10_ml", {"rows": rows, "objectives": OBJECTIVES})
+    # ML should beat LJF on the multi-objective score under high load
+    s = {p: scores[i] for i, p in enumerate(POLICIES)}
+    assert s["ml"] <= s["ljf"] + 0.02
+    return rows
+
+
+def jaxtree_index(tree, i):
+    import jax
+    return jax.tree_util.tree_map(lambda x: x[i], tree)

@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md tables from results/dryrun artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [--tag final]
+
+Emits markdown: the per-cell roofline table (baseline vs tagged/optimized)
+and the multi-pod compile-health matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(tag: str):
+    base, opt = {}, {}
+    for f in glob.glob(str(DRYRUN / "*extrap*.json")):
+        r = json.load(open(f))
+        parts = r["cell"].split("__")
+        key = (parts[0], parts[1])
+        if r["cell"].endswith("__extrap"):
+            base[key] = r
+        elif r["cell"].endswith(f"__{tag}"):
+            opt[key] = r
+    return base, opt
+
+
+def roofline_table(tag: str) -> str:
+    base, opt = load(tag)
+    out = ["| arch / shape | bottleneck | t_comp (s) base→opt | "
+           "t_coll (s) base→opt | t_mem (s) | useful base→opt | "
+           "roofline frac |",
+           "|---|---|---|---|---|---|---|"]
+    fracs = []
+    for key in sorted(set(base) | set(opt)):
+        b = base.get(key)
+        o = opt.get(key, b)
+        if o is None:
+            continue
+        if o["status"] == "SKIP":
+            out.append(f"| {key[0]}/{key[1]} | — | SKIP | | | | |")
+            continue
+        rb = (b or o)["roofline"]
+        ro = o["roofline"]
+        dom = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        frac = ro["t_compute_s"] / dom if dom > 0 else 0.0
+        fracs.append((frac, ro["useful_flops_ratio"], key, o["kind"]))
+        out.append(
+            f"| {key[0]}/{key[1]} | {ro['bottleneck']} | "
+            f"{rb['t_compute_s']:.2f}→{ro['t_compute_s']:.2f} | "
+            f"{rb['t_collective_s']:.2f}→{ro['t_collective_s']:.2f} | "
+            f"{ro['t_memory_s']:.3f} | "
+            f"{rb['useful_flops_ratio']:.3f}→{ro['useful_flops_ratio']:.3f} | "
+            f"{frac:.2f} |")
+    # fleet MFU-style summary for the train cells (the scored number):
+    # useful_flops_ratio x compute-share-of-dominant-term
+    trains = [(f, u, k) for f, u, k, kind in fracs if kind == "train"]
+    if trains:
+        mfus = [f * u for f, u, k in trains]
+        out.append("")
+        out.append(f"**Train-cell roofline summary (MFU upper bound = "
+                   f"useful × compute/dominant):** mean "
+                   f"{sum(mfus) / len(mfus):.3f}, "
+                   f"best {max(mfus):.3f}, worst {min(mfus):.3f} over "
+                   f"{len(mfus)} archs.")
+    return "\n".join(out)
+
+
+def compile_matrix() -> str:
+    rows = {}
+    for f in glob.glob(str(DRYRUN / "*.json")):
+        r = json.load(open(f))
+        parts = r["cell"].split("__")
+        if len(parts) != 3 or parts[2] not in ("16x16", "2x16x16"):
+            continue
+        rows.setdefault((parts[0], parts[1]), {})[parts[2]] = r["status"]
+    out = ["| arch / shape | 16x16 | 2x16x16 |", "|---|---|---|"]
+    for key in sorted(rows):
+        m = rows[key]
+        out.append(f"| {key[0]}/{key[1]} | {m.get('16x16', '—')} | "
+                   f"{m.get('2x16x16', '—')} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="final")
+    args = ap.parse_args()
+    print("### Multi-pod compile matrix\n")
+    print(compile_matrix())
+    print("\n### Roofline (single-pod, extrapolated; baseline → optimized)\n")
+    print(roofline_table(args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+artifacts in results/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from benchmarks.common import save
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+_TAG_RANK = {"final": 4, "extrap": 1, "unroll": 2, "": 0}
+
+
+def load_cells(mesh: str = "16x16", prefer_unroll: bool = True):
+    """Pick the best available record per (arch, shape): the final optimized
+    extrapolation outranks intermediate perf tags and the rolled compile."""
+    cells = {}
+    ranks = {}
+    for f in sorted(glob.glob(str(DRYRUN / "*.json"))):
+        rec = json.load(open(f))
+        cell = rec["cell"]
+        if cell.startswith("twin-") or (
+                "roofline" not in rec and rec.get("status") == "OK"):
+            continue  # twin sweep cells have their own schema
+        parts = cell.split("__")
+        if len(parts) < 3 or parts[2] != mesh:
+            continue
+        key = (parts[0], parts[1])
+        tag = parts[-1] if len(parts) > 3 else ""
+        rank = _TAG_RANK.get(tag, 3 if tag.startswith("opt") else 0)
+        if rec["status"] != "OK" and rec["status"] != "SKIP":
+            rank = -1
+        if key not in cells or rank > ranks[key]:
+            rec["_unrolled"] = tag in ("unroll", "final") or \
+                tag.startswith("opt") or tag == "extrap"
+            cells[key] = rec
+            ranks[key] = rank
+    return cells
+
+
+def run(quick: bool = False):
+    cells = load_cells()
+    rows = []
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] == "SKIP":
+            rows.append({"name": f"roofline/{arch}/{shape}", "wall_s": 0.0,
+                         "status": "SKIP", "reason": rec.get("reason", "")})
+            continue
+        if rec["status"] != "OK":
+            rows.append({"name": f"roofline/{arch}/{shape}", "wall_s": 0.0,
+                         "status": "FAIL"})
+            continue
+        rf = rec["roofline"]
+        rows.append({
+            "name": f"roofline/{arch}/{shape}", "wall_s": 0.0,
+            "status": "OK" + ("/unrolled" if rec.get("_unrolled") else ""),
+            "bottleneck": rf["bottleneck"],
+            "t_compute_ms": rf["t_compute_s"] * 1e3,
+            "t_memory_ms": rf["t_memory_s"] * 1e3,
+            "t_collective_ms": rf["t_collective_s"] * 1e3,
+            "useful_flops_ratio": rf["useful_flops_ratio"],
+            "mfu_upper_bound": min(
+                1.0, rf["model_flops"] /
+                max(rf["flops_per_device"] * rf["chips"], 1.0)) *
+            (rf["t_compute_s"] /
+             max(rf["t_compute_s"], rf["t_memory_s"],
+                 rf["t_collective_s"])),
+        })
+    save("roofline_table", {"rows": rows})
+    return rows

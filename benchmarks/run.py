@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4_pm100]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark row; JSON artifacts go
+to results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit_csv
+
+BENCHES = [
+    "table1_datasets",
+    "fig4_pm100",
+    "fig5_adastra",
+    "fig6_frontier",
+    "fig7_external",
+    "fig8_incentives",
+    "fig10_ml",
+    "engine_throughput",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced windows/job counts (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else BENCHES
+    failures = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            rows = mod.run(quick=args.quick)
+            emit_csv(rows)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            print(f"{name},0,status=FAIL;error={e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: simulate one day of a Marconi100-like system under two
+scheduling policies and compare the physical response.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import engine, stats, types as T
+from repro.datasets.loaders import load_marconi100
+from repro.systems.config import get_system
+
+
+def main():
+    system = get_system("marconi100")
+    jobs = load_marconi100(n_jobs=800, days=1.0, seed=0)
+    jobs.assign_prepop_placement(0.0, system.n_nodes)
+    table = jobs.to_table()
+
+    for policy, backfill in [("fcfs", "none"), ("fcfs", "easy")]:
+        scen = T.Scenario.make(policy, backfill)
+        final, hist = engine.simulate(system, table, scen, 0.0, 12 * 3600.0)
+        s = stats.summarize(system, table, final, hist)
+        print(f"\n--- {policy} + {backfill} backfill ---")
+        for k in ("jobs_completed", "avg_util", "avg_system_power_mw",
+                  "power_swing_mw", "avg_pue", "avg_wait_s"):
+            print(f"  {k:24s} {s[k]:,.3f}")
+
+
+if __name__ == "__main__":
+    main()

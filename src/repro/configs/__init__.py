@@ -1,0 +1,2 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, SHAPES, arch_names, cells, get_config, reduced)

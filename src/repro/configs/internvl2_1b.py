@@ -1,0 +1,5 @@
+"""Arch config: internvl2-1b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("internvl2-1b")
+SMOKE = get_config("internvl2-1b-smoke")

@@ -1,0 +1,5 @@
+"""Arch config: llama4-maverick-400b-a17b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("llama4-maverick-400b-a17b")
+SMOKE = get_config("llama4-maverick-400b-a17b-smoke")

@@ -1,0 +1,5 @@
+"""Arch config: mistral-nemo-12b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("mistral-nemo-12b")
+SMOKE = get_config("mistral-nemo-12b-smoke")

@@ -1,0 +1,5 @@
+"""Arch config: mixtral-8x7b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("mixtral-8x7b")
+SMOKE = get_config("mixtral-8x7b-smoke")

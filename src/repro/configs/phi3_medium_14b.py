@@ -1,0 +1,5 @@
+"""Arch config: phi3-medium-14b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("phi3-medium-14b")
+SMOKE = get_config("phi3-medium-14b-smoke")

@@ -1,0 +1,5 @@
+"""Arch config: qwen2.5-3b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("qwen2.5-3b")
+SMOKE = get_config("qwen2.5-3b-smoke")

@@ -1,0 +1,5 @@
+"""Arch config: rwkv6-7b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("rwkv6-7b")
+SMOKE = get_config("rwkv6-7b-smoke")

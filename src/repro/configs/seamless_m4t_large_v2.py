@@ -1,0 +1,5 @@
+"""Arch config: seamless-m4t-large-v2 (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("seamless-m4t-large-v2")
+SMOKE = get_config("seamless-m4t-large-v2-smoke")

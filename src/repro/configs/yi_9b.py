@@ -1,0 +1,5 @@
+"""Arch config: yi-9b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("yi-9b")
+SMOKE = get_config("yi-9b-smoke")

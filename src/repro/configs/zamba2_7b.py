@@ -1,0 +1,5 @@
+"""Arch config: zamba2-7b (see repro.configs.registry for exact dims)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("zamba2-7b")
+SMOKE = get_config("zamba2-7b-smoke")

@@ -1,0 +1,5 @@
+"""S-RAPS core: the paper's contribution as a composable JAX module."""
+from repro.core import types  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    simulate, simulate_sweep, init_state, engine_step, external_step)
+from repro.core.types import Scenario, JobTable, SimState  # noqa: F401

@@ -1,0 +1,74 @@
+"""Systems accounting (paper §3.2.6): per-account ledgers folded in as jobs
+complete, enabling incentive policies (paper §4.3) and fairness metrics.
+
+All folds are segment-sums over the job axis keyed by account id, so the
+whole ledger update is O(J) and fully traceable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from repro.core.incentives import fugaku_points
+from repro.systems.config import SystemConfig
+
+
+def _segsum(values: jnp.ndarray, seg: jnp.ndarray, num: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(values, seg, num_segments=num)
+
+
+def fold_completions(system: SystemConfig, table: T.JobTable,
+                     accounts: T.AccountStats, done_now: jnp.ndarray,
+                     start: jnp.ndarray, end: jnp.ndarray,
+                     jenergy: jnp.ndarray) -> T.AccountStats:
+    """Accumulate statistics of jobs that completed this step."""
+    A = accounts.energy.shape[0]
+    m = done_now.astype(jnp.float32)
+    nodes_f = table.nodes.astype(jnp.float32)
+    wall = jnp.maximum(end - start, 1.0)
+    wait = jnp.maximum(start - table.submit, 0.0)
+    turn = jnp.maximum(end - table.submit, 0.0)
+    node_hours = nodes_f * wall / 3600.0
+    # average per-node power over the job's life
+    avg_pnode = jenergy / jnp.maximum(nodes_f * wall, 1.0)
+    pts = fugaku_points(system, node_hours, avg_pnode)
+    acct = table.account
+
+    def add(cur, vals):
+        return cur + _segsum(vals * m, acct, A)
+
+    return T.AccountStats(
+        jobs_done=add(accounts.jobs_done, jnp.ones_like(m)),
+        node_hours=add(accounts.node_hours, node_hours),
+        energy=add(accounts.energy, jenergy),
+        edp=add(accounts.edp, jenergy * turn),
+        ed2p=add(accounts.ed2p, jenergy * turn * turn),
+        wait_sum=add(accounts.wait_sum, wait),
+        turnaround_sum=add(accounts.turnaround_sum, turn),
+        power_sum=add(accounts.power_sum, avg_pnode),
+        fugaku_pts=add(accounts.fugaku_pts, pts),
+    )
+
+
+# --- persistence (paper: "--accounts / --accounts-json": collect in one run,
+# redeem in the next) --------------------------------------------------------
+def to_json_dict(accounts: T.AccountStats) -> dict:
+    import numpy as np
+    return {k: np.asarray(v).tolist() for k, v in vars(accounts).items()}
+
+
+def from_json_dict(d: dict) -> T.AccountStats:
+    return T.AccountStats(**{k: jnp.asarray(v, jnp.float32) for k, v in d.items()})
+
+
+def save_json(accounts: T.AccountStats, path: str) -> None:
+    import json
+    with open(path, "w") as f:
+        json.dump(to_json_dict(accounts), f)
+
+
+def load_json(path: str) -> T.AccountStats:
+    import json
+    with open(path) as f:
+        return from_json_dict(json.load(f))

@@ -1,0 +1,257 @@
+"""The S-RAPS simulation engine (paper §3.2.3), as a single ``lax.scan``.
+
+Main loop per step (paper's four well-defined steps):
+  (1) prepare     -- clear completed jobs, free their nodes, fold accounting;
+  (2) arrivals    -- move submitted jobs into the queue;
+  (3) schedule    -- policy sort + bounded admission (repro.core.scheduler);
+  (4) tick        -- power model -> conversion losses -> cooling ODE ->
+                     telemetry row; advance time.
+
+The engine is pure: ``simulate`` compiles once per (system, job-table shape)
+and a *batch of scenarios* (policy x backfill x incentive weights) runs under
+``vmap`` — see ``simulate_sweep``. On multi-host/TPU deployments the scenario
+axis is sharded (see repro.launch.simulate / EXPERIMENTS.md).
+
+``external_step`` supports the paper's §4.2 plugin mode: an event-based
+external scheduler decides placements between compiled steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cooling import model as cooling
+from repro.core import accounts as acct_mod
+from repro.core import resource_manager as rm
+from repro.core import scheduler as sched
+from repro.core import types as T
+from repro.power import losses as plosses
+from repro.power import model as pmodel
+from repro.kernels.power_topo import ops as topo_ops
+from repro.systems.config import SystemConfig
+
+
+# ---------------------------------------------------------------------------
+# Initialization (paper §3.2.1 / §3.2.3 prepopulation + dismissal).
+# ---------------------------------------------------------------------------
+def init_state(system: SystemConfig, table: T.JobTable, t0: float,
+               t1: float, accounts: T.AccountStats | None = None,
+               num_accounts: int = 64) -> T.SimState:
+    J = table.num_jobs
+    rec_end = table.rec_start + table.wall
+    jstate = jnp.full((J,), T.PENDING, jnp.int32)
+
+    # dismiss jobs entirely outside the window (paper Fig. 3 discussion)
+    dismissed = (~table.valid) | (rec_end <= t0) | (table.submit >= t1)
+    jstate = jnp.where(dismissed, T.DISMISSED, jstate)
+
+    # prepopulate jobs running at t0 per the telemetry
+    running0 = (~dismissed) & (table.rec_start <= t0) & (rec_end > t0) & \
+               (table.first_node >= 0)
+    jstate = jnp.where(running0, T.RUNNING, jstate)
+
+    # jobs already submitted but not yet started at t0 join the queue
+    queued0 = (~dismissed) & (~running0) & (table.submit <= t0)
+    jstate = jnp.where(queued0, T.QUEUED, jstate)
+
+    start = jnp.where(running0, table.rec_start, jnp.inf)
+    end = jnp.where(running0, rec_end, jnp.inf)
+    node_job = rm.prepopulate(system.n_nodes, table.first_node, table.nodes,
+                              running0)
+    free_count = jnp.sum((node_job < 0).astype(jnp.int32))
+    if accounts is None:
+        accounts = T.AccountStats.zeros(num_accounts)
+    return T.SimState(
+        t=jnp.float32(t0), jstate=jstate, start=start, end=end,
+        jenergy=jnp.zeros((J,), jnp.float32), node_job=node_job,
+        free_count=free_count, accounts=accounts,
+        cooling=cooling.init_state(system.cooling),
+        energy_total=jnp.float32(0.0), energy_it=jnp.float32(0.0),
+        energy_loss=jnp.float32(0.0), completed=jnp.float32(0.0))
+
+
+# ---------------------------------------------------------------------------
+# Engine phases.
+# ---------------------------------------------------------------------------
+def _prepare_and_arrivals(system: SystemConfig, table: T.JobTable,
+                          st: T.SimState) -> T.SimState:
+    """Phases (1)+(2): completions, node release, accounting, arrivals."""
+    t = st.t
+    done_now = (st.jstate == T.RUNNING) & (t >= st.end)
+    node_job = rm.release_done(st.node_job, done_now)
+    freed = jnp.sum(jnp.where(done_now, table.nodes, 0))
+    jstate = jnp.where(done_now, T.DONE, st.jstate)
+    accounts = acct_mod.fold_completions(system, table, st.accounts, done_now,
+                                         st.start, st.end, st.jenergy)
+    jstate = jnp.where((jstate == T.PENDING) & (table.submit <= t),
+                       T.QUEUED, jstate)
+    return T.SimState(t=t, jstate=jstate, start=st.start, end=st.end,
+                      jenergy=st.jenergy, node_job=node_job,
+                      free_count=st.free_count + freed, accounts=accounts,
+                      cooling=st.cooling, energy_total=st.energy_total,
+                      energy_it=st.energy_it, energy_loss=st.energy_loss,
+                      completed=st.completed + jnp.sum(done_now))
+
+
+def _tick(system: SystemConfig, table: T.JobTable,
+          st: T.SimState) -> Tuple[T.SimState, T.StepRecord]:
+    """Phase (4): physics + accounting + telemetry; advances time."""
+    dt = system.dt
+    t = st.t
+    job_pw = pmodel.job_node_power(table, st.jstate, st.start, t,
+                                   system.prof_dt)
+    node_pw = pmodel.node_power(system, table, st.node_job, job_pw)
+    p_it = pmodel.system_it_power(node_pw)
+    group_heat = topo_ops.group_power(node_pw, system.cooling.n_groups)
+    n_racks = max(system.n_nodes // system.power.nodes_per_rack, 1)
+    p_in, p_loss = plosses.conversion(system.power, p_it, float(n_racks))
+    cool_state, p_cool, t_tower_ret = cooling.step(system.cooling, st.cooling,
+                                                   group_heat, dt)
+    p_total = p_in + p_cool
+    pue = cooling.pue(p_it, p_loss, p_cool)
+
+    running = st.jstate == T.RUNNING
+    jenergy = st.jenergy + jnp.where(
+        running, job_pw * table.nodes.astype(jnp.float32) * dt, 0.0)
+
+    busy = jnp.float32(system.n_nodes) - st.free_count.astype(jnp.float32)
+    rec = T.StepRecord(
+        t=t, power_it=p_it, power_loss=p_loss, power_cooling=p_cool,
+        power_total=p_total, pue=pue, t_tower_return=t_tower_ret,
+        util=busy / system.n_nodes,
+        n_queued=jnp.sum(st.jstate == T.QUEUED).astype(jnp.float32),
+        n_running=jnp.sum(running).astype(jnp.float32))
+
+    new = T.SimState(
+        t=t + dt, jstate=st.jstate, start=st.start, end=st.end,
+        jenergy=jenergy, node_job=st.node_job, free_count=st.free_count,
+        accounts=st.accounts, cooling=cool_state,
+        energy_total=st.energy_total + p_total * dt,
+        energy_it=st.energy_it + p_it * dt,
+        energy_loss=st.energy_loss + p_loss * dt,
+        completed=st.completed)
+    return new, rec
+
+
+def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
+                scen: T.Scenario) -> Tuple[T.SimState, T.StepRecord]:
+    st = _prepare_and_arrivals(system, table, st)
+    st = sched.schedule_step(system, table, st, scen)
+    return _tick(system, table, st)
+
+
+# ---------------------------------------------------------------------------
+# Plugin mode for external event-based schedulers (paper §4.2).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(0,))
+def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
+                  place_ids: jnp.ndarray) -> Tuple[T.SimState, T.StepRecord]:
+    """One engine step where placement decisions come from outside.
+
+    ``place_ids``: i32[K] job ids the external scheduler wants started now
+    (padded with -1). S-RAPS "interprets the information returned from the
+    scheduler ... and triggers the resource manager" (paper §3.2.4).
+    """
+    st = _prepare_and_arrivals(system, table, st)
+
+    def body(i, carry):
+        node_job, jstate, start, end, free_count = carry
+        j = place_ids[i]
+        ok = j >= 0
+        jj = jnp.maximum(j, 0)
+        need = table.nodes[jj]
+        can = ok & (jstate[jj] == T.QUEUED) & (need <= free_count)
+        sel = rm.firstfree_mask(node_job, need)
+        node_job = rm.place(node_job, sel, jj, can)
+        free_count = free_count - jnp.where(can, need, 0)
+        jstate = jstate.at[jj].set(jnp.where(can, T.RUNNING, jstate[jj]))
+        start = start.at[jj].set(jnp.where(can, st.t, start[jj]))
+        end = end.at[jj].set(jnp.where(can, st.t + table.wall[jj], end[jj]))
+        return node_job, jstate, start, end, free_count
+
+    carry = (st.node_job, st.jstate, st.start, st.end, st.free_count)
+    node_job, jstate, start, end, free_count = jax.lax.fori_loop(
+        0, place_ids.shape[0], body, carry)
+    st = T.SimState(t=st.t, jstate=jstate, start=start, end=end,
+                    jenergy=st.jenergy, node_job=node_job,
+                    free_count=free_count, accounts=st.accounts,
+                    cooling=st.cooling, energy_total=st.energy_total,
+                    energy_it=st.energy_it, energy_loss=st.energy_loss,
+                    completed=st.completed)
+    return _tick(system, table, st)
+
+
+# ---------------------------------------------------------------------------
+# Full simulation.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _simulate_jit(system: SystemConfig, table: T.JobTable, st0: T.SimState,
+                  scen: T.Scenario, n_steps: int):
+    def body(st, _):
+        return engine_step(system, table, st, scen)
+    return jax.lax.scan(body, st0, None, length=n_steps)
+
+
+def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
+             t0: float, t1: float,
+             accounts: T.AccountStats | None = None,
+             num_accounts: int = 64) -> Tuple[T.SimState, T.StepRecord]:
+    """Run the twin from t0 to t1. Returns (final_state, history)."""
+    n_steps = int(round((t1 - t0) / system.dt))
+    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    return _simulate_jit(system, table, st0, scen, n_steps)
+
+
+_STATIC_CACHE: dict = {}
+
+
+def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
+                    backfill: str, t0: float, t1: float,
+                    accounts: T.AccountStats | None = None,
+                    num_accounts: int = 64):
+    """Single-scenario fast path: policy/backfill are *compile-time*
+    constants, so only the selected priority key is computed, non-EASY runs
+    skip the reservation machinery entirely, and all policy selects fold
+    away (EXPERIMENTS.md §Perf-twin iter T1)."""
+    n_steps = int(round((t1 - t0) / system.dt))
+    scen = T.Scenario(T.POLICY_NAMES[policy], T.BACKFILL_NAMES[backfill],
+                      1.0)  # raw Python values -> static in the closure
+    key = (system, policy, backfill, n_steps, table.num_jobs,
+           table.prof_len, num_accounts)
+    fn = _STATIC_CACHE.get(key)
+    if fn is None:
+        def run(table_, st0_):
+            def body(st, _):
+                return engine_step(system, table_, st, scen)
+            return jax.lax.scan(body, st0_, None, length=n_steps)
+        fn = jax.jit(run)
+        _STATIC_CACHE[key] = fn
+    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    return fn(table, st0)
+
+
+def simulate_sweep(system: SystemConfig, table: T.JobTable,
+                   scens: list[T.Scenario], t0: float, t1: float,
+                   accounts: T.AccountStats | None = None,
+                   num_accounts: int = 64) -> Tuple[T.SimState, T.StepRecord]:
+    """Vectorized what-if sweep: one compiled program, S scenarios.
+
+    The job table and initial state are shared (broadcast); only the
+    Scenario leaves carry a batch axis.
+    """
+    n_steps = int(round((t1 - t0) / system.dt))
+    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    batched = T.stack_scenarios(scens)
+
+    @functools.partial(jax.jit, static_argnums=(0, 4))
+    def run(sys_, table_, st0_, scen_, n_steps_):
+        def one(scen1):
+            def body(st, _):
+                return engine_step(sys_, table_, st, scen1)
+            return jax.lax.scan(body, st0_, None, length=n_steps_)
+        return jax.vmap(one)(scen_)
+
+    return run(system, table, st0, batched, n_steps)

@@ -1,0 +1,29 @@
+"""Incentive structures (paper §4.3), after Solorzano et al. [37]:
+accounts *collect* points for power-efficient behavior and *redeem* them as
+scheduling priority.
+
+Fugaku points reward low average per-node power relative to a system
+reference: an account running ``node_hours`` at average per-node power
+``avg_pnode`` earns
+
+    pts = node_hours * max(0, (P_ref - avg_pnode) / P_ref)
+
+so frugal jobs earn up to their full node-hours in points while jobs at or
+above the reference earn nothing. The redeeming phase is a scheduler policy
+(``acct_fugaku_pts``) that sorts the queue by accumulated points (descending);
+the other account policies (``acct_avg_power``, ``acct_low_avg_power``,
+``acct_edp``, ``acct_ed2p``) are defined analogously — see
+``repro.core.scheduler.policy_key``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.systems.config import SystemConfig
+
+
+def fugaku_points(system: SystemConfig, node_hours: jnp.ndarray,
+                  avg_pnode_w: jnp.ndarray) -> jnp.ndarray:
+    p_ref = system.power.ref_node_w
+    frac = (p_ref - avg_pnode_w) / p_ref
+    return node_hours * jnp.clip(frac, 0.0, 1.0)

@@ -1,0 +1,204 @@
+"""Built-in scheduler: policy priority keys + bounded admission loop with
+no-backfill / first-fit / EASY semantics (paper §3.2.4-§3.2.5).
+
+Design notes
+------------
+* The policy and the backfill mode are **traced integers** (fields of
+  ``Scenario``), so an entire sweep of scheduling configurations runs as one
+  vmapped program — this is the TPU-native form of the paper's what-if studies.
+* The admission loop is a ``lax.fori_loop`` over the first ``sched_budget``
+  entries of the key-sorted queue: bounded work per cycle, like a production
+  scheduler's main loop.
+* EASY (Mu'alem & Feitelson): when the queue head cannot start, it receives a
+  reservation at the *shadow time* (earliest time enough nodes free up, from
+  the running jobs' end times); later jobs may backfill iff they fit now and
+  either (a) finish before the shadow time (by their *requested* limit) or
+  (b) use no more than the ``extra`` nodes spare at the shadow time.
+* Shadow times use the running set at the top of the scheduling pass; jobs
+  placed earlier in the same pass consume ``free_count`` but are not added to
+  the release profile (they end after ``t + their wall``, which can only make
+  the true shadow later — so our backfill test is conservative in case (a)
+  and standard in case (b)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import resource_manager as rm
+from repro.core import types as T
+from repro.systems.config import SystemConfig
+
+
+# ---------------------------------------------------------------------------
+# Priority keys (smaller key = scheduled earlier).
+# ---------------------------------------------------------------------------
+def policy_key(table: T.JobTable, accounts: T.AccountStats,
+               scen: T.Scenario) -> jnp.ndarray:
+    """f32[J] primary sort key for the selected policy.
+
+    When ``scen.policy`` is a *Python int* (static-scenario fast path,
+    EXPERIMENTS.md §Perf-twin) only the selected key is computed; traced
+    policies compute the full stack and select (vmappable sweeps).
+    """
+    acct = table.account
+
+    def avg_pw():
+        return accounts.power_sum[acct] / jnp.maximum(
+            accounts.jobs_done[acct], 1.0)
+
+    builders = [
+        lambda: table.rec_start,            # REPLAY: recorded order
+        lambda: table.submit,               # FCFS
+        lambda: table.limit,                # SJF
+        lambda: -table.nodes.astype(jnp.float32),   # LJF
+        lambda: -table.priority,            # PRIORITY (higher first)
+        lambda: -avg_pw(),                  # ACCT_AVG_POWER (descending)
+        avg_pw,                             # ACCT_LOW_AVG_POWER (ascending)
+        lambda: accounts.edp[acct],         # ACCT_EDP (lower first)
+        lambda: accounts.ed2p[acct],        # ACCT_ED2P
+        lambda: -accounts.fugaku_pts[acct],  # ACCT_FUGAKU_PTS
+        lambda: -table.score,               # ML score (higher is better)
+    ]
+    if isinstance(scen.policy, int):        # static fast path
+        k = builders[scen.policy]()
+        if T.POLICY_ACCT_AVG_POWER <= scen.policy <= T.POLICY_ACCT_FUGAKU_PTS:
+            k = k * scen.acct_weight
+        return k
+    keys = jnp.stack([b() for b in builders])
+    k = jnp.take(keys, scen.policy, axis=0)
+    # account-derived keys mix with the scenario weight (lets a sweep soften
+    # the incentive signal); neutral for the base policies.
+    is_acct = (scen.policy >= T.POLICY_ACCT_AVG_POWER) & \
+              (scen.policy <= T.POLICY_ACCT_FUGAKU_PTS)
+    return jnp.where(is_acct, k * scen.acct_weight, k)
+
+
+def queue_order(table: T.JobTable, st: T.SimState, accounts: T.AccountStats,
+                scen: T.Scenario) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sorted queue: eligible jobs first by (key, submit). Returns
+    (order i32[J], eligible bool[J])."""
+    queued = st.jstate == T.QUEUED
+    replay_gate = jnp.where(scen.policy == T.POLICY_REPLAY,
+                            table.rec_start <= st.t, True)
+    elig = queued & replay_gate & table.valid
+    key = jnp.where(elig, policy_key(table, accounts, scen), jnp.inf)
+    tie = jnp.where(elig, table.submit, jnp.inf)
+    order = jnp.lexsort((tie, key))  # primary: key, secondary: submit
+    return order.astype(jnp.int32), elig
+
+
+# ---------------------------------------------------------------------------
+# EASY shadow-time machinery.
+# ---------------------------------------------------------------------------
+def release_profile(table: T.JobTable, st: T.SimState):
+    """Sorted *estimated* end times of running jobs and cumulative nodes they
+    release. Faithful EASY uses the user-requested limit, not the (unknown)
+    true runtime: est_end = start + limit.
+
+    Returns (end_sorted f32[J], cum_nodes i32[J]).
+    """
+    running = st.jstate == T.RUNNING
+    est_end = jnp.where(running, st.start + table.limit, jnp.inf)
+    order = jnp.argsort(est_end)
+    nodes_released = jnp.where(running, table.nodes, 0)[order]
+    return est_end[order], jnp.cumsum(nodes_released)
+
+
+def shadow_for(end_sorted: jnp.ndarray, cum_nodes: jnp.ndarray,
+               free_now: jnp.ndarray, need: jnp.ndarray):
+    """Earliest time ``need`` nodes are simultaneously free, and the surplus
+    ("extra") nodes available at that time."""
+    deficit = jnp.maximum(need - free_now, 0)
+    k = jnp.searchsorted(cum_nodes, deficit, side="left")
+    k = jnp.clip(k, 0, cum_nodes.shape[0] - 1)
+    shadow_t = jnp.where(deficit == 0, jnp.float32(0.0), end_sorted[k])
+    extra = free_now + cum_nodes[k] - need
+    return shadow_t, jnp.maximum(extra, 0)
+
+
+# ---------------------------------------------------------------------------
+# The scheduling pass.
+# ---------------------------------------------------------------------------
+def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
+                  scen: T.Scenario) -> T.SimState:
+    """One call of ``schedule`` (paper Algorithm step 3): reorder the queue by
+    the selected policy and admit jobs under the selected backfill rule."""
+    order, _elig = queue_order(table, st, st.accounts, scen)
+    static = isinstance(scen.backfill, int)
+    if static and scen.backfill != T.BF_EASY:
+        # static fast path: no reservation machinery needed
+        end_sorted = jnp.zeros((1,), jnp.float32)
+        cum_nodes = jnp.zeros((1,), jnp.int32)
+    else:
+        end_sorted, cum_nodes = release_profile(table, st)
+    n_nodes = system.n_nodes
+    t = st.t
+    is_replay = scen.policy == T.POLICY_REPLAY
+
+    def body(i, carry):
+        (node_job, jstate, start, end, free_count,
+         blocked_any, head_blocked, shadow_t, shadow_extra) = carry
+        j = order[i]
+        valid = jstate[j] == T.QUEUED
+        # replay eligibility re-gate (queue_order already filtered, but jobs
+        # whose recorded start is still in the future must keep waiting)
+        valid &= jnp.where(is_replay, table.rec_start[j] <= t, True)
+        need = table.nodes[j]
+
+        # --- does it fit right now? ---
+        # Placement is deterministic first-free (lowest-index free nodes);
+        # the dataset generators use the same rule, so replay reproduces the
+        # recorded occupancy without storing per-node assignments.
+        sel = rm.firstfree_mask(node_job, need)
+        fits = need <= free_count
+
+        # --- EASY reservation for the first blocked (head) job ---
+        first_block = valid & ~fits & ~head_blocked
+        sh_t, sh_extra = shadow_for(end_sorted, cum_nodes, free_count, need)
+        shadow_t = jnp.where(first_block, sh_t, shadow_t)
+        shadow_extra = jnp.where(first_block, sh_extra, shadow_extra)
+
+        # --- admission rule ---
+        easy_ok = (t + table.limit[j] <= shadow_t) | (need <= shadow_extra)
+        if static:
+            can_bf = {T.BF_NONE: ~blocked_any,
+                      T.BF_FIRSTFIT: jnp.bool_(True),
+                      T.BF_EASY: jnp.where(head_blocked, easy_ok, True),
+                      }[scen.backfill]
+        else:
+            can_bf = jnp.select(
+                [scen.backfill == T.BF_NONE,
+                 scen.backfill == T.BF_FIRSTFIT],
+                [~blocked_any,
+                 jnp.bool_(True)],
+                jnp.where(head_blocked, easy_ok, True),  # BF_EASY
+            )
+        # replay ignores backfill logic: recorded schedule is ground truth
+        place = valid & fits & jnp.where(is_replay, True, can_bf)
+
+        # --- commit ---
+        node_job = rm.place(node_job, sel, j, place)
+        free_count = free_count - jnp.where(place, need, 0)
+        jstate = jstate.at[j].set(jnp.where(place, T.RUNNING, jstate[j]))
+        start = start.at[j].set(jnp.where(place, t, start[j]))
+        end = end.at[j].set(jnp.where(place, t + table.wall[j], end[j]))
+
+        blocked_any |= valid & ~fits
+        head_blocked |= valid & ~fits
+        return (node_job, jstate, start, end, free_count,
+                blocked_any, head_blocked, shadow_t, shadow_extra)
+
+    carry = (st.node_job, st.jstate, st.start, st.end, st.free_count,
+             jnp.bool_(False), jnp.bool_(False), jnp.float32(jnp.inf),
+             jnp.int32(0))
+    K = min(system.sched_budget, table.num_jobs)
+    (node_job, jstate, start, end, free_count, *_rest) = jax.lax.fori_loop(
+        0, K, body, carry)
+
+    return T.SimState(t=st.t, jstate=jstate, start=start, end=end,
+                      jenergy=st.jenergy, node_job=node_job,
+                      free_count=free_count, accounts=st.accounts,
+                      cooling=st.cooling, energy_total=st.energy_total,
+                      energy_it=st.energy_it, energy_loss=st.energy_loss,
+                      completed=st.completed)

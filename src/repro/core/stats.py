@@ -1,0 +1,85 @@
+"""Run-level statistics (paper §3.2.6): scheduler metrics, fairness /
+packing-efficiency metrics (AWRT, priority-weighted specific response time
+after Goponenko et al. [21]), job-size histogram, and energy summaries.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import types as T
+from repro.systems.config import SystemConfig
+
+# job-size classes by node count (paper: "histogram of job size scheduled
+# (small, medium, large, by node count)")
+SIZE_EDGES = (1, 8, 128)  # small <8, medium <128, large >=128
+
+
+def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
+              hist: T.StepRecord) -> Dict[str, float]:
+    done = np.asarray(final.jstate == T.DONE)
+    start = np.asarray(final.start)
+    end = np.asarray(final.end)
+    submit = np.asarray(table.submit)
+    nodes = np.asarray(table.nodes).astype(np.float64)
+    prio = np.asarray(table.priority).astype(np.float64)
+    jenergy = np.asarray(final.jenergy).astype(np.float64)
+
+    done = done & np.isfinite(start) & np.isfinite(end)
+    startz = np.where(done, start, 0.0)
+    endz = np.where(done, end, 0.0)
+    wall = np.where(done, endz - startz, 0.0)
+    wait = np.where(done, np.maximum(startz - submit, 0.0), 0.0)
+    turn = np.where(done, np.maximum(endz - submit, 0.0), 0.0)
+    nh = nodes * wall / 3600.0
+    n_done = max(int(done.sum()), 1)
+
+    area = nh.sum() or 1.0
+    awrt = float((turn * nh).sum() / area)
+    pw = prio * nh
+    psrt = float((turn * pw).sum() / (pw.sum() or 1.0))
+
+    edp = float((jenergy * turn)[done].sum())
+    ed2p = float((jenergy * turn * turn)[done].sum())
+
+    sizes = nodes[done]
+    hist_small = int((sizes < SIZE_EDGES[1]).sum())
+    hist_medium = int(((sizes >= SIZE_EDGES[1]) & (sizes < SIZE_EDGES[2])).sum())
+    hist_large = int((sizes >= SIZE_EDGES[2]).sum())
+
+    p = np.asarray(hist.power_total, np.float64)
+    it = np.asarray(hist.power_it, np.float64)
+    sim_seconds = float(p.shape[-1] * system.dt)
+    return {
+        "jobs_completed": float(done.sum()),
+        "throughput_per_hour": float(done.sum()) / (sim_seconds / 3600.0),
+        "avg_wait_s": float(wait[done].mean()) if done.any() else 0.0,
+        "avg_turnaround_s": float(turn[done].mean()) if done.any() else 0.0,
+        "awrt_s": awrt,
+        "psrt_s": psrt,
+        "avg_job_nodes": float(sizes.mean()) if done.any() else 0.0,
+        "avg_job_energy_j": float(jenergy[done].mean()) if done.any() else 0.0,
+        "avg_job_power_w": float((jenergy[done] / np.maximum(wall[done], 1.0)).mean()) if done.any() else 0.0,
+        "edp": edp / max(n_done, 1),
+        "ed2p": ed2p / max(n_done, 1),
+        "hist_small": hist_small,
+        "hist_medium": hist_medium,
+        "hist_large": hist_large,
+        "avg_system_power_mw": float(p.mean() / 1e6),
+        "avg_it_power_mw": float(it.mean() / 1e6),
+        "avg_util": float(np.asarray(hist.util, np.float64).mean()),
+        "max_power_mw": float(p.max() / 1e6),
+        "power_swing_mw": float((p.max() - p.min()) / 1e6),
+        "avg_pue": float(np.asarray(hist.pue, np.float64).mean()),
+        "total_energy_mwh": float(np.asarray(final.energy_total) / 3.6e9),
+        "loss_energy_mwh": float(np.asarray(final.energy_loss) / 3.6e9),
+        "power_efficiency": float(np.asarray(final.energy_it) /
+                                  max(float(np.asarray(final.energy_total)), 1.0)),
+        "carbon_kg_est": float(np.asarray(final.energy_total) / 3.6e9 * 370.0),
+    }
+
+
+def format_stats(stats: Dict[str, float]) -> str:
+    return "\n".join(f"{k:>24s} : {v:,.3f}" for k, v in stats.items())

@@ -1,0 +1,195 @@
+"""Pytree state containers for the S-RAPS digital-twin engine.
+
+Everything the simulation touches is a fixed-shape JAX array so the whole
+forward-time loop compiles to a single ``lax.scan`` and batches of what-if
+scenarios run under ``vmap`` / ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Job lifecycle states (values matter: they are stored in int32 arrays).
+# ---------------------------------------------------------------------------
+PENDING = 0     # known to the dataloader, not yet submitted (sim time < submit)
+QUEUED = 1      # submitted, waiting for placement
+RUNNING = 2     # placed on nodes
+DONE = 3        # completed
+DISMISSED = 4   # outside the simulation window (paper §3.2.2)
+
+# Scheduling policies (paper §3.2.5 + §4.3 + §4.4). Traced integers so a
+# vmapped scenario batch can sweep policies.
+POLICY_REPLAY = 0
+POLICY_FCFS = 1
+POLICY_SJF = 2
+POLICY_LJF = 3
+POLICY_PRIORITY = 4
+POLICY_ACCT_AVG_POWER = 5       # descending average account power
+POLICY_ACCT_LOW_AVG_POWER = 6   # ascending average account power
+POLICY_ACCT_EDP = 7             # ascending accumulated EDP
+POLICY_ACCT_ED2P = 8            # ascending accumulated ED^2P
+POLICY_ACCT_FUGAKU_PTS = 9      # descending Fugaku points (Solorzano et al.)
+POLICY_ML = 10                  # ML-guided score S(X_i) (paper §4.4)
+
+POLICY_NAMES = {
+    "replay": POLICY_REPLAY,
+    "fcfs": POLICY_FCFS,
+    "sjf": POLICY_SJF,
+    "ljf": POLICY_LJF,
+    "priority": POLICY_PRIORITY,
+    "acct_avg_power": POLICY_ACCT_AVG_POWER,
+    "acct_low_avg_power": POLICY_ACCT_LOW_AVG_POWER,
+    "acct_edp": POLICY_ACCT_EDP,
+    "acct_ed2p": POLICY_ACCT_ED2P,
+    "acct_fugaku_pts": POLICY_ACCT_FUGAKU_PTS,
+    "ml": POLICY_ML,
+}
+
+# Backfill modes (paper §3.2.5).
+BF_NONE = 0       # strict in-order admission: first blocked job stalls the queue
+BF_FIRSTFIT = 1   # skip blocked jobs, keep admitting anything that fits
+BF_EASY = 2       # EASY: reservation for the head job, conservative backfill
+
+BACKFILL_NAMES = {"none": BF_NONE, "first-fit": BF_FIRSTFIT, "firstfit": BF_FIRSTFIT,
+                  "easy": BF_EASY}
+
+INF = jnp.float32(jnp.inf)
+
+
+def _register(cls):
+    """Register a dataclass as a pytree (all fields are children)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# Static job table (inputs to the simulation; never mutated by the engine).
+# ---------------------------------------------------------------------------
+@_register
+@dataclass
+class JobTable:
+    """Fixed-size (padded) job table. Shapes: [J] unless noted.
+
+    Times are absolute seconds (float32) relative to the dataset origin.
+    ``power_prof``/``util_prof`` are per-node traces sampled at
+    ``SystemConfig.prof_dt``; scalar-only datasets (Fugaku, Lassen, Adastra)
+    use P == 1. Missing samples are handled with last-observation-carried-
+    forward by clamping the profile index (paper §3.2.2).
+    """
+    submit: jnp.ndarray        # f32[J] submit time
+    limit: jnp.ndarray         # f32[J] requested walltime (s)
+    wall: jnp.ndarray          # f32[J] actual runtime (s) -- ground truth
+    nodes: jnp.ndarray         # i32[J] requested node count
+    priority: jnp.ndarray      # f32[J] dataset-provided priority (higher = better)
+    account: jnp.ndarray       # i32[J] issuing account id
+    rec_start: jnp.ndarray     # f32[J] recorded start time (replay mode)
+    first_node: jnp.ndarray    # i32[J] recorded first node of contiguous placement
+    score: jnp.ndarray         # f32[J] ML / external score (higher = better)
+    power_prof: jnp.ndarray    # f32[J, P] per-node power trace (W)
+    util_prof: jnp.ndarray     # f32[J, P] utilization trace in [0, 1]
+    valid: jnp.ndarray         # bool[J] padding mask
+
+    @property
+    def num_jobs(self) -> int:
+        return self.submit.shape[0]
+
+    @property
+    def prof_len(self) -> int:
+        return self.power_prof.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Ledgers updated by the engine.
+# ---------------------------------------------------------------------------
+@_register
+@dataclass
+class AccountStats:
+    """Per-account accumulators (paper §3.2.6 + §4.3). Shapes: [A]."""
+    jobs_done: jnp.ndarray     # f32[A]
+    node_hours: jnp.ndarray    # f32[A]
+    energy: jnp.ndarray        # f32[A] Joules
+    edp: jnp.ndarray           # f32[A] sum of E_job * turnaround
+    ed2p: jnp.ndarray          # f32[A] sum of E_job * turnaround^2
+    wait_sum: jnp.ndarray      # f32[A]
+    turnaround_sum: jnp.ndarray  # f32[A]
+    power_sum: jnp.ndarray     # f32[A] sum over jobs of avg per-node power
+    fugaku_pts: jnp.ndarray    # f32[A]
+
+    @staticmethod
+    def zeros(num_accounts: int) -> "AccountStats":
+        z = jnp.zeros((num_accounts,), jnp.float32)
+        return AccountStats(*(z for _ in range(9)))
+
+
+@_register
+@dataclass
+class CoolingState:
+    """Lumped-parameter thermo-fluid state (see repro.cooling.model)."""
+    t_supply: jnp.ndarray   # f32[G] CDU supply water temperature (C)
+    t_return: jnp.ndarray   # f32[G] CDU return water temperature (C)
+    t_tower: jnp.ndarray    # f32[]  cooling-tower basin / return temperature (C)
+
+
+@_register
+@dataclass
+class SimState:
+    """Full engine state threaded through ``lax.scan``."""
+    t: jnp.ndarray          # f32[] current simulation time (s)
+    jstate: jnp.ndarray     # i32[J] job lifecycle state
+    start: jnp.ndarray      # f32[J] realized start time (or +inf)
+    end: jnp.ndarray        # f32[J] realized end time (or +inf)
+    jenergy: jnp.ndarray    # f32[J] accumulated job energy (J)
+    node_job: jnp.ndarray   # i32[N] job id occupying each node, -1 when free
+    free_count: jnp.ndarray  # i32[] number of free nodes
+    accounts: AccountStats
+    cooling: CoolingState
+    # global accumulators
+    energy_total: jnp.ndarray   # f32[] integral of facility input power
+    energy_it: jnp.ndarray      # f32[] integral of IT power
+    energy_loss: jnp.ndarray    # f32[] integral of conversion losses
+    completed: jnp.ndarray      # f32[] jobs completed inside the window
+
+
+@_register
+@dataclass
+class StepRecord:
+    """One telemetry row per engine step (the ``ys`` of the scan)."""
+    t: jnp.ndarray            # f32[]
+    power_it: jnp.ndarray     # f32[] IT power (W)
+    power_loss: jnp.ndarray   # f32[] rectifier+sivoc losses (W)
+    power_cooling: jnp.ndarray  # f32[] cooling (tower fan + pumps) power (W)
+    power_total: jnp.ndarray  # f32[] facility input power (W)
+    pue: jnp.ndarray          # f32[]
+    t_tower_return: jnp.ndarray  # f32[] water temp arriving at cooling towers
+    util: jnp.ndarray         # f32[] busy nodes / total nodes
+    n_queued: jnp.ndarray     # f32[]
+    n_running: jnp.ndarray    # f32[]
+
+
+# ---------------------------------------------------------------------------
+# Per-run scenario parameters (traced; sweep them with vmap).
+# ---------------------------------------------------------------------------
+@_register
+@dataclass
+class Scenario:
+    policy: jnp.ndarray       # i32[] POLICY_*
+    backfill: jnp.ndarray     # i32[] BF_*
+    # weight applied to the account-derived key when mixing with base priority
+    acct_weight: jnp.ndarray  # f32[]
+
+    @staticmethod
+    def make(policy: str | int, backfill: str | int = "none",
+             acct_weight: float = 1.0) -> "Scenario":
+        p = POLICY_NAMES[policy] if isinstance(policy, str) else policy
+        b = BACKFILL_NAMES[backfill] if isinstance(backfill, str) else backfill
+        return Scenario(jnp.int32(p), jnp.int32(b), jnp.float32(acct_weight))
+
+
+def stack_scenarios(scens: list) -> "Scenario":
+    """Stack a list of Scenario leaves for vmapped sweeps."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scens)

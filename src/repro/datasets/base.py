@@ -1,0 +1,127 @@
+"""Host-side job-set schema shared by all dataloaders (paper §3.2.2).
+
+Every dataloader produces a ``JobSet`` (numpy struct-of-arrays) holding, per
+job: submit/start/end times, requested walltime, node count, account,
+priority, and a per-node power/utilization profile (time series for trace
+datasets, single scalar for summary datasets). ``to_table`` pads and packs it
+into the fixed-shape ``JobTable`` consumed by the compiled engine.
+
+This mirrors the standard workload format (SWF) fields the paper points to
+[13], plus the power/trace channels a DCDT needs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import types as T
+
+
+@dataclass
+class JobSet:
+    submit: np.ndarray       # f64[J] seconds
+    limit: np.ndarray        # f64[J] requested walltime
+    wall: np.ndarray         # f64[J] true runtime
+    nodes: np.ndarray        # i64[J]
+    priority: np.ndarray     # f64[J]
+    account: np.ndarray      # i64[J]
+    rec_start: np.ndarray    # f64[J] recorded start times
+    power_prof: np.ndarray   # f32[J, P] per-node power (W)
+    util_prof: np.ndarray    # f32[J, P] in [0,1]
+    first_node: np.ndarray | None = None  # i32[J], -1 unknown
+    score: np.ndarray | None = None       # f32[J]
+    name: str = "jobset"
+
+    def __len__(self) -> int:
+        return int(self.submit.shape[0])
+
+    @property
+    def rec_end(self) -> np.ndarray:
+        return self.rec_start + self.wall
+
+    def window(self, t0: float, t1: float) -> "JobSet":
+        """Keep jobs overlapping [t0, t1) (engine handles edge flags)."""
+        keep = (self.rec_end > t0) & (self.submit < t1)
+        return self.select(keep)
+
+    def select(self, mask: np.ndarray) -> "JobSet":
+        def pick(x):
+            return None if x is None else x[mask]
+        return JobSet(self.submit[mask], self.limit[mask], self.wall[mask],
+                      self.nodes[mask], self.priority[mask],
+                      self.account[mask], self.rec_start[mask],
+                      self.power_prof[mask], self.util_prof[mask],
+                      pick(self.first_node), pick(self.score), self.name)
+
+    def assign_prepop_placement(self, t0: float, n_nodes: int) -> None:
+        """Give contiguous spans to jobs running at t0 (prepopulation)."""
+        first = np.full(len(self), -1, np.int64)
+        running0 = (self.rec_start <= t0) & (self.rec_end > t0)
+        cursor = 0
+        for j in np.nonzero(running0)[0]:
+            need = int(self.nodes[j])
+            if cursor + need <= n_nodes:
+                first[j] = cursor
+                cursor += need
+        self.first_node = first
+
+    def to_table(self, pad_to: int | None = None) -> T.JobTable:
+        J = len(self)
+        Jp = pad_to or J
+        assert Jp >= J, f"pad_to={Jp} < {J} jobs"
+        P = self.power_prof.shape[1]
+
+        def pad1(x, fill, dtype):
+            out = np.full((Jp,), fill, dtype)
+            out[:J] = x
+            return jnp.asarray(out)
+
+        def pad2(x, fill, dtype):
+            out = np.full((Jp, P), fill, dtype)
+            out[:J] = x
+            return jnp.asarray(out)
+
+        first = self.first_node if self.first_node is not None else \
+            np.full(J, -1, np.int64)
+        score = self.score if self.score is not None else np.zeros(J)
+        valid = np.zeros((Jp,), bool)
+        valid[:J] = True
+        return T.JobTable(
+            submit=pad1(self.submit, np.inf, np.float32),
+            limit=pad1(self.limit, 1.0, np.float32),
+            wall=pad1(self.wall, 1.0, np.float32),
+            nodes=pad1(self.nodes, 1, np.int32),
+            priority=pad1(self.priority, 0.0, np.float32),
+            account=pad1(self.account, 0, np.int32),
+            rec_start=pad1(self.rec_start, np.inf, np.float32),
+            first_node=pad1(first, -1, np.int32),
+            score=pad1(score, 0.0, np.float32),
+            power_prof=pad2(self.power_prof, 0.0, np.float32),
+            util_prof=pad2(self.util_prof, 0.0, np.float32),
+            valid=jnp.asarray(valid),
+        )
+
+    # -- pre-submission feature matrix for the ML pipeline (paper §4.4) -----
+    def presubmit_features(self) -> np.ndarray:
+        """Features known at submit time: nodes, limit, priority, account
+        aggregates are intentionally excluded (they're ledger state)."""
+        return np.stack([
+            self.nodes.astype(np.float64),
+            self.limit.astype(np.float64),
+            self.priority.astype(np.float64),
+            np.log1p(self.nodes.astype(np.float64)),
+            np.log1p(self.limit.astype(np.float64)),
+        ], axis=1)
+
+    def behavior_features(self) -> np.ndarray:
+        """Post-hoc features (clustering targets): summary statistics of the
+        noisy time series, as the paper does for PM100 (§4.4.3)."""
+        p = self.power_prof
+        u = self.util_prof
+        return np.stack([
+            p.mean(1), p.max(1), p.min(1), p.std(1),
+            u.mean(1), u.std(1),
+            self.wall.astype(np.float64),
+        ], axis=1)

@@ -1,0 +1,90 @@
+"""AI-workload dataset: the twin schedules LM training/serving jobs whose
+power behavior comes from the *compiled* workload layer.
+
+Each job is a (arch x shape) run from the assigned grid; its per-node power
+is derived from the cell's roofline terms (results/dryrun/*__final.json):
+compute-bound cells run nodes near peak power, collective/memory-bound cells
+idle the compute units proportionally to the dominant-term ratio —
+the standard utilization->power proxy, fed by real compiled artifacts.
+Falls back to an analytic table when no dry-run artifacts exist.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+import numpy as np
+
+from repro.datasets.base import JobSet
+from repro.datasets.synthetic import event_schedule
+from repro.systems.config import SystemConfig
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# fallback utilization if no dry-run artifacts are present
+_FALLBACK_UTIL = 0.6
+
+
+def _cell_utilization() -> dict:
+    """(arch, shape) -> compute-term / dominant-term from the dry-run."""
+    out = {}
+    for f in glob.glob(str(DRYRUN / "*__extrap__final.json")):
+        rec = json.load(open(f))
+        if rec.get("status") != "OK":
+            continue
+        rf = rec["roofline"]
+        dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        parts = rec["cell"].split("__")
+        if dom > 0:
+            out[(parts[0], parts[1])] = min(rf["t_compute_s"] / dom, 1.0)
+    return out
+
+
+def generate_lm_workload(system: SystemConfig, n_jobs: int = 256,
+                         duration_s: float = 86400.0, seed: int = 0,
+                         n_accounts: int = 16) -> JobSet:
+    """Jobs = LM runs drawn from the assigned (arch x shape) grid."""
+    rng = np.random.default_rng(seed)
+    cells = _cell_utilization()
+    if not cells:
+        from repro.configs import ARCHS, SHAPES
+        cells = {(a, s): _FALLBACK_UTIL for a in ARCHS for s in SHAPES
+                 if s not in ARCHS[a].skip_shapes}
+    keys = list(cells.keys())
+    pick = rng.integers(0, len(keys), n_jobs)
+
+    # job sizing: training runs are wide + long, decode serving narrow + long,
+    # prefill batch jobs short
+    kind_of = {"train_4k": (0.10, 6.0), "prefill_32k": (0.02, 1.0),
+               "decode_32k": (0.04, 8.0), "long_500k": (0.01, 4.0)}
+    nodes = np.empty(n_jobs, np.int64)
+    wall = np.empty(n_jobs)
+    util = np.empty(n_jobs, np.float32)
+    arch_ids = []
+    for i, k in enumerate(pick):
+        arch, shape = keys[k]
+        frac, hours = kind_of.get(shape, (0.05, 2.0))
+        nodes[i] = max(int(system.n_nodes * frac * rng.uniform(0.5, 2.0)), 1)
+        wall[i] = max(rng.lognormal(np.log(hours * 3600.0), 0.5),
+                      system.dt)
+        util[i] = np.clip(cells[keys[k]] * rng.uniform(0.9, 1.05), 0.05, 1.0)
+        arch_ids.append(f"{arch}:{shape}")
+    wall = np.round(wall / system.dt) * system.dt
+    nodes = np.minimum(nodes, system.n_nodes)
+
+    submit = np.sort(rng.uniform(0, duration_s, n_jobs))
+    limit = wall * rng.uniform(1.1, 2.0, n_jobs)
+    idle, peak = system.power.idle_node_w, system.power.peak_node_w
+    power = (idle + (peak - idle) * util)[:, None].astype(np.float32)
+    rec_start = event_schedule(submit, limit, wall, nodes, system.n_nodes,
+                               system.dt)
+    rec_start = np.where(np.isfinite(rec_start), rec_start, duration_s * 2)
+    js = JobSet(submit=submit, limit=limit, wall=wall, nodes=nodes,
+                priority=np.log2(nodes + 1.0),
+                account=rng.integers(0, n_accounts, n_jobs),
+                rec_start=rec_start, power_prof=power,
+                util_prof=util[:, None].astype(np.float32),
+                name=f"lmjobs-{system.name}")
+    js.arch_ids = arch_ids  # type: ignore[attr-defined]
+    return js

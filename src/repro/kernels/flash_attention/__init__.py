@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import mha  # noqa: F401
+from repro.kernels.flash_attention.ref import mha_ref  # noqa: F401
+from repro.kernels.flash_attention.flash_attention import flash_attention  # noqa: F401

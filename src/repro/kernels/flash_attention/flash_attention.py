@@ -1,0 +1,128 @@
+"""Pallas TPU flash-attention forward (blockwise online softmax).
+
+Grid: (B*H, S/Bq, T/Bk) — the kv-block axis is the sequential minor grid
+dimension, so the online-softmax running statistics (m, l) and the output
+accumulator live in VMEM scratch across kv steps:
+
+    VMEM per step:  q tile (Bq, hd), k/v tiles (Bk, hd),
+                    logits tile (Bq, Bk) f32, acc (Bq, hd) f32, m/l (Bq, 128)
+    MXU:            q@k^T  (Bq,hd)x(hd,Bk)  and  p@v  (Bq,Bk)x(Bk,hd)
+
+Bq = Bk = 128 and hd in {64, 128} keep every matmul MXU-aligned. Causal and
+sliding-window masking are applied inside the tile; fully-masked tiles are
+skipped with pl.when (the dominant win for causal prefill: 2x fewer tiles).
+GQA is handled in the index maps (kv head = q head // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, bq: int, bk: int, t_total: int,
+            s_total: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions (queries right-aligned when S != T)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + \
+        (t_total - s_total)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # tile-level skip: causal tiles entirely above the diagonal, or entirely
+    # outside the sliding window
+    q_last = qi * bq + bq - 1 + (t_total - s_total)
+    q_first = qi * bq + (t_total - s_total)
+    k_first = ki * bk
+    k_last = ki * bk + bk - 1
+    live = True
+    if causal:
+        live = jnp.logical_and(live, k_first <= q_last)
+    if window > 0:
+        live = jnp.logical_and(live, k_last > q_first - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale     # [Bq, hd]
+        k = k_ref[0].astype(jnp.float32)             # [Bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                         # [Bq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+
+    def kv_index(bh, qi, ki):
+        # bh = b * H + h  ->  kv row = b * KV + h // G
+        return (bh // H) * KV + (bh % H) // G, ki, 0
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, bq=bq, bk=bk, t_total=T,
+        s_total=S, scale=1.0 / (hd ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // bq, T // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # m
+            pltpu.VMEM((bq, 128), jnp.float32),   # l
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

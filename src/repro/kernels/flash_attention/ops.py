@@ -1,0 +1,14 @@
+"""Jit'd attention dispatcher: XLA einsum path (lowers everywhere, used by
+the dry-run) or the Pallas flash kernel (TPU runtime / interpret validation).
+"""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def mha(q, k, v, causal: bool = True, window: int = 0,
+        use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return flash_attention(q, k, v, causal, window, interpret=interpret)
+    return mha_ref(q, k, v, causal, window)

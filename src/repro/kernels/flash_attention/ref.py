@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for blockwise (flash) attention: plain f32 softmax
+attention with causal + sliding-window masking and GQA head grouping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd]; returns [B,S,H,hd] (q dtype).
+
+    GQA: H must be a multiple of KV; query group g uses kv head g*KV//H.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qf, kf) / jnp.sqrt(hd)
+    qi = jnp.arange(S)[:, None] + (T - S)   # right-aligned positions
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > (qi - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

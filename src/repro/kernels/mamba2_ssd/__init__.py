@@ -1,0 +1,2 @@
+from repro.kernels.mamba2_ssd.ops import ssd, ssd_chunked  # noqa: F401
+from repro.kernels.mamba2_ssd.ref import ssd_ref  # noqa: F401

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for chunked Mamba2 SSD.
+
+Grid: (B*H, S/L), chunk axis sequential; state (P x N) lives in VMEM scratch.
+Per grid step the VMEM working set is
+    x tile (L, P), B/C tiles (L, N), decay (L,), att (L, L), state (P, N)
+and the compute is three MXU matmuls:
+    g   = C @ B^T                 (L,N)x(N,L)
+    y   = (att*g) @ (dt*x)        (L,L)x(L,P)
+    S'  = (dec*(dt*x))^T @ B      (P,L)x(L,N)
+With L=64, P=64, N=64 the tiles are MXU-shaped and the whole step is
+~3*2*L*L*64 FLOPs against ~4*L*64*4 bytes of HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # [L, P]
+    dt = dt_ref[0].astype(jnp.float32)     # [L]
+    a = a_ref[0].astype(jnp.float32)       # [L]
+    B = b_ref[0].astype(jnp.float32)       # [L, N]
+    C = c_ref[0].astype(jnp.float32)       # [L, N]
+    L = x.shape[0]
+
+    loga = jnp.log(jnp.clip(a, 1e-38, 1.0))
+    cum = jnp.cumsum(loga)                 # [L]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >=
+            jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    # mask before exp: masked (s > t) diffs are positive -> inf * 0 = NaN
+    att = jnp.exp(jnp.where(mask, cum[:, None] - cum[None, :], -jnp.inf))
+    dbx = dt[:, None] * x                  # [L, P]
+
+    g = jnp.dot(C, B.T, preferred_element_type=jnp.float32)     # [L, L]
+    y = jnp.dot(att * g, dbx, preferred_element_type=jnp.float32)
+    # cross-chunk contribution
+    S = state_ref[...]
+    y += jnp.exp(cum)[:, None] * jnp.dot(C, S.T,
+                                         preferred_element_type=jnp.float32)
+    # state update
+    dec = jnp.exp(cum[-1] - cum)           # [L]
+    state_ref[...] = jnp.exp(cum[-1]) * S + \
+        jnp.dot((dec[:, None] * dbx).T, B, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def ssd_pallas(x, dt, a, B, C, chunk: int = 64, interpret: bool = True):
+    """x: [Bz,S,H,P]; dt,a: [Bz,S,H]; B,C: [Bz,S,N]. Returns y [Bz,S,H,P]."""
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    L = chunk
+    assert S % L == 0, (S, L)
+    BH = Bz * H
+
+    xb = x.transpose(0, 2, 1, 3).reshape(BH, S, P)
+    dtb = dt.transpose(0, 2, 1).reshape(BH, S)
+    ab = a.transpose(0, 2, 1).reshape(BH, S)
+    # B/C are shared across heads: broadcast up front (HBM cost is modest,
+    # N=64; avoids gather indexing inside the kernel)
+    Bb = jnp.broadcast_to(B[:, None], (Bz, H, S, N)).reshape(BH, S, N)
+    Cb = jnp.broadcast_to(C[:, None], (Bz, H, S, N)).reshape(BH, S, N)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=(BH, S // L),
+        in_specs=[
+            pl.BlockSpec((1, L, P), lambda b, c: (b, c, 0)),   # x
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),         # dt
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),         # a
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),   # B
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),   # C
+        ],
+        out_specs=pl.BlockSpec((1, L, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xb, dtb, ab, Bb, Cb)
+    return y.reshape(Bz, H, S, P).transpose(0, 2, 1, 3)

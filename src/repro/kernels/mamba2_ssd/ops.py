@@ -1,0 +1,69 @@
+"""Chunked SSD (Dao & Gu 2024 "state-space duality") — jnp path + Pallas
+dispatch. Scalar-per-head decay makes the intra-chunk term a plain [L, L]
+matmul per head (fully MXU work on TPU):
+
+  cum_t  = sum_{tau<=t} log a_tau
+  att[t,s] = exp(cum_t - cum_s)  for s <= t           (decay t<-s)
+  y_t    = sum_{s<=t} att[t,s] (C_t . B_s) (dt_s x_s)  +  exp(cum_t) C_t.S
+  S'     = exp(cum_L) S + sum_s exp(cum_L - cum_s) (dt_s x_s) (x) B_s
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def ssd_chunked(x, dt, a, B, C, chunk: int = 64):
+    """Same contract as ref.ssd_ref (state0 = 0). Returns (y, final_state)."""
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+    x, dt, a, B, C = (z.astype(f32) for z in (x, dt, a, B, C))
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nC = S // L
+
+    xc = x.reshape(Bz, nC, L, H, P).transpose(1, 0, 3, 2, 4)   # [nC,Bz,H,L,P]
+    dtc = dt.reshape(Bz, nC, L, H).transpose(1, 0, 3, 2)       # [nC,Bz,H,L]
+    ac = a.reshape(Bz, nC, L, H).transpose(1, 0, 3, 2)
+    Bc = B.reshape(Bz, nC, L, N).transpose(1, 0, 2, 3)         # [nC,Bz,L,N]
+    Cc = C.reshape(Bz, nC, L, N).transpose(1, 0, 2, 3)
+
+    loga = jnp.log(jnp.clip(ac, 1e-38, 1.0))
+    cum = jnp.cumsum(loga, axis=-1)                            # [nC,Bz,H,L]
+    state0 = jnp.zeros((Bz, H, P, N), f32)
+    mask = jnp.arange(L)[:, None] >= jnp.arange(L)[None, :]
+
+    def chunk_step(S_, inp):
+        from repro.parallel.sharding import hint_axes
+        xt, dtt, cumt, Bt, Ct = inp
+        S_ = hint_axes(S_, ("batch", "model", None, None))     # pin carry
+        dbx = dtt[..., None] * xt                              # [Bz,H,L,P]
+        # mask before exp: masked (s > t) diffs are positive -> inf * 0 = NaN
+        att = jnp.exp(jnp.where(mask, cumt[..., :, None] - cumt[..., None, :],
+                                -jnp.inf))
+        g = jnp.einsum("bln,bsn->bls", Ct, Bt)                 # [Bz,L,L]
+        y = jnp.einsum("bhls,bls,bhsp->bhlp", att, g, dbx)
+        # cross-chunk
+        y += jnp.einsum("bhl,bln,bhpn->bhlp", jnp.exp(cumt), Ct, S_)
+        # state update
+        dec = jnp.exp(cumt[..., -1:] - cumt)                   # [Bz,H,L]
+        S_new = jnp.exp(cumt[..., -1])[..., None, None] * S_ + \
+            jnp.einsum("bhl,bhlp,bln->bhpn", dec, dbx, Bt)
+        return S_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state0, (xc, dtc, cum, Bc, Cc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bz, S, H, P)
+    return y, state
+
+
+def ssd(x, dt, a, B, C, chunk: int = 64, use_pallas: bool = False,
+        interpret: bool = True):
+    """Dispatcher used by the model (returns y only)."""
+    if use_pallas:
+        from repro.kernels.mamba2_ssd.mamba2_ssd import ssd_pallas
+        return ssd_pallas(x, dt, a, B, C, chunk=chunk, interpret=interpret)
+    return ssd_chunked(x, dt, a, B, C, chunk=chunk)[0]

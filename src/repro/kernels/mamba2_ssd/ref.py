@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (naive scan over time).
+
+Per head (state S in R^{P x N}, scalar decay a_t):
+    S_t = a_t S_{t-1} + (dt_t * x_t) (x) B_t
+    y_t = S_t C_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, B, C, state0=None):
+    """x: [Bz,S,H,P]; dt,a: [Bz,S,H]; B,C: [Bz,S,N].
+
+    Returns (y f32[Bz,S,H,P], final state f32[Bz,H,P,N])."""
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+    x, dt, a, B, C = (z.astype(f32) for z in (x, dt, a, B, C))
+    if state0 is None:
+        state0 = jnp.zeros((Bz, H, P, N), f32)
+
+    def step(S_, inp):
+        xt, dtt, at, Bt, Ct = inp
+        dbx = dtt[..., None] * xt                       # [Bz,H,P]
+        S_new = at[..., None, None] * S_ + \
+            dbx[..., :, None] * Bt[:, None, None, :]    # [Bz,H,P,N]
+        yt = jnp.einsum("bhpn,bn->bhp", S_new, Ct)
+        return S_new, yt
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          a.transpose(1, 0, 2), B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,2 @@
+from repro.kernels.power_topo.ops import group_power  # noqa: F401
+from repro.kernels.power_topo.ref import group_power_ref  # noqa: F401

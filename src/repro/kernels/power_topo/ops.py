@@ -1,0 +1,49 @@
+"""Jit'd wrapper for the power-topology reduction.
+
+``group_power`` is what the engine calls. On CPU (this container) it lowers
+to the XLA path (the oracle math); on TPU deployments set
+``use_pallas=True`` to take the VMEM-tiled kernel. The wrapper owns padding
+so the kernel only sees aligned shapes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.power_topo.power_topo import group_power_pallas
+from repro.kernels.power_topo.ref import group_power_ref
+
+_LANE = 128
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def group_power(node_pw: jnp.ndarray, n_groups: int,
+                use_pallas: bool = False, interpret: bool = True
+                ) -> jnp.ndarray:
+    """f32[N] or f32[S, N] -> f32[G] / f32[S, G]."""
+    squeeze = node_pw.ndim == 1
+    x = node_pw[None, :] if squeeze else node_pw
+    if use_pallas:
+        # Zero padding is exact for a sum reduction. Lay the array out as
+        # (S, G, span) so each kernel program sees exactly one ref-group,
+        # then pad span to the lane width and S to the sublane width.
+        S, N = x.shape
+        span = -(-N // n_groups)          # ceil: matches ref.group_ids
+        x = _pad_to(x, 1, span * n_groups)
+        x = x.reshape(S, n_groups, span)
+        x = _pad_to(x, 2, _LANE)
+        x = x.reshape(S, -1)
+        x = _pad_to(x, 0, 8)
+        out = group_power_pallas(x, n_groups, s_block=8, interpret=interpret)
+        out = out[:S]
+    else:
+        out = group_power_ref(x, n_groups)
+    return out[0] if squeeze else out

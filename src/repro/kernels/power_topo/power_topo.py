@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: batched node-power -> CDU-group segment reduction.
+
+This is the twin's per-tick hot spot at scale: with S sharded scenarios and
+N nodes (up to 158,976 for Fugaku) the reduction is (S x N) -> (S x G) every
+step. Grouping is by contiguous span, so each grid program reduces one
+(S_block x span) tile held in VMEM.
+
+Tiling: grid = (G, S/S_block); the input block is (S_block, N/G) resident in
+VMEM, output block is (S_block, 1). For TPU, S_block is a multiple of 8 and
+N/G is padded to a multiple of 128 by the wrapper (ops.py) so the MXU/VPU
+lanes stay aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    # x_ref: (S_block, span) VMEM tile; o_ref: (S_block, 1)
+    o_ref[...] = jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def group_power_pallas(node_pw: jnp.ndarray, n_groups: int,
+                       s_block: int = 8, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """f32[S, N] -> f32[S, G]; N must be divisible by G (wrapper pads)."""
+    S, N = node_pw.shape
+    assert N % n_groups == 0, "pad N to a multiple of n_groups first"
+    span = N // n_groups
+    assert S % s_block == 0, "pad S to a multiple of s_block first"
+
+    grid = (n_groups, S // s_block)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((s_block, span), lambda g, s: (s, g))],
+        out_specs=pl.BlockSpec((s_block, 1), lambda g, s: (s, g)),
+        out_shape=jax.ShapeDtypeStruct((S, n_groups), node_pw.dtype),
+        interpret=interpret,
+    )(node_pw)
+    return out

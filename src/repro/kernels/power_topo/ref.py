@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the power-topology segment reduction.
+
+Node n belongs to CDU group ``n * G // N`` (contiguous spans, mirroring how
+cabinets map to CDUs). Inputs may carry a leading scenario-batch axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def group_ids(n_nodes: int, n_groups: int) -> jnp.ndarray:
+    span = -(-n_nodes // n_groups)  # ceil: groups are equal spans, last ragged
+    idx = jnp.arange(n_nodes, dtype=jnp.int32)
+    return jnp.minimum(idx // span, n_groups - 1)
+
+
+def group_power_ref(node_pw: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """f32[..., N] -> f32[..., G] segment sum over contiguous node spans."""
+    n_nodes = node_pw.shape[-1]
+    gid = group_ids(n_nodes, n_groups)
+    one_hot = (gid[:, None] == jnp.arange(n_groups)[None, :]).astype(
+        node_pw.dtype)
+    return node_pw @ one_hot

@@ -1,0 +1,2 @@
+from repro.kernels.rwkv6_wkv.ops import wkv, wkv_chunked, wkv_decode_step  # noqa: F401
+from repro.kernels.rwkv6_wkv.ref import wkv_ref  # noqa: F401

@@ -1,0 +1,103 @@
+"""Chunked WKV: the production formulation (jnp path + Pallas dispatch).
+
+The recurrence is linear attention with per-channel decay, so a chunk of
+length L computes as dense algebra (MXU-friendly) instead of S sequential
+steps:
+
+  cum_t = sum_{tau<=t} log w_tau                       (inclusive, per chan)
+  intra: y_t += sum_{s<t} r_t . exp(cum_{t-1}-cum_s) k_s v_s + u.k_t r_t v_t
+  cross: y_t += r_t . exp(cum_{t-1}) S
+  state: S' = exp(cum_{L-1}) S + sum_s exp(cum_{L-1}-cum_s) k_s v_s
+
+Everything stays in log space until the last exp, so arbitrarily strong
+decay cannot overflow (exponents are always <= 0 within a chunk... the
+pairwise differences cum_{t-1}-cum_s for s<t are sums of logs in (-inf, 0]).
+The per-chunk [L, L, hd] tensor is the VMEM tile the Pallas kernel holds
+(see rwkv6_wkv.py); the jnp path mirrors it exactly so both lower everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def wkv_chunked(r, k, v, w, u, chunk: int = 32):
+    """Same contract as ref.wkv_ref (state0 = 0). Returns (y, final_state)."""
+    B, S, H, hd = r.shape
+    f32 = jnp.float32
+    dt_out = r.dtype
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nC = S // L
+
+    # [nC, B, H, L, hd]
+    def to_chunks(x):
+        return x.reshape(B, nC, L, H, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    logw = jnp.log(jnp.clip(wc, 1e-38, 1.0))
+    cum = jnp.cumsum(logw, axis=-2)                  # inclusive [.., L, hd]
+    cum_prev = cum - logw                            # exclusive (cum_{t-1})
+    cum_last = cum[..., -1:, :]                      # [.., 1, hd]
+
+    state0 = jnp.zeros((B, H, hd, hd), f32)
+
+    def chunk_step(S_, inp):
+        from repro.parallel.sharding import hint_axes
+        rt, kt, vt, cumt, cumpt, cumlast = inp       # [B,H,L,hd]
+        S_ = hint_axes(S_, ("batch", "model", None, None))  # pin carry
+        # intra-chunk: att[t,s,i] = exp(cumpt[t,i]-cumt[s,i]) for s<t.
+        # Mask BEFORE exp: masked pairs have positive diff that overflows to
+        # inf under strong decay, and inf * 0 = NaN.
+        diff = cumpt[..., :, None, :] - cumt[..., None, :, :]  # [B,H,L,L,hd]
+        mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+        att = jnp.exp(jnp.where(mask[None, None, :, :, None], diff,
+                                -jnp.inf))
+        a = jnp.einsum("bhti,bhtsi,bhsi->bhts", rt, att, kt)
+        y = jnp.einsum("bhts,bhsj->bhtj", a, vt)
+        # bonus (current token)
+        y += jnp.einsum("bhti,bhti,bhtj->bhtj", rt, u[None, :, None, :] * kt,
+                        vt)
+        # cross-chunk: state contribution
+        rdec = rt * jnp.exp(cumpt)
+        y += jnp.einsum("bhti,bhij->bhtj", rdec, S_)
+        # state update
+        kdec = kt * jnp.exp(cumlast - cumt)
+        S_new = jnp.exp(cumlast[..., 0, :])[..., :, None] * S_ + \
+            jnp.einsum("bhsi,bhsj->bhij", kdec, vt)
+        return S_new, y
+
+    state, ys = jax.lax.scan(
+        chunk_step, state0,
+        (rc, kc, vc, cum, cum_prev,
+         jnp.broadcast_to(cum_last, cum_last.shape)))
+    # ys: [nC, B, H, L, hd] -> [B, S, H, hd]
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return y.astype(dt_out), state
+
+
+def wkv(r, k, v, w, u, chunk: int = 32, use_pallas: bool = False,
+        interpret: bool = True):
+    """Dispatcher used by the model: jnp chunked (default, lowers on all
+    backends) or the Pallas TPU kernel."""
+    if use_pallas:
+        from repro.kernels.rwkv6_wkv.rwkv6_wkv import wkv_pallas
+        return wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return wkv_chunked(r, k, v, w, u, chunk=chunk)
+
+
+def wkv_decode_step(r1, k1, v1, w1, u, state):
+    """Single-token recurrence for serving. r1..w1: [B,H,hd]; state:
+    [B,H,hd,hd]. Returns (y [B,H,hd], new_state)."""
+    f32 = jnp.float32
+    r1, k1, v1, w1 = (x.astype(f32) for x in (r1, k1, v1, w1))
+    kv = k1[..., :, None] * v1[..., None, :]
+    att = state + u[None, :, :, None].astype(f32) * kv
+    y = jnp.einsum("bhi,bhij->bhj", r1, att)
+    new_state = w1[..., :, None] * state + kv
+    return y, new_state

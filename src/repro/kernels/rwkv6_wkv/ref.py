@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (naive scan over time).
+
+Per head (state S in R^{hd x hd}):
+    y_t[j]   = sum_i r_t[i] * ( S_t[i,j] + u[i] * k_t[i] * v_t[j] )
+    S_{t+1}  = diag(w_t) S_t + k_t (x) v_t
+with w_t in (0,1) the data-dependent decay (the "Finch" feature).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, state0=None):
+    """r,k,v,w: f32[B,S,H,hd]; u: f32[H,hd].
+
+    Returns (y f32[B,S,H,hd], final state f32[B,H,hd,hd])."""
+    B, S, H, hd = r.shape
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), f32)
+
+    def step(S_, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,hd,hd]
+        att = S_ + u[None, :, :, None] * kv               # bonus on current
+        yt = jnp.einsum("bhi,bhij->bhj", rt, att)
+        S_new = wt[..., :, None] * S_ + kv
+        return S_new, yt
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))  # [S,B,H,hd]
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the chunked RWKV6 WKV recurrence.
+
+Grid: (B*H, S/L) with the chunk axis *sequential* (TPU executes the minor
+grid dimension in order), so the recurrent state lives in a VMEM scratch
+buffer across chunk steps — HBM traffic is exactly r,k,v,w in and y out.
+
+Per grid step the kernel holds in VMEM:
+    r,k,v,logw tiles      4 x (L, hd) f32
+    pairwise decay tile   (L, L, hd) f32   <- the working set that makes
+                                              this a kernel: hd*L^2*4 bytes
+                                              (L=32, hd=64 -> 256 KiB)
+    state scratch         (hd, hd) f32
+MXU work: the (L,L)@(L,hd) attention matmuls; VPU work: exp/cumsum and the
+per-channel decay product-reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, r_ref, k_ref, v_ref, w_ref, y_ref, state_ref):
+    c = pl.program_id(1)  # sequential chunk index
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)       # [L, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)       # [hd]
+    L = r.shape[0]
+
+    logw = jnp.log(jnp.clip(w, 1e-38, 1.0))
+    cum = jnp.cumsum(logw, axis=0)         # inclusive [L, hd]
+    cum_prev = cum - logw
+    cum_last = cum[-1:, :]                 # [1, hd]
+
+    # intra-chunk pairwise decay tile [L, L, hd] (the VMEM working set).
+    # Mask before exp: masked (s >= t) diffs are positive and can overflow.
+    diff = cum_prev[:, None, :] - cum[None, :, :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >
+            jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    att = jnp.exp(jnp.where(mask[:, :, None], diff, -jnp.inf))
+    # a[t,s] = sum_i r[t,i] * att[t,s,i] * k[s,i]   (VPU reduce over hd)
+    a = jnp.sum(att * r[:, None, :] * k[None, :, :], axis=2)
+    y = jnp.dot(a, v, preferred_element_type=jnp.float32)
+    # bonus (current token): y_t += (sum_i r_t[i] u[i] k_t[i]) * v_t
+    y += jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    # cross-chunk: state contribution
+    S = state_ref[...]
+    y += jnp.dot(r * jnp.exp(cum_prev), S,
+                 preferred_element_type=jnp.float32)
+    # state update
+    kdec = k * jnp.exp(cum_last - cum)
+    state_ref[...] = jnp.exp(cum_last[0])[:, None] * S + \
+        jnp.dot(kdec.T, v, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def wkv_pallas(r, k, v, w, u, chunk: int = 32, interpret: bool = True):
+    """r,k,v,w: [B,S,H,hd]; u: [H,hd]. Returns (y [B,S,H,hd], None).
+
+    The Pallas path keeps the recurrent state in scratch and does not return
+    it; use the jnp chunked path (ops.wkv_chunked) when the final state is
+    needed (e.g. prefill handing off to decode).
+    """
+    B, S, H, hd = r.shape
+    L = chunk
+    assert S % L == 0, (S, L)
+    BH = B * H
+
+    def bh(x):  # [B,S,H,hd] -> [BH, S, hd]
+        return x.transpose(0, 2, 1, 3).reshape(BH, S, hd)
+
+    rb, kb, vb, wb = map(bh, (r, k, v, w))
+    ub = jnp.broadcast_to(u[None, :, :], (B, H, hd)).reshape(BH, hd)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=(BH, S // L),
+        in_specs=[
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),        # u
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),  # r
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),  # k
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),  # v
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),  # w
+        ],
+        out_specs=pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(ub, rb, kb, vb, wb)
+    yout = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return yout, None

@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch x shape x mesh)
+cell on placeholder devices, record memory/cost analysis + collectives.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) — the
+XLA_FLAGS lines above execute before any jax import, giving 512 host
+devices. Smoke tests and benchmarks never import this module.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --both-meshes
+  python -m repro.launch.dryrun --list
+Each cell appends JSON to results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as roofline
+from repro.training import train_step as ts
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def input_specs(arch: str, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    seq, gb, kind = SHAPES[shape]
+    return ts.batch_struct(cfg, seq, gb, kind)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True, unroll: bool = False) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:
+        # full unroll of the layer scans: XLA cost analysis then counts every
+        # layer (a rolled while-loop body is costed once) — exact roofline
+        # terms at the price of a slower compile.
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    seq, gb, kind = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape}__{mesh_name}" + ("__unroll" if unroll else "")
+
+    if shape in cfg.skip_shapes:
+        return dict(cell=cell_id, status="SKIP",
+                    reason=f"{arch} is full-attention (or shape not "
+                           f"meaningful); see DESIGN.md §3")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+
+    with mesh:
+        if kind == "train":
+            step, shardings, structs = ts.make_train_step(cfg, mesh, seq, gb)
+            args = (structs["params"], structs["opt"], structs["batch"])
+        elif kind == "prefill":
+            step, shardings, structs = ts.make_prefill_step(cfg, mesh, seq,
+                                                            gb)
+            args = (structs["params"], structs["batch"])
+        else:  # decode / long_decode
+            step, shardings, structs = ts.make_decode_step(cfg, mesh, seq,
+                                                           gb, kind)
+            args = (structs["params"], structs["tokens"], structs["state"])
+
+        lowered = step.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    peak_mem = None
+    mem_detail = {}
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_detail[attr] = int(v)
+        live = mem_detail.get("temp_size_in_bytes", 0) + \
+            mem_detail.get("argument_size_in_bytes", 0)
+        peak_mem = live
+
+    model_flops = roofline.model_flops_for(cfg, seq, gb, kind)
+    hbm_model = roofline.analytic_hbm_bytes(cfg, seq, gb, kind, chips)
+    rf = roofline.analyze(arch, shape, mesh_name, chips, cost or {}, hlo,
+                          model_flops, peak_mem, hbm_model)
+
+    rec = dict(cell=cell_id, status="OK", kind=kind, chips=chips,
+               seq_len=seq, global_batch=gb,
+               params=cfg.param_count, active_params=cfg.active_param_count,
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+               memory=mem_detail, roofline=rf.as_dict(),
+               hlo_bytes=len(hlo))
+    if verbose:
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("memory",)}, indent=None,
+                         default=str)[:600], flush=True)
+    return rec
+
+
+def _compile_cell(cfg, seq, gb, kind, mesh):
+    """Lower+compile one step; return (cost dict, collective dict, memory
+    dict, timings)."""
+    import time as _t
+    from repro.roofline.analysis import collective_bytes
+    t0 = _t.perf_counter()
+    with mesh:
+        if kind == "train":
+            step, _, structs = ts.make_train_step(cfg, mesh, seq, gb)
+            args = (structs["params"], structs["opt"], structs["batch"])
+        elif kind == "prefill":
+            step, _, structs = ts.make_prefill_step(cfg, mesh, seq, gb)
+            args = (structs["params"], structs["batch"])
+        else:
+            step, _, structs = ts.make_decode_step(cfg, mesh, seq, gb, kind)
+            args = (structs["params"], structs["tokens"], structs["state"])
+        lowered = step.lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_d[attr] = int(v)
+    return cost, coll, mem_d, _t.perf_counter() - t0
+
+
+def _unit_layers(cfg) -> int:
+    """Smallest repeatable layer unit for two-point extrapolation."""
+    if cfg.family == "hybrid":
+        return max(cfg.shared_attn_every, 1)
+    if cfg.n_experts and cfg.moe_every > 1:
+        return cfg.moe_every
+    return 1
+
+
+def run_cell_extrapolated(arch: str, shape: str, multi_pod: bool,
+                          verbose: bool = True,
+                          overrides: dict | None = None,
+                          tag: str = "") -> dict:
+    """Exact roofline terms via two-point layer extrapolation.
+
+    XLA costs a rolled ``while`` body once, so a full-depth rolled compile
+    under-counts per-layer work; full unroll is exact but compiles for many
+    minutes. Every per-op metric is affine in the layer count, so two cheap
+    *unrolled* compiles at L=unit and L=2*unit give
+        body = c2 - c1,  rest = c1 - body,
+        corrected(L) = rest + (L/unit) * body.
+    Validated against a full qwen2.5-3b unroll (see EXPERIMENTS.md §Dry-run).
+    """
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    seq, gb, kind = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape}__{mesh_name}__extrap" + \
+        (f"__{tag}" if tag else "")
+    if shape in cfg.skip_shapes:
+        return dict(cell=cell_id, status="SKIP",
+                    reason=f"{arch}: shape not meaningful (DESIGN.md §3)")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    unit = _unit_layers(cfg)
+    n_units = cfg.n_layers / unit
+
+    def variant(k):
+        kw = dict(n_layers=k * unit, scan_unroll=True)
+        if cfg.family == "encdec":
+            kw["n_enc_layers"] = k
+        return dataclasses.replace(cfg, **kw)
+
+    c1, coll1, mem1, t1 = _compile_cell(variant(1), seq, gb, kind, mesh)
+    c2, coll2, mem2, t2 = _compile_cell(variant(2), seq, gb, kind, mesh)
+
+    def extrap(a1, a2, scale=n_units):
+        body = a2 - a1
+        rest = a1 - body
+        return max(rest + scale * body, 0.0)
+
+    cost = {
+        "flops": extrap(float(c1.get("flops", 0)), float(c2.get("flops", 0))),
+        "bytes accessed": extrap(float(c1.get("bytes accessed", 0)),
+                                 float(c2.get("bytes accessed", 0))),
+    }
+    coll = {}
+    for k in set(coll1) | set(coll2):
+        coll[k] = extrap(float(coll1.get(k, 0)), float(coll2.get(k, 0)))
+    mem_detail = {k: extrap(float(mem1.get(k, 0)), float(mem2.get(k, 0)))
+                  for k in set(mem1) | set(mem2)}
+    peak_mem = mem_detail.get("argument_size_in_bytes", 0) + \
+        mem_detail.get("temp_size_in_bytes", 0)
+
+    model_flops = roofline.model_flops_for(cfg, seq, gb, kind)
+    hbm_model = roofline.analytic_hbm_bytes(cfg, seq, gb, kind, chips)
+    # synthesize an "hlo text" substitute: feed collective bytes directly
+    rf = roofline.analyze(arch, shape, mesh_name, chips, cost, "",
+                          model_flops, peak_mem, hbm_model)
+    rf.collective_bytes_per_device = float(coll.get("total_bytes", 0.0))
+    rf.t_collective_s = rf.collective_bytes_per_device / 50e9
+    terms = {"compute": rf.t_compute_s, "memory": rf.t_memory_s,
+             "collective": rf.t_collective_s}
+    rf.bottleneck = max(terms, key=terms.get)
+    rf.collective_detail = {k: int(v) for k, v in coll.items()}
+
+    rec = dict(cell=cell_id, status="OK", kind=kind, chips=chips,
+               seq_len=seq, global_batch=gb, method="extrapolated",
+               params=cfg.param_count, active_params=cfg.active_param_count,
+               compile_s=round(t1 + t2, 1), memory=mem_detail,
+               roofline=rf.as_dict())
+    if verbose:
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("memory",)}, default=str)[:500],
+              flush=True)
+    return rec
+
+
+def run_twin_cell(multi_pod: bool, n_scenarios: int = 512,
+                  system_name: str = "frontier", verbose: bool = True) -> dict:
+    """Dry-run the paper's own workload: a what-if scenario sweep of the
+    compiled twin, with the scenario axis sharded over every chip of the
+    production mesh (DCDT what-if studies at pod scale)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import engine as eng
+    from repro.core import types as T
+    from repro.datasets.synthetic import WorkloadSpec, generate
+    from repro.systems.config import get_system
+    from repro.roofline.analysis import collective_bytes
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"twin-{system_name}__sweep{n_scenarios}__{mesh_name}"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    sys_ = get_system(system_name)
+    js = generate(sys_, WorkloadSpec(n_jobs=1238, duration_s=86400.0,
+                                     trace_len=96, seed=1))
+    table = js.to_table(1280)
+    st0 = eng.init_state(sys_, table, 0.0, 86400.0)
+    scen_struct = T.Scenario(
+        jax.ShapeDtypeStruct((n_scenarios,), jnp.int32),
+        jax.ShapeDtypeStruct((n_scenarios,), jnp.int32),
+        jax.ShapeDtypeStruct((n_scenarios,), jnp.float32))
+    axes = mesh.axis_names  # shard scenarios over ALL mesh axes
+    scen_shard = T.Scenario(*([NamedSharding(mesh, P(axes))] * 3))
+    n_steps = 256  # one compile unit; runtime scans further
+
+    def sweep(table_, st0_, scen_):
+        def one(s1):
+            def body(st, _):
+                return eng.engine_step(sys_, table_, st, s1)
+            return jax.lax.scan(body, st0_, None, length=n_steps)
+        return jax.vmap(one)(scen_)
+
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(sweep, in_shardings=(None, None, scen_shard)).lower(
+            table, st0, scen_struct)
+        compiled = lowered.compile()
+    dt = time.perf_counter() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    rec = dict(cell=cell_id, status="OK", chips=chips,
+               scenarios=n_scenarios, steps=n_steps,
+               compile_s=round(dt, 1),
+               flops_per_device=float(cost.get("flops", 0)),
+               argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+               collectives=collective_bytes(compiled.as_text()))
+    if verbose:
+        print(json.dumps(rec, default=str)[:400], flush=True)
+    return rec
+
+
+def save(rec: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{rec['cell']}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact roofline costs")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="two-point layer extrapolation (exact + fast)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override: key=value (perf experiments)")
+    ap.add_argument("--tag", default="", help="suffix for the result cell id")
+    ap.add_argument("--twin", action="store_true",
+                    help="dry-run the twin scenario sweep instead of LM archs")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in ARCHS:
+            for s in SHAPES:
+                print(a, s)
+        return
+
+    if args.twin:
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            rec = run_twin_cell(mp)
+            save(rec)
+        return
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                try:
+                    if args.extrapolate:
+                        ov = {}
+                        for kv in args.override:
+                            k, _, v = kv.partition("=")
+                            import ast
+                            try:
+                                ov[k] = ast.literal_eval(v)
+                            except (ValueError, SyntaxError):
+                                ov[k] = v
+                        rec = run_cell_extrapolated(a, s, mp, overrides=ov,
+                                                    tag=args.tag)
+                    else:
+                        rec = run_cell(a, s, mp, unroll=args.unroll)
+                except Exception as e:  # noqa: BLE001
+                    rec = dict(cell=f"{a}__{s}__"
+                                    f"{'2x16x16' if mp else '16x16'}",
+                               status="FAIL", error=f"{type(e).__name__}: "
+                                                    f"{e}",
+                               trace=traceback.format_exc()[-2000:])
+                    n_fail += 1
+                    print(rec["cell"], "FAIL", rec["error"], flush=True)
+                save(rec)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""S-RAPS CLI (the paper's ``main.py`` equivalent).
+
+  python -m repro.launch.simulate --system marconi100 -t 61000 -ff 4381000 \\
+      --scheduler default --policy fcfs --backfill easy -o out/
+
+Options mirror the paper's artifact: --system selects the dataloader,
+--policy/--backfill the built-in scheduler, --scheduler external couples an
+event-based external simulator (fastsim | scheduleflow), --accounts tracks
+account ledgers, --accounts-json reloads them (incentive redeeming),
+--sweep runs several policies in one compiled batch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import secrets
+import time
+
+import numpy as np
+
+from repro.core import accounts as acct_mod
+from repro.core import engine as eng
+from repro.core import external as ext
+from repro.core import stats as stats_mod
+from repro.core import types as T
+from repro.datasets import loaders
+from repro.ml.pipeline import MLSchedulerModel, attach_scores
+from repro.systems.config import get_system
+
+
+def _parse_time(s: str) -> float:
+    units = {"s": 1.0, "m": 60.0, "h": 3600.0, "d": 86400.0}
+    if s and s[-1] in units:
+        return float(s[:-1]) * units[s[-1]]
+    return float(s)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--system", default="marconi100")
+    ap.add_argument("--scheduler", default="default",
+                    choices=["default", "experimental", "fastsim",
+                             "scheduleflow"])
+    ap.add_argument("--policy", default="replay")
+    ap.add_argument("--backfill", default="none")
+    ap.add_argument("-ff", "--fastforward", default="0", type=str,
+                    help="simulation start offset (s/m/h/d suffix)")
+    ap.add_argument("-t", "--time", default="6h", type=str,
+                    help="simulated duration")
+    ap.add_argument("--jobs", type=int, default=1000)
+    ap.add_argument("--days", type=float, default=None,
+                    help="dataset horizon to generate (days)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=int, default=0,
+                    help="scale the system to N nodes (CPU-friendly)")
+    ap.add_argument("--accounts", action="store_true")
+    ap.add_argument("--accounts-json", default=None)
+    ap.add_argument("--sweep", nargs="*", default=None,
+                    help="policy[:backfill] list to run as one batch")
+    ap.add_argument("-o", "--output", default=None, nargs="?",
+                    const="simulation_results")
+    args = ap.parse_args(argv)
+
+    sys_ = get_system(args.system)
+    if args.scale:
+        sys_ = sys_.scaled(args.scale)
+    t0 = _parse_time(args.fastforward)
+    t1 = t0 + _parse_time(args.time)
+    days = args.days or max((t1 / 86400.0) * 1.25, 0.5)
+    js = loaders.load(args.system, n_jobs=args.jobs, days=days,
+                      seed=args.seed)
+    if args.policy == "ml":
+        model = MLSchedulerModel.fit(js, k=5)
+        attach_scores(js, model)
+    js.assign_prepop_placement(t0, sys_.n_nodes)
+    table = js.to_table()
+
+    accounts = None
+    if args.accounts_json:
+        accounts = acct_mod.load_json(args.accounts_json)
+
+    wall0 = time.perf_counter()
+    if args.scheduler in ("fastsim", "scheduleflow"):
+        sched = ext.FastSimLike(policy=args.policy if args.policy != "replay"
+                                else "fcfs") \
+            if args.scheduler == "fastsim" else ext.ScheduleFlowLike()
+        final, hist = ext.run_sequential_mode(sys_, js, sched, t0, t1) \
+            if args.scheduler == "fastsim" else \
+            ext.run_plugin_mode(sys_, js, sched, t0, t1)[:2]
+        if isinstance(hist, dict):
+            class H:  # plugin mode returns a dict of arrays
+                pass
+            h = H()
+            for k, v in hist.items():
+                setattr(h, k, v)
+            hist = h
+        runs = [((args.policy, "external"), final, hist)]
+    elif args.sweep:
+        specs = []
+        for s in args.sweep:
+            p, _, b = s.partition(":")
+            specs.append((p, b or "none"))
+        scens = [T.Scenario.make(p, b) for p, b in specs]
+        finals, hists = eng.simulate_sweep(sys_, table, scens, t0, t1,
+                                           accounts)
+        import jax
+        runs = [((p, b),
+                 jax.tree_util.tree_map(lambda x, i=i: x[i], finals),
+                 jax.tree_util.tree_map(lambda x, i=i: x[i], hists))
+                for i, (p, b) in enumerate(specs)]
+    else:
+        # single-policy runs take the static fast path (policy/backfill are
+        # compile-time constants; EXPERIMENTS.md §Perf-twin)
+        final, hist = eng.simulate_static(sys_, table, args.policy,
+                                          args.backfill, t0, t1, accounts)
+        runs = [((args.policy, args.backfill), final, hist)]
+    wall = time.perf_counter() - wall0
+
+    for (p, b), final, hist in runs:
+        s = stats_mod.summarize(sys_, table, final, hist)
+        print(f"=== {args.system} policy={p} backfill={b} "
+              f"(sim {t1 - t0:.0f}s in {wall:.1f}s wall, "
+              f"{(t1 - t0) / wall:.0f}x realtime) ===")
+        print(stats_mod.format_stats(s))
+        if args.output:
+            out = pathlib.Path(args.output) / secrets.token_hex(4)
+            out.mkdir(parents=True, exist_ok=True)
+            np.savez(out / "history.npz",
+                     **{k: np.asarray(getattr(hist, k))
+                        for k in vars(hist) if not k.startswith("_")})
+            (out / "stats.out").write_text(stats_mod.format_stats(s))
+            with open(out / "job_history.csv", "w") as f:
+                f.write("job,submit,start,end,nodes,account,state\n")
+                st_ = np.asarray(final.start)
+                en_ = np.asarray(final.end)
+                js_ = np.asarray(final.jstate)
+                for j in range(len(js)):
+                    f.write(f"{j},{js.submit[j]:.0f},{st_[j]:.0f},"
+                            f"{en_[j]:.0f},{js.nodes[j]},{js.account[j]},"
+                            f"{js_[j]}\n")
+            if args.accounts:
+                acct_mod.save_json(final.accounts,
+                                   str(out / "accounts.json"))
+            print(f"output -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""End-to-end LM training driver (deliverable b): trains any zoo arch on
+synthetic token data with the production train_step (pjit shardings on the
+host mesh when single-device, checkpoint/restart, straggler-tolerant logging).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b-smoke \\
+      --steps 100 --batch 8 --seq 128
+
+Fault tolerance: checkpoints every --ckpt-every steps to --ckpt-dir
+(msgpack-free: numpy .npz of the param/opt pytree) and auto-resumes from the
+latest one, so a killed run continues — the same mechanism a multi-pod
+deployment would drive from a coordinator.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import pickle
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import split_tree
+from repro.models.zoo import get_api
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+
+
+def save_ckpt(path: pathlib.Path, step: int, params, opt_state):
+    path.mkdir(parents=True, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten((params, opt_state))
+    np.savez(path / f"ckpt_{step:06d}.npz",
+             *[np.asarray(x) for x in flat])
+    (path / f"ckpt_{step:06d}.treedef").write_bytes(
+        pickle.dumps(treedef))
+    # keep only the 2 most recent
+    ckpts = sorted(path.glob("ckpt_*.npz"))
+    for old in ckpts[:-2]:
+        old.unlink()
+        td = old.with_suffix(".treedef")
+        if td.exists():
+            td.unlink()
+
+
+def load_latest(path: pathlib.Path):
+    ckpts = sorted(path.glob("ckpt_*.npz"))
+    if not ckpts:
+        return None, 0
+    latest = ckpts[-1]
+    step = int(latest.stem.split("_")[1])
+    treedef = pickle.loads(latest.with_suffix(".treedef").read_bytes())
+    data = np.load(latest)
+    flat = [jnp.asarray(data[k]) for k in data.files]
+    params, opt_state = jax.tree_util.tree_unflatten(treedef, flat)
+    return (params, opt_state), step
+
+
+def synthetic_batch(cfg, key, batch, seq):
+    """Learnable synthetic corpus: each row is an affine token progression
+    t_{n+1} = (5 t_n + 7) mod V from a random start — a deterministic
+    next-token function the model can drive loss toward zero on (pure
+    random tokens would leave nothing to learn)."""
+    start = jax.random.randint(key, (batch, 1), 0, cfg.vocab)
+    a, c, V = 5, 7, cfg.vocab
+
+    def body(carry, _):
+        nxt = (carry * a + c) % V
+        return nxt, carry
+    _, toks = jax.lax.scan(body, start[:, 0], None, length=seq)
+    b = {"tokens": toks.T.astype(jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(key, (batch, max(seq // 4, 8),
+                                              cfg.d_model))
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(key, (batch, cfg.frontend_tokens,
+                                               cfg.d_model))
+    return b
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    api = get_api(cfg)
+    mesh = make_host_mesh()
+    ckpt_dir = pathlib.Path(args.ckpt_dir) / args.arch
+
+    with mesh:
+        step_fn, shardings, structs = ts.make_train_step(
+            cfg, mesh, args.seq, args.batch,
+            opt.AdamWConfig(lr=args.lr, warmup=min(20, args.steps // 5),
+                            total_steps=args.steps,
+                            moment_dtype=cfg.moment_dtype))
+        restored, start_step = load_latest(ckpt_dir)
+        key = jax.random.PRNGKey(args.seed)
+        if restored is None:
+            params, _ = split_tree(api.init(key))
+            opt_state = opt.init(opt.AdamWConfig(
+                moment_dtype=cfg.moment_dtype), params)
+        else:
+            params, opt_state = restored
+            print(f"resumed from step {start_step}")
+
+        n_params = sum(int(np.prod(p.shape))
+                       for p in jax.tree_util.tree_leaves(params))
+        print(f"arch={args.arch} params={n_params / 1e6:.1f}M "
+              f"tokens/step={args.batch * args.seq}")
+        t_hist, losses = [], []
+        for step in range(start_step, args.steps):
+            key, sub = jax.random.split(key)
+            batch = synthetic_batch(cfg, sub, args.batch, args.seq)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            t_hist.append(dt)
+            losses.append(loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                tps = args.batch * args.seq / np.mean(t_hist[-10:])
+                print(f"step {step:5d}  loss {loss:8.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):8.3f}  "
+                      f"{tps:,.0f} tok/s  {dt * 1e3:.0f} ms/step",
+                      flush=True)
+            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                save_ckpt(ckpt_dir, step + 1, params, opt_state)
+        if losses:
+            print(f"final loss {losses[-1]:.4f} "
+                  f"(delta {losses[-1] - losses[0]:+.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Random forest: greedy CART fit on the host (numpy), vectorized JAX
+predict (paper §4.4.1 step 2: classify jobs into behavioral clusters from
+pre-submission features).
+
+Hardware adaptation (DESIGN.md §2): scikit-learn is unavailable and tree
+*fitting* is branchy host-side work anyway; *inference* must be traceable so
+the ML-guided policy can score jobs inside the compiled twin. Trees are
+stored as flat arrays (feature, threshold, left/right child, leaf value) and
+evaluated with a bounded ``fori_loop`` descent — O(depth) gathers per sample.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Host-side CART fit.
+# ---------------------------------------------------------------------------
+def _gini(counts: np.ndarray) -> float:
+    n = counts.sum()
+    if n == 0:
+        return 0.0
+    p = counts / n
+    return 1.0 - float((p * p).sum())
+
+
+def _best_split(x: np.ndarray, y: np.ndarray, n_classes: int,
+                feat_ids: np.ndarray, n_thresh: int = 16):
+    best = (None, None, np.inf)
+    n = len(y)
+    for f in feat_ids:
+        vals = x[:, f]
+        qs = np.unique(np.quantile(vals, np.linspace(0.05, 0.95, n_thresh)))
+        for t in qs:
+            left = vals <= t
+            nl = int(left.sum())
+            if nl == 0 or nl == n:
+                continue
+            cl = np.bincount(y[left], minlength=n_classes)
+            cr = np.bincount(y[~left], minlength=n_classes)
+            score = (nl * _gini(cl) + (n - nl) * _gini(cr)) / n
+            if score < best[2]:
+                best = (int(f), float(t), score)
+    return best
+
+
+def _fit_tree(x, y, n_classes, depth, rng, max_features):
+    """Returns flat arrays sized 2**(depth+1): feature(-1=leaf), thresh,
+    leaf class distribution."""
+    n_nodes = 2 ** (depth + 1)
+    feat = np.full(n_nodes, -1, np.int32)
+    thresh = np.zeros(n_nodes, np.float32)
+    leaf = np.zeros((n_nodes, n_classes), np.float32)
+
+    def build(node, idx, d):
+        ys = y[idx]
+        counts = np.bincount(ys, minlength=n_classes).astype(np.float64)
+        leaf[node] = (counts / max(counts.sum(), 1)).astype(np.float32)
+        if d >= depth or len(idx) < 4 or _gini(counts) < 1e-6:
+            return
+        feat_ids = rng.choice(x.shape[1], max_features, replace=False)
+        f, t, score = _best_split(x[idx], ys, n_classes, feat_ids)
+        if f is None:
+            return
+        feat[node] = f
+        thresh[node] = t
+        left = idx[x[idx, f] <= t]
+        right = idx[x[idx, f] > t]
+        if len(left) == 0 or len(right) == 0:
+            feat[node] = -1
+            return
+        build(2 * node + 1, left, d + 1)
+        build(2 * node + 2, right, d + 1)
+
+    build(0, np.arange(len(y)), 0)
+    return feat, thresh, leaf
+
+
+@dataclass
+class RandomForest:
+    feat: jnp.ndarray     # i32[T, M] feature per node (-1 = leaf)
+    thresh: jnp.ndarray   # f32[T, M]
+    leaf: jnp.ndarray     # f32[T, M, C] class distribution per node
+    depth: int
+    n_classes: int
+
+    @staticmethod
+    def fit(x: np.ndarray, y: np.ndarray, n_classes: int, n_trees: int = 16,
+            depth: int = 6, seed: int = 0,
+            max_features: int | None = None) -> "RandomForest":
+        rng = np.random.default_rng(seed)
+        max_features = max_features or max(1, int(np.sqrt(x.shape[1])))
+        feats, threshs, leafs = [], [], []
+        n = len(y)
+        for _ in range(n_trees):
+            boot = rng.integers(0, n, n)  # bagging
+            f, t, l = _fit_tree(x[boot], y[boot], n_classes, depth, rng,
+                                max_features)
+            feats.append(f)
+            threshs.append(t)
+            leafs.append(l)
+        return RandomForest(jnp.asarray(np.stack(feats)),
+                            jnp.asarray(np.stack(threshs)),
+                            jnp.asarray(np.stack(leafs)),
+                            depth, n_classes)
+
+    # -- JAX inference ------------------------------------------------------
+    def predict_proba(self, x: jnp.ndarray) -> jnp.ndarray:
+        """f32[N, D] -> f32[N, C] (mean over trees)."""
+        feat, thresh, leaf, depth = self.feat, self.thresh, self.leaf, self.depth
+
+        def one_tree(f_t, th_t, lf_t):
+            def descend(xi):
+                def body(_, node):
+                    fid = f_t[node]
+                    is_leaf = fid < 0
+                    go_left = xi[jnp.maximum(fid, 0)] <= th_t[node]
+                    nxt = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
+                    return jnp.where(is_leaf, node, nxt)
+                node = jax.lax.fori_loop(0, depth + 1, body, jnp.int32(0))
+                return lf_t[node]
+            return jax.vmap(descend)(x)
+
+        probs = jax.vmap(one_tree)(feat, thresh, leaf)  # [T, N, C]
+        return probs.mean(0)
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.argmax(self.predict_proba(x), axis=-1)

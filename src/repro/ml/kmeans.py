@@ -1,0 +1,51 @@
+"""K-means clustering in JAX (paper §4.4.1 step 1: partition historical jobs
+into behavioral clusters from static + dynamic features)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def fit(x: jnp.ndarray, k: int, iters: int = 50, seed: int = 0):
+    """Lloyd's algorithm. x: f32[N, D] (standardized). Returns (centers[k,D],
+    labels[N], inertia)."""
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    # k-means++-ish init: random distinct points
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    centers0 = x[idx]
+
+    def assign(centers):
+        d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+        return jnp.argmin(d2, axis=1), d2
+
+    def body(_, centers):
+        labels, _ = assign(centers)
+        one_hot = jax.nn.one_hot(labels, k, dtype=x.dtype)  # [N, k]
+        counts = one_hot.sum(0)  # [k]
+        sums = one_hot.T @ x     # [k, D]
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep empty clusters where they were
+        return jnp.where(counts[:, None] > 0, new, centers)
+
+    centers = jax.lax.fori_loop(0, iters, body, centers0)
+    labels, d2 = assign(centers)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return centers, labels, inertia
+
+
+@jax.jit
+def predict(centers: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1)
+
+
+def standardize(x, mean=None, std=None):
+    """Return (x_std, mean, std); pass stored moments at inference time."""
+    if mean is None:
+        mean = x.mean(0)
+        std = x.std(0) + 1e-6
+    return (x - mean) / std, mean, std

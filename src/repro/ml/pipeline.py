@@ -1,0 +1,110 @@
+"""End-to-end ML-guided scheduling pipeline (paper §4.4, Fig. 9).
+
+Training phase:
+  (1) *Clustering*  — K-means over behavioral features (summary statistics of
+      the noisy time-series, per §4.4.3) + static features.
+  (2) *Classification* — random forest from pre-submission features to the
+      cluster label (dynamic features are unavailable at submit time).
+  (3) *Prediction* — per-cluster ridge regressors from pre-submission
+      features to target metrics (runtime, avg power, energy).
+
+Inference phase: normalize statics -> predict cluster -> invoke that
+cluster's regressor -> rank via S(X) (repro.ml.scoring). The resulting score
+feeds the twin's ``ml`` policy (higher score = scheduled earlier).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.datasets.base import JobSet
+from repro.ml import kmeans
+from repro.ml.forest import RandomForest
+from repro.ml.scoring import score as s_score
+
+TARGETS = ("wall", "avg_power", "energy")
+
+
+def _targets(js: JobSet) -> np.ndarray:
+    avg_pw = js.power_prof.mean(1)
+    energy = avg_pw * js.nodes * js.wall
+    return np.stack([js.wall, avg_pw, energy], 1).astype(np.float64)
+
+
+def _ridge(x: np.ndarray, y: np.ndarray, lam: float = 1e-2) -> np.ndarray:
+    """Closed-form ridge with bias: returns W [D+1, T]."""
+    xb = np.concatenate([x, np.ones((len(x), 1))], 1)
+    d = xb.shape[1]
+    w = np.linalg.solve(xb.T @ xb + lam * np.eye(d), xb.T @ y)
+    return w
+
+
+@dataclass
+class MLSchedulerModel:
+    centers: jnp.ndarray          # [k, Db] cluster centers (behavior space)
+    clf: RandomForest             # presubmit features -> cluster
+    reg_w: jnp.ndarray            # [k, D+1, T] per-cluster ridge weights
+    x_mean: jnp.ndarray
+    x_std: jnp.ndarray
+    b_mean: jnp.ndarray
+    b_std: jnp.ndarray
+    alpha: jnp.ndarray            # [K_score] scoring coefficients
+
+    # ------------------------------------------------------------------ fit
+    @staticmethod
+    def fit(train: JobSet, k: int = 5, n_trees: int = 12, depth: int = 6,
+            alpha: np.ndarray | None = None, seed: int = 0
+            ) -> "MLSchedulerModel":
+        xs = train.presubmit_features()
+        xb = train.behavior_features()
+        xs_n, x_mean, x_std = kmeans.standardize(jnp.asarray(xs))
+        xb_n, b_mean, b_std = kmeans.standardize(jnp.asarray(xb))
+
+        centers, labels, _ = kmeans.fit(xb_n, k, seed=seed)
+        labels_np = np.asarray(labels)
+
+        clf = RandomForest.fit(np.asarray(xs_n), labels_np, k,
+                               n_trees=n_trees, depth=depth, seed=seed)
+
+        y = _targets(train)
+        reg = np.zeros((k, xs.shape[1] + 1, y.shape[1]))
+        for c in range(k):
+            m = labels_np == c
+            if m.sum() >= 4:
+                reg[c] = _ridge(np.asarray(xs_n)[m], y[m])
+            else:
+                reg[c] = _ridge(np.asarray(xs_n), y)
+
+        if alpha is None:
+            # default trade-off: favor (predicted) short, low-power, small
+            # jobs under load — the paper's observation in Fig. 10(a)
+            alpha = np.array([1.0, 1.0, 1.0, 0.5], np.float32)
+        return MLSchedulerModel(centers, clf, jnp.asarray(reg),
+                                x_mean, x_std,
+                                b_mean, b_std, jnp.asarray(alpha))
+
+    # ------------------------------------------------------------- inference
+    def predict_metrics(self, js: JobSet):
+        """Returns (cluster i32[N], predicted [N, T])."""
+        xs = jnp.asarray(js.presubmit_features())
+        xs_n = (xs - self.x_mean) / self.x_std
+        cluster = self.clf.predict(xs_n)
+        xb = jnp.concatenate([xs_n, jnp.ones((xs_n.shape[0], 1))], 1)
+        w = self.reg_w[cluster]                     # [N, D+1, T]
+        pred = jnp.einsum("nd,ndt->nt", xb, w)
+        return cluster, pred
+
+    def score(self, js: JobSet) -> np.ndarray:
+        """Ranking score per job (higher = scheduled earlier)."""
+        _, pred = self.predict_metrics(js)
+        # features for S(X): predicted runtime, power, energy + nodes
+        feats = jnp.concatenate(
+            [pred, jnp.asarray(js.nodes, jnp.float32)[:, None]], axis=1)
+        return np.asarray(s_score(feats, self.alpha))
+
+
+def attach_scores(js: JobSet, model: MLSchedulerModel) -> JobSet:
+    js.score = model.score(js)
+    return js

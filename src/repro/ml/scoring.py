@@ -1,0 +1,19 @@
+"""Job ranking score (paper §4.4.2):
+
+    S(X_i) = sum_j alpha_j * exp( 1 / sqrt(X_i^j + 1) )
+
+"The exponential function captures fine-grained differences, allowing
+prioritization based on predicted system-level impact. Unlike single-
+objective schedulers, this supports trade-offs across throughput, wait time,
+turnaround, and energy."
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score(features: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """features: f32[N, K] non-negative predicted metrics + static features;
+    alpha: f32[K] coefficients. Returns f32[N]."""
+    x = jnp.maximum(features, 0.0)
+    return jnp.sum(alpha * jnp.exp(1.0 / jnp.sqrt(x + 1.0)), axis=-1)

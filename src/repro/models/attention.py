@@ -1,0 +1,175 @@
+"""Grouped-query attention with RoPE, optional sliding window (Mixtral),
+optional QKV bias (Qwen2.5), and a KV cache for serving.
+
+Default path is pure-jnp einsum attention (fuses well under XLA and lowers
+on every backend, which the 512-device dry-run requires). On TPU runtime the
+Pallas flash kernel (repro.kernels.flash_attention) can be swapped in via
+``use_flash``; both are validated against each other in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.common import ArchConfig, param
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # [B, Smax, KV, hd]
+    v: jnp.ndarray       # [B, Smax, KV, hd]
+
+
+def init(key, cfg: ArchConfig, layer_prefix: str = ""):
+    """Weights use the *padded* head counts (cfg.h_pad / cfg.kv_pad); wo
+    rows for padded heads are zeroed so the padded model computes exactly
+    the spec model's function at init (EXPERIMENTS.md §Perf iter 1)."""
+    hd, H, KV, D = cfg.hd, cfg.h_pad, cfg.kv_pad, cfg.d_model
+    ks = jax.random.split(key, 5)
+    wo = param(ks[3], (H, hd, D), ("heads", "head_dim", "embed"),
+               cfg.param_dtype)
+    if H > cfg.n_heads:
+        wo.value = wo.value.at[cfg.n_heads:].set(0.0)
+    p = {
+        "wq": param(ks[0], (D, H, hd), ("embed", "heads", "head_dim"),
+                    cfg.param_dtype),
+        "wk": param(ks[1], (D, KV, hd), ("embed", "kv_heads", "head_dim"),
+                    cfg.param_dtype),
+        "wv": param(ks[2], (D, KV, hd), ("embed", "kv_heads", "head_dim"),
+                    cfg.param_dtype),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(ks[4], (H, hd), ("heads", "head_dim"),
+                        cfg.param_dtype, init="zeros")
+        p["bk"] = param(ks[4], (KV, hd), ("kv_heads", "head_dim"),
+                        cfg.param_dtype, init="zeros")
+        p["bv"] = param(ks[4], (KV, hd), ("kv_heads", "head_dim"),
+                        cfg.param_dtype, init="zeros")
+    return p
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cfg.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(cfg.dtype)
+        k = k + p["bk"].astype(cfg.dtype)
+        v = v + p["bv"].astype(cfg.dtype)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q: [B,S,H,hd]; k/v: [B,T,KV,hd]; mask broadcastable to [B,H,S,T].
+
+    GQA via per-head kv gather (head h uses kv h // G): the Megatron-style
+    TP formulation. The naive grouped reshape [B,S,H,hd]->[B,S,KV,G,hd]
+    *breaks* the head sharding whenever KV doesn't divide the model axis
+    (XLA reshards and replicates the quadratic attention) — measured 5-13x
+    redundant compute before this change (EXPERIMENTS.md §Perf iter 2).
+    The gather keeps q/logits/out sharded by H end-to-end; for MHA it is an
+    identity gather that XLA elides.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g_spec = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    if g_spec == 1 and KV == H:
+        # MHA: skip the identity gather — XLA does not recognize it on a
+        # model-sharded kv cache and would all-gather ~100 GB per decode
+        # step (EXPERIMENTS.md §Perf iter 6)
+        kh, vh = k, v
+    else:
+        head_kv = jnp.arange(H) // g_spec       # [H]
+        kh = jnp.take(k, head_kv, axis=2)       # [B,T,H,hd]
+        vh = jnp.take(v, head_kv, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, kh).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    m = mask
+    while m.ndim > 4:
+        m = m.squeeze(1)
+    logits = jnp.where(m, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cfg.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, vh)
+
+
+def causal_mask(S: int, T: int, window: int = 0, offset: int = 0):
+    """[S, T] bool; query i attends key j iff j <= i+offset (and within the
+    sliding window when window > 0)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > (qi - window)
+    return m
+
+
+def forward_train(p, x, cfg: ArchConfig, bidirectional: bool = False):
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    if bidirectional:
+        mask = jnp.ones((S, S), bool)
+    else:
+        mask = causal_mask(S, S, cfg.sliding_window)
+    out = _sdpa(q, k, v, mask[None, None], cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+
+
+def forward_cross(p, x, kv_src, cfg: ArchConfig):
+    """Cross attention (enc-dec): queries from x, keys/values from kv_src."""
+    B, S, D = x.shape
+    T = kv_src.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(cfg.dtype))
+    mask = jnp.ones((S, T), bool)
+    out = _sdpa(q, k, v, mask[None, None], cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Serving path.
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> KVCache:
+    dt = dtype or cfg.dtype
+    shape = (batch, max_len, cfg.kv_pad, cfg.hd)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def forward_prefill(p, x, cfg: ArchConfig, max_len: int):
+    """Prefill S tokens; returns (out, cache padded to max_len)."""
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    mask = causal_mask(S, S, cfg.sliding_window)
+    out = _sdpa(q, k, v, mask[None, None], cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    pad = max_len - S
+    cache = KVCache(
+        jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    return out, cache
+
+
+def forward_decode(p, x, cache: KVCache, pos: jnp.ndarray, cfg: ArchConfig):
+    """One-token decode. x: [B, 1, D]; pos: [] current position (same for the
+    whole batch — standard static-shape serving). Returns (out, new_cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v, pos, axis=1)
+    T = k_cache.shape[1]
+    kj = jnp.arange(T)[None, :]
+    m = kj <= pos
+    if cfg.sliding_window > 0:
+        m &= kj > (pos - cfg.sliding_window)
+    out = _sdpa(q, k_cache, v_cache, m[:, None, None, :], cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    return out, KVCache(k_cache, v_cache)

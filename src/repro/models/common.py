@@ -1,0 +1,236 @@
+"""Shared model-zoo plumbing: arch config, norms, RoPE, embeddings, init.
+
+All models are functional: ``init(cfg, key) -> params`` pytrees and pure
+forward functions. Layer parameters are *stacked* along a leading layer axis
+and bodies run under ``lax.scan`` so the lowered HLO stays small (critical
+for 512-device dry-run compiles) and remat policies apply uniformly.
+
+Logical sharding axes are attached to every parameter via
+``jax.sharding.PartitionSpec``-compatible *logical names* resolved by
+repro.parallel.sharding (DP/FSDP/TP/EP rules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Architecture config (one per assigned arch; see repro.configs).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    # attention
+    rope_theta: float = 1.0e6
+    sliding_window: int = 0   # 0 = full causal attention
+    qkv_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1        # every k-th layer is MoE (llama4 interleaves)
+    capacity_factor: float = 1.25
+    moe_group: int = 1024     # router group size (tokens)
+    # SSM (rwkv6 / mamba2)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    conv_kernel: int = 4
+    # TP head padding (beyond-paper optimization, EXPERIMENTS.md §Perf):
+    # pad q heads to this count (0 = off) so attention shards over the
+    # 16-way model axis when the spec head count doesn't divide it. Padded
+    # wo rows are zero-initialized, so the padded model computes exactly the
+    # same function at init; kv heads pad to ceil(h_pad / group).
+    pad_heads_to: int = 0
+    # hybrid (zamba2): a shared attention block every k SSM layers
+    shared_attn_every: int = 0
+    # encoder-decoder
+    n_enc_layers: int = 0
+    # modality frontend stub (vlm/audio): precomputed embeddings
+    frontend: str = "none"    # none | vit | audio
+    frontend_tokens: int = 256
+    # numerics / training
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = jnp.float32   # parameter storage dtype
+    moment_dtype: Any = jnp.float32  # optimizer moment dtype
+    remat: str = "full"              # none | full | dots
+    # scan-over-layers unroll factor. 1 = rolled (fast compile; XLA cost
+    # analysis counts the body once). The dry-run roofline pass lowers with
+    # full unroll so HLO_FLOPs/bytes are exact.
+    scan_unroll: int | bool = 1
+    # which shapes are meaningful for this arch (None = all)
+    skip_shapes: Tuple[str, ...] = ()
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def h_pad(self) -> int:
+        """Padded q-head count used by attention weights/compute."""
+        return max(self.pad_heads_to, self.n_heads) or self.n_heads
+
+    @property
+    def kv_pad(self) -> int:
+        """Padded kv-head count: ceil(h_pad / group); real heads keep their
+        original kv mapping (head h -> kv h // G)."""
+        g = max(self.n_heads // max(self.n_kv_heads, 1), 1)
+        return -(-self.h_pad // g)
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and (i % self.moe_every == self.moe_every - 1)
+
+    @property
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        D, F, V, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        H, KV = self.n_heads, self.n_kv_heads
+        attn = D * (H * hd) + 2 * D * (KV * hd) + (H * hd) * D
+        dense_mlp = 3 * D * F
+        moe_mlp = self.n_experts * 3 * D * F + D * self.n_experts
+        if self.family in ("ssm",):
+            # rwkv6: 6 square projections (r,k,v,w,g,o) + channel mix (3.5x)
+            per_layer = 6 * D * D + int(2 * D * F)
+            return self.n_layers * per_layer + 2 * V * D
+        if self.family == "hybrid":
+            d_inner = 2 * D
+            per_ssm = 2 * D * d_inner + d_inner * D + \
+                d_inner * (2 * self.ssm_state)
+            n_shared = self.n_layers // max(self.shared_attn_every, 1)
+            shared = attn + dense_mlp
+            return self.n_layers * per_ssm + shared + 2 * V * D + n_shared * 0
+        n_moe = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        n_dense = self.n_layers - n_moe
+        total = self.n_layers * attn + n_dense * dense_mlp + n_moe * moe_mlp
+        enc = self.n_enc_layers * (attn + dense_mlp)
+        dec_cross = self.n_enc_layers and self.n_layers * attn  # cross-attn
+        return total + enc + (dec_cross or 0) + 2 * V * D
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k experts)."""
+        if self.n_experts == 0:
+            return self.param_count
+        D, F = self.d_model, self.d_ff
+        moe_full = self.n_experts * 3 * D * F
+        moe_active = max(self.top_k, 1) * 3 * D * F
+        n_moe = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        return self.param_count - n_moe * (moe_full - moe_active)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis annotated parameters.
+# ---------------------------------------------------------------------------
+class Annotated:
+    """Wrapper used only at init time: array + logical axis names.
+
+    Registered as a pytree node (axes are static aux data) so ``vmap`` over
+    layer init stacks values while keeping the per-layer logical axes; the
+    extra leading 'layers' axis is reconciled in
+    ``repro.parallel.sharding.spec_for`` (padded with None).
+    """
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = axes
+
+
+jax.tree_util.register_pytree_node(
+    Annotated,
+    lambda a: ((a.value,), a.axes),
+    lambda axes, children: Annotated(children[0], axes))
+
+
+def param(key, shape, axes, dtype, scale: float | None = None,
+          init: str = "normal"):
+    """Initialize one parameter with logical axes metadata."""
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        v = jax.random.normal(key, shape, dtype) * s
+    return Annotated(v, axes)
+
+
+def split_tree(params):
+    """Annotated tree -> (value tree, axes tree)."""
+    vals = jax.tree_util.tree_map(
+        lambda a: a.value, params, is_leaf=lambda x: isinstance(x, Annotated))
+    axes = jax.tree_util.tree_map(
+        lambda a: a.axes, params, is_leaf=lambda x: isinstance(x, Annotated))
+    return vals, axes
+
+
+# ---------------------------------------------------------------------------
+# Layers.
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                         # [..., S, 1, hd/2]
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": param(k1, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                     cfg.param_dtype, scale=1.0),
+        "out": param(k2, (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                     cfg.param_dtype),
+        "ln_f": param(k1, (cfg.d_model,), ("embed",), cfg.param_dtype,
+                      init="zeros"),
+    }
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig):
+    return params["tok"][tokens].astype(cfg.dtype)
+
+
+def lm_head(params, x, cfg: ArchConfig):
+    x = rmsnorm(x, params["ln_f"])
+    return jnp.einsum("...d,dv->...v", x,
+                      params["out"].astype(cfg.dtype)).astype(jnp.float32)
+
+
+def make_remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full

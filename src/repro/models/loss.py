@@ -1,0 +1,17 @@
+"""LM losses: next-token cross entropy (f32 logits) + z-loss + MoE aux."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
+                    z_loss: float = 1e-4) -> jnp.ndarray:
+    """logits: f32[B, S, V]; tokens: i32[B, S]. Shifted CE, mean over tokens."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    true = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    ce = lse - true
+    zl = z_loss * jnp.square(lse)
+    return jnp.mean(ce + zl)

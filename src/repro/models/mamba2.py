@@ -1,0 +1,338 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid (arXiv:2411.15242):
+Mamba2 backbone with a *shared* transformer block invoked every
+``shared_attn_every`` SSM layers (weights shared across invocations; the
+per-invocation LoRA adapters of the real model are omitted — DESIGN.md §2).
+
+SSD recurrence per head (state S in R^{P x N}, scalar decay a_t per head):
+    S_t = a_t S_{t-1} + (dt_t x_t) (x) B_t
+    y_t = S_t C_t + D x_t
+Chunked training form mirrors repro.kernels.mamba2_ssd.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd import ops as ssd_ops
+from repro.models import attention as attn
+from repro.models import common as C
+from repro.models import mlp
+from repro.models.common import ArchConfig, param
+from repro.parallel.sharding import hint_axes, hint_batch
+
+P_HEAD = 64  # mamba2 head dim
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // P_HEAD
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_ssm_layer(key, cfg: ArchConfig):
+    D = cfg.d_model
+    d_inner, H, N = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    conv_ch = d_inner + 2 * N
+    return {
+        "ln": param(ks[0], (D,), ("embed",), pd, init="zeros"),
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": param(ks[1], (D, 2 * d_inner + 2 * N + H),
+                         ("embed", "mlp"), pd),
+        "conv_w": param(ks[2], (cfg.conv_kernel, conv_ch),
+                        ("unsharded", "mlp"), pd, scale=0.5),
+        "conv_b": param(ks[2], (conv_ch,), ("mlp",), pd, init="zeros"),
+        "A_log": param(ks[3], (H,), ("unsharded",), pd, init="zeros"),
+        "dt_bias": param(ks[4], (H,), ("unsharded",), pd, init="zeros"),
+        "D": param(ks[3], (H,), ("unsharded",), pd, init="ones"),
+        "out_proj": param(ks[5], (d_inner, D), ("mlp", "embed"), pd),
+    }
+
+
+def init_shared_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": param(k3, (cfg.d_model,), ("embed",), cfg.param_dtype,
+                     init="zeros"),
+        "ln2": param(k3, (cfg.d_model,), ("embed",), cfg.param_dtype,
+                     init="zeros"),
+        "attn": attn.init(k1, cfg),
+        "mlp": mlp.init_dense(k2, cfg),
+    }
+
+
+def init(key, cfg: ArchConfig):
+    kb, ks, ke = jax.random.split(key, 3)
+    n_groups, tail = divmod(cfg.n_layers, max(cfg.shared_attn_every, 1))
+    keys = jax.random.split(kb, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_ssm_layer(k, cfg))(keys)
+    return {"blocks": layers,
+            "shared": init_shared_block(ks, cfg),
+            "embed": C.embed_init(ke, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block forward (training).
+# ---------------------------------------------------------------------------
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    d_inner, H, N = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    B = zxbcdt[..., 2 * d_inner:2 * d_inner + N]
+    Cc = zxbcdt[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, x, B, Cc, dt
+
+
+def _causal_conv(x, w, b, cfg: ArchConfig):
+    """Depthwise causal conv over time. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssm_layer(lp, xres, cfg: ArchConfig):
+    xres = hint_batch(xres)
+    Bsz, S, D = xres.shape
+    d_inner, H, N = _dims(cfg)
+    h = C.rmsnorm(xres, lp["ln"])
+    zxbcdt = jnp.einsum("bsd,de->bse", h, lp["in_proj"].astype(cfg.dtype))
+    z, x, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
+    xbc = _causal_conv(xbc, lp["conv_w"].astype(cfg.dtype),
+                       lp["conv_b"].astype(cfg.dtype), cfg)
+    x = xbc[..., :d_inner]
+    Bc = xbc[..., d_inner:d_inner + N]
+    Cc = xbc[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    a = jnp.exp(-jnp.exp(lp["A_log"].astype(jnp.float32)) * dt)  # decay/head
+
+    # pin SSD-scan layouts: heads stay TP-sharded, B/C explicitly
+    # replicated — otherwise the partitioner resharding per chunk shows up
+    # as ~1 TB of collective-permutes (§Perf iter 5)
+    xh = hint_axes(x.reshape(Bsz, S, H, P_HEAD),
+                   ("batch", None, "model", None))
+    dt = hint_axes(dt, ("batch", None, "model"))
+    a = hint_axes(a, ("batch", None, "model"))
+    Bc = hint_axes(Bc, ("batch", None, None))
+    Cc = hint_axes(Cc, ("batch", None, None))
+    y = ssd_ops.ssd(xh, dt, a, Bc, Cc)                        # [B,S,H,P]
+    y = y + lp["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(cfg.dtype) * jax.nn.silu(z)
+    return xres + jnp.einsum("bse,ed->bsd", y,
+                             lp["out_proj"].astype(cfg.dtype))
+
+
+def _shared_block(sp, x, cfg: ArchConfig):
+    h = C.rmsnorm(x, sp["ln1"])
+    x = x + attn.forward_train(sp["attn"], h, cfg)
+    h = C.rmsnorm(x, sp["ln2"])
+    return x + mlp.forward_dense(sp["mlp"], h, cfg)
+
+
+def forward(params, tokens, cfg: ArchConfig, **_) -> jnp.ndarray:
+    x = C.embed_tokens(params["embed"], tokens, cfg)
+    every = max(cfg.shared_attn_every, 1)
+    n_groups, tail = divmod(cfg.n_layers, every)
+    blocks = params["blocks"]
+    grouped = jax.tree_util.tree_map(
+        lambda p: p[:n_groups * every].reshape((n_groups, every) + p.shape[1:]),
+        blocks)
+    tail_p = jax.tree_util.tree_map(lambda p: p[n_groups * every:], blocks)
+
+    ssm_body = C.make_remat(lambda xx, lp: _ssm_layer(lp, xx, cfg), cfg.remat)
+
+    def group_fn(xx, gp):
+        def inner(xx2, lp):
+            return ssm_body(xx2, lp), None
+        xx, _ = jax.lax.scan(inner, xx, gp, unroll=cfg.scan_unroll)
+        xx = _shared_block(params["shared"], xx, cfg)
+        return xx, None
+
+    x, _ = jax.lax.scan(group_fn, x, grouped, unroll=cfg.scan_unroll)
+    if tail:
+        def inner(xx2, lp):
+            return ssm_body(xx2, lp), None
+        x, _ = jax.lax.scan(inner, x, tail_p, unroll=cfg.scan_unroll)
+    return C.lm_head(params["embed"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+class MambaState(NamedTuple):
+    ssd: jnp.ndarray        # [L, B, H, P, N]
+    conv: jnp.ndarray       # [L, B, K-1, conv_ch]
+    shared_caches: Any      # list-stacked KVCache [n_shared, ...]
+    pos: jnp.ndarray
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> MambaState:
+    d_inner, H, N = _dims(cfg)
+    L = cfg.n_layers
+    conv_ch = d_inner + 2 * N
+    every = max(cfg.shared_attn_every, 1)
+    n_shared = cfg.n_layers // every
+    kv = attn.init_cache(cfg, batch, max_len)
+    shared = jax.tree_util.tree_map(
+        lambda z: jnp.broadcast_to(z, (n_shared,) + z.shape), kv)
+    return MambaState(
+        jnp.zeros((L, batch, H, P_HEAD, N), jnp.float32),
+        jnp.zeros((L, batch, cfg.conv_kernel - 1, conv_ch), cfg.dtype),
+        shared, jnp.int32(0))
+
+
+def _ssm_step(lp, x1, ssd_s, conv_s, cfg: ArchConfig):
+    """Single-token step. x1: [B, D]."""
+    Bsz, D = x1.shape
+    d_inner, H, N = _dims(cfg)
+    h = C.rmsnorm(x1, lp["ln"])
+    zxbcdt = h @ lp["in_proj"].astype(cfg.dtype)
+    z, x, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)          # [B, conv_ch]
+    hist = jnp.concatenate([conv_s, xbc[:, None, :]], axis=1)  # [B,K,ch]
+    w = lp["conv_w"].astype(cfg.dtype)
+    out = jnp.einsum("bkc,kc->bc", hist, w) + lp["conv_b"].astype(cfg.dtype)
+    xbc = jax.nn.silu(out)
+    x = xbc[..., :d_inner]
+    Bc = xbc[..., d_inner:d_inner + N]
+    Cc = xbc[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))       # [B,H]
+    a = jnp.exp(-jnp.exp(lp["A_log"].astype(jnp.float32)) * dt)
+    xh = x.reshape(Bsz, H, P_HEAD).astype(jnp.float32)
+    dbx = (dt[..., None] * xh)                                   # [B,H,P]
+    ssd_new = a[..., None, None] * ssd_s + \
+        dbx[..., :, None] * Bc.astype(jnp.float32)[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", ssd_new, Cc.astype(jnp.float32))
+    y = y + lp["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, d_inner).astype(cfg.dtype) * jax.nn.silu(z)
+    x1 = x1 + y @ lp["out_proj"].astype(cfg.dtype)
+    return x1, ssd_new, hist[:, 1:, :]
+
+
+def _ssm_layer_with_state(lp, xres, cfg: ArchConfig):
+    """Like _ssm_layer but also returns (ssd_state, conv_state)."""
+    Bsz, S, D = xres.shape
+    d_inner, H, N = _dims(cfg)
+    h = C.rmsnorm(xres, lp["ln"])
+    zxbcdt = jnp.einsum("bsd,de->bse", h, lp["in_proj"].astype(cfg.dtype))
+    z, x, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xbc_raw = jnp.concatenate([x, Bc, Cc], axis=-1)
+    conv_state = xbc_raw[:, -(cfg.conv_kernel - 1):, :]
+    xbc = _causal_conv(xbc_raw, lp["conv_w"].astype(cfg.dtype),
+                       lp["conv_b"].astype(cfg.dtype), cfg)
+    x = xbc[..., :d_inner]
+    Bc = xbc[..., d_inner:d_inner + N]
+    Cc = xbc[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(lp["A_log"].astype(jnp.float32)) * dt)
+    xh = x.reshape(Bsz, S, H, P_HEAD)
+    y, ssd_state = ssd_ops.ssd_chunked(xh, dt, a, Bc, Cc)
+    y = y + lp["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(cfg.dtype) * jax.nn.silu(z)
+    out = xres + jnp.einsum("bse,ed->bsd", y,
+                            lp["out_proj"].astype(cfg.dtype))
+    return out, ssd_state, conv_state
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int):
+    """Prefill S tokens, returning (last logits, MambaState)."""
+    B, S = tokens.shape
+    x = C.embed_tokens(params["embed"], tokens, cfg)
+    every = max(cfg.shared_attn_every, 1)
+    n_groups, tail = divmod(cfg.n_layers, every)
+    blocks = params["blocks"]
+    grouped = jax.tree_util.tree_map(
+        lambda p: p[:n_groups * every].reshape((n_groups, every) +
+                                               p.shape[1:]), blocks)
+    tail_p = jax.tree_util.tree_map(lambda p: p[n_groups * every:], blocks)
+
+    def ssm_scan(xx, lp):
+        xx, ssd_s, conv_s = _ssm_layer_with_state(lp, xx, cfg)
+        return xx, (ssd_s, conv_s)
+
+    def group_fn(xx, gp):
+        xx, states = jax.lax.scan(ssm_scan, xx, gp,
+                                  unroll=cfg.scan_unroll)
+        h = C.rmsnorm(xx, params["shared"]["ln1"])
+        a, cache = attn.forward_prefill(params["shared"]["attn"], h, cfg,
+                                        max_len)
+        xx = xx + a
+        h = C.rmsnorm(xx, params["shared"]["ln2"])
+        xx = xx + mlp.forward_dense(params["shared"]["mlp"], h, cfg)
+        return xx, (states, cache)
+
+    x, ((ssd_g, conv_g), caches) = jax.lax.scan(group_fn, x, grouped,
+                                                unroll=cfg.scan_unroll)
+    ssd_all = ssd_g.reshape((n_groups * every,) + ssd_g.shape[2:])
+    conv_all = conv_g.reshape((n_groups * every,) + conv_g.shape[2:])
+    if tail:
+        x, (ssd_t, conv_t) = jax.lax.scan(ssm_scan, x, tail_p,
+                                          unroll=cfg.scan_unroll)
+        ssd_all = jnp.concatenate([ssd_all, ssd_t])
+        conv_all = jnp.concatenate([conv_all, conv_t])
+    logits = C.lm_head(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, MambaState(ssd_all, conv_all, caches, jnp.int32(S))
+
+
+def decode_step(params, token, state: MambaState, cfg: ArchConfig):
+    x = C.embed_tokens(params["embed"], token[:, None], cfg)[:, 0]
+    every = max(cfg.shared_attn_every, 1)
+    n_groups = cfg.n_layers // every
+    tail = cfg.n_layers - n_groups * every
+    blocks = params["blocks"]
+
+    def regroup(p):
+        return p[:n_groups * every].reshape((n_groups, every) + p.shape[1:])
+
+    grouped = jax.tree_util.tree_map(regroup, blocks)
+    g_ssd = regroup(state.ssd)
+    g_conv = regroup(state.conv)
+    tail_p = jax.tree_util.tree_map(lambda p: p[n_groups * every:], blocks)
+    t_ssd = state.ssd[n_groups * every:]
+    t_conv = state.conv[n_groups * every:]
+
+    def ssm_scan(xx, inp):
+        lp, ssd_s, conv_s = inp
+        xx, ssd_new, conv_new = _ssm_step(lp, xx, ssd_s, conv_s, cfg)
+        return xx, (ssd_new, conv_new)
+
+    def group_fn(xx, inp):
+        gp, ssd_g, conv_g, cache = inp
+        xx, (ssd_new, conv_new) = jax.lax.scan(ssm_scan, xx,
+                                               (gp, ssd_g, conv_g),
+                                               unroll=cfg.scan_unroll)
+        h = C.rmsnorm(xx, params["shared"]["ln1"])
+        a, new_cache = attn.forward_decode(params["shared"]["attn"],
+                                           h[:, None, :], cache, state.pos,
+                                           cfg)
+        xx = xx + a[:, 0]
+        h = C.rmsnorm(xx, params["shared"]["ln2"])
+        xx = xx + mlp.forward_dense(params["shared"]["mlp"], h[:, None, :],
+                                    cfg)[:, 0]
+        return xx, (ssd_new, conv_new, new_cache)
+
+    x, (ssd_g, conv_g, caches) = jax.lax.scan(
+        group_fn, x, (grouped, g_ssd, g_conv, state.shared_caches),
+        unroll=cfg.scan_unroll)
+    ssd_new = ssd_g.reshape((n_groups * every,) + ssd_g.shape[2:])
+    conv_new = conv_g.reshape((n_groups * every,) + conv_g.shape[2:])
+    if tail:
+        x, (ssd_t, conv_t) = jax.lax.scan(ssm_scan, x,
+                                          (tail_p, t_ssd, t_conv),
+                                          unroll=cfg.scan_unroll)
+        ssd_new = jnp.concatenate([ssd_new, ssd_t])
+        conv_new = jnp.concatenate([conv_new, conv_t])
+
+    logits = C.lm_head(params["embed"], x[:, None], cfg)[:, 0]
+    return logits, MambaState(ssd_new, conv_new, caches, state.pos + 1)

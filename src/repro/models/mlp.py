@@ -1,0 +1,134 @@
+"""Feed-forward layers: dense SwiGLU and grouped top-k MoE (GShard-style
+dispatch with capacity, einsum formulation).
+
+MoE design (see DESIGN.md): tokens are routed in *groups* of ``moe_group``
+tokens so the dispatch/combine tensors stay VMEM/HBM-friendly:
+[G, Sg, E, C] with C = ceil(top_k * Sg / E * capacity_factor). Expert
+parallelism shards the expert axis over the ``model`` mesh axis when the
+expert count divides it (llama4: 128 experts), and falls back to intra-expert
+tensor parallelism (d_ff over ``model``) otherwise (mixtral: 8 experts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, param
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU.
+# ---------------------------------------------------------------------------
+def init_dense(key, cfg: ArchConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": param(ks[0], (D, F), ("embed", "mlp"), cfg.param_dtype),
+        "w_up": param(ks[1], (D, F), ("embed", "mlp"), cfg.param_dtype),
+        "w_down": param(ks[2], (F, D), ("mlp", "embed"), cfg.param_dtype),
+    }
+
+
+def forward_dense(p, x, cfg: ArchConfig):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cfg.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cfg.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts.
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ArchConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": param(ks[0], (D, E), ("embed", "unsharded"),
+                        cfg.param_dtype),
+        "w_gate": param(ks[1], (E, D, F), ("expert", "embed", "mlp"),
+                        cfg.param_dtype),
+        "w_up": param(ks[2], (E, D, F), ("expert", "embed", "mlp"),
+                      cfg.param_dtype),
+        "w_down": param(ks[3], (E, F, D), ("expert", "mlp", "embed"),
+                        cfg.param_dtype),
+    }
+
+
+def _capacity(cfg: ArchConfig, sg: int) -> int:
+    c = int(cfg.top_k * sg * cfg.capacity_factor / cfg.n_experts) + 1
+    return min(max(c, cfg.top_k), sg)
+
+
+def route_topk(logits: jnp.ndarray, cfg: ArchConfig, capacity: int):
+    """GShard-style dispatch. logits: [G, Sg, E].
+
+    Returns (dispatch [G,Sg,E,C] one-hot, combine [G,Sg,E,C] gate-weighted).
+    Position-in-expert is computed slot-major (all slot-0 assignments get
+    positions before slot-1), matching the reference top-k routing.
+    """
+    G, Sg, E = logits.shape
+    k = cfg.top_k
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # [G,Sg,k]
+    # renormalize selected gates (mixtral-style)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # [G,Sg,k,E]
+    # slot-major position: transpose k before Sg, cumsum over (k, Sg) flat
+    oh_km = onehot.transpose(0, 2, 1, 3).reshape(G, k * Sg, E)
+    pos_flat = jnp.cumsum(oh_km, axis=1) - oh_km           # positions from 0
+    pos = pos_flat.reshape(G, k, Sg, E).transpose(0, 2, 1, 3)  # [G,Sg,k,E]
+    keep = (pos < capacity) & (onehot > 0)
+
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=logits.dtype)  # [G,Sg,k,E,C]
+    keepf = keep.astype(logits.dtype)[..., None]
+    dispatch = jnp.sum(pos_oh * keepf * onehot[..., None].astype(logits.dtype),
+                       axis=2)                              # [G,Sg,E,C]
+    combine = jnp.sum(
+        pos_oh * keepf * (gate_vals[..., None, None] *
+                          onehot[..., None].astype(logits.dtype)), axis=2)
+    return dispatch, combine
+
+
+def forward_moe(p, x, cfg: ArchConfig):
+    """x: [B, S, D] -> [B, S, D]."""
+    B, S, D = x.shape
+    tokens = x.reshape(B * S, D)
+    sg = min(cfg.moe_group, B * S)
+    # pad to a whole number of groups
+    n_tok = tokens.shape[0]
+    n_groups = -(-n_tok // sg)
+    pad = n_groups * sg - n_tok
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    xg = tokens.reshape(n_groups, sg, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(cfg.dtype))
+    capacity = _capacity(cfg, sg)
+    dispatch, combine = route_topk(logits, cfg, capacity)
+    dispatch = dispatch.astype(cfg.dtype)
+    combine = combine.astype(cfg.dtype)
+
+    # dispatch tokens to expert buffers: [E, G, C, D]
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    g = jnp.einsum("egcd,edf->egcf", xe, p["w_gate"].astype(cfg.dtype))
+    u = jnp.einsum("egcd,edf->egcf", xe, p["w_up"].astype(cfg.dtype))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(cfg.dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine, ye)
+
+    out = out.reshape(n_groups * sg, D)
+    if pad:
+        out = out[:n_tok]
+    return out.reshape(B, S, D)
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss over router logits."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    frac_probs = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    top1 = jnp.argmax(probs, -1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32),
+        axis=tuple(range(probs.ndim - 1)))
+    return cfg.n_experts * jnp.sum(frac_probs * frac_tokens)

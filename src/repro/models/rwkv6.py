@@ -1,0 +1,238 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with token-shift
+time-mix, data-dependent decay (LoRA-produced per-channel w_t), WKV linear
+recurrence, and squared-ReLU channel-mix.
+
+Training uses the chunked WKV (repro.kernels.rwkv6_wkv); serving carries the
+O(1) per-layer state (wkv state [H, hd, hd] + the two token-shift vectors) —
+which is what makes ``long_500k`` decoding feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv import ops as wkv_ops
+from repro.models import common as C
+from repro.models.common import ArchConfig, param
+from repro.parallel.sharding import hint_batch
+
+LORA_RANK = 64
+
+
+def init_layer(key, cfg: ArchConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    pd = cfg.param_dtype
+    return {
+        "ln1": param(ks[0], (D,), ("embed",), pd, init="zeros"),
+        "ln2": param(ks[0], (D,), ("embed",), pd, init="zeros"),
+        # time-mix lerp coefficients (token shift)
+        "mu": param(ks[1], (5, D), ("unsharded", "embed"), pd, scale=0.5),
+        "wr": param(ks[2], (D, D), ("embed", "heads_x_dim"), pd),
+        "wk": param(ks[3], (D, D), ("embed", "heads_x_dim"), pd),
+        "wv": param(ks[4], (D, D), ("embed", "heads_x_dim"), pd),
+        "wg": param(ks[5], (D, D), ("embed", "heads_x_dim"), pd),
+        "wo": param(ks[6], (D, D), ("heads_x_dim", "embed"), pd),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": param(ks[7], (D,), ("embed",), pd, init="zeros"),
+        "wA": param(ks[8], (D, LORA_RANK), ("embed", "unsharded"), pd),
+        "wB": param(ks[9], (LORA_RANK, D), ("unsharded", "embed"), pd),
+        "u": param(ks[10], (D,), ("embed",), pd, scale=0.3),
+        "ln_x": param(ks[10], (D,), ("embed",), pd, init="zeros"),
+        # channel mix
+        "cm_mu": param(ks[1], (2, D), ("unsharded", "embed"), pd, scale=0.5),
+        "cm_k": param(ks[11], (D, F), ("embed", "mlp"), pd),
+        "cm_r": param(ks[11], (D, D), ("embed", "heads_x_dim"), pd),
+        "cm_v": param(ks[11], (F, D), ("mlp", "embed"), pd),
+    }
+
+
+def init(key, cfg: ArchConfig):
+    kb, ke = jax.random.split(key)
+    keys = jax.random.split(kb, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(keys)
+    return {"blocks": layers, "embed": C.embed_init(ke, cfg)}
+
+
+def _shift(x, x_prev=None):
+    """Token shift: previous token's features (zeros / carried for step 0)."""
+    pad = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _decay(lp, xw, cfg):
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, lp["wA"].astype(cfg.dtype))),
+        lp["wB"].astype(cfg.dtype).T.T)  # [B,S,D]
+    w = jnp.exp(-jnp.exp(
+        (lp["w0"].astype(jnp.float32) + lora.astype(jnp.float32))))
+    return w  # in (0, 1)
+
+
+def _time_mix(lp, x, cfg: ArchConfig, use_pallas: bool = False):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    sx = _shift(x)
+    mu = lp["mu"].astype(cfg.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (sx - x) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, lp["wr"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, lp["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, lp["wv"].astype(cfg.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, lp["wg"].astype(cfg.dtype)))
+    w = _decay(lp, xw, cfg)
+
+    from repro.parallel.sharding import hint_axes
+
+    def heads(z):
+        # pin the WKV-scan input layout: heads TP-sharded (SPerf iter 5)
+        return hint_axes(z.reshape(B, S, H, hd),
+                         ("batch", None, "model", None))
+
+    u = lp["u"].astype(jnp.float32).reshape(H, hd)
+    y, _ = wkv_ops.wkv(heads(r), heads(k), heads(v), heads(w), u,
+                       use_pallas=use_pallas)
+    y = y.reshape(B, S, D)
+    y = C.rmsnorm(y, lp["ln_x"])
+    return jnp.einsum("bsd,de->bse", (y * g).astype(cfg.dtype),
+                      lp["wo"].astype(cfg.dtype))
+
+
+def _channel_mix(lp, x, cfg: ArchConfig):
+    sx = _shift(x)
+    mu = lp["cm_mu"].astype(cfg.dtype)
+    xk = x + mu[0] * (sx - x)
+    xr = x + mu[1] * (sx - x)
+    k = jnp.einsum("bsd,df->bsf", xk, lp["cm_k"].astype(cfg.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  lp["cm_r"].astype(cfg.dtype)))
+    return r * jnp.einsum("bsf,fd->bsd", k, lp["cm_v"].astype(cfg.dtype))
+
+
+def _block(lp, x, cfg: ArchConfig):
+    x = hint_batch(x)
+    x = x + _time_mix(lp, C.rmsnorm(x, lp["ln1"]), cfg)
+    x = x + _channel_mix(lp, C.rmsnorm(x, lp["ln2"]), cfg)
+    return x
+
+
+def forward(params, tokens, cfg: ArchConfig, **_) -> jnp.ndarray:
+    x = C.embed_tokens(params["embed"], tokens, cfg)
+    body = C.make_remat(lambda xx, lp: _block(lp, xx, cfg), cfg.remat)
+    x, _ = jax.lax.scan(lambda xx, lp: (body(xx, lp), None), x,
+                        params["blocks"], unroll=cfg.scan_unroll)
+    return C.lm_head(params["embed"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving: O(1) state per layer.
+# ---------------------------------------------------------------------------
+class RwkvState(NamedTuple):
+    wkv: jnp.ndarray      # [L, B, H, hd, hd]
+    tm_prev: jnp.ndarray  # [L, B, D] last token features (time mix)
+    cm_prev: jnp.ndarray  # [L, B, D] last token features (channel mix)
+    pos: jnp.ndarray
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0) -> RwkvState:
+    L, B, D, H, hd = cfg.n_layers, batch, cfg.d_model, cfg.n_heads, cfg.hd
+    return RwkvState(jnp.zeros((L, B, H, hd, hd), jnp.float32),
+                     jnp.zeros((L, B, D), cfg.dtype),
+                     jnp.zeros((L, B, D), cfg.dtype), jnp.int32(0))
+
+
+def _layer_step(lp, x1, wkv_s, tm_prev, cm_prev, cfg: ArchConfig):
+    """x1: [B, D] single token."""
+    B, D = x1.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = C.rmsnorm(x1, lp["ln1"])
+    mu = lp["mu"].astype(cfg.dtype)
+    xr, xk, xv, xw, xg = (h + mu[i] * (tm_prev - h) for i in range(5))
+    r = (xr @ lp["wr"].astype(cfg.dtype)).reshape(B, H, hd)
+    k = (xk @ lp["wk"].astype(cfg.dtype)).reshape(B, H, hd)
+    v = (xv @ lp["wv"].astype(cfg.dtype)).reshape(B, H, hd)
+    g = jax.nn.silu(xg @ lp["wg"].astype(cfg.dtype))
+    lora = jnp.tanh(xw @ lp["wA"].astype(cfg.dtype)) @ \
+        lp["wB"].astype(cfg.dtype)
+    w = jnp.exp(-jnp.exp(lp["w0"].astype(jnp.float32) +
+                         lora.astype(jnp.float32))).reshape(B, H, hd)
+    u = lp["u"].astype(jnp.float32).reshape(H, hd)
+    y, wkv_new = wkv_ops.wkv_decode_step(r, k, v, w, u, wkv_s)
+    y = C.rmsnorm(y.reshape(B, D), lp["ln_x"])
+    x1 = x1 + ((y * g).astype(cfg.dtype) @ lp["wo"].astype(cfg.dtype))
+
+    h2 = C.rmsnorm(x1, lp["ln2"])
+    cmu = lp["cm_mu"].astype(cfg.dtype)
+    xk2 = h2 + cmu[0] * (cm_prev - h2)
+    xr2 = h2 + cmu[1] * (cm_prev - h2)
+    kk = jnp.square(jax.nn.relu(xk2 @ lp["cm_k"].astype(cfg.dtype)))
+    rr = jax.nn.sigmoid(xr2 @ lp["cm_r"].astype(cfg.dtype))
+    x1 = x1 + rr * (kk @ lp["cm_v"].astype(cfg.dtype))
+    return x1, wkv_new, h, h2
+
+
+def decode_step(params, token, state: RwkvState, cfg: ArchConfig):
+    """token: i32[B] -> (logits f32[B, V], new state)."""
+    x = C.embed_tokens(params["embed"], token[:, None], cfg)[:, 0]
+
+    def scan_fn(xx, inp):
+        lp, wkv_s, tm_p, cm_p = inp
+        xx, wkv_new, tm_new, cm_new = _layer_step(lp, xx, wkv_s, tm_p, cm_p,
+                                                  cfg)
+        return xx, (wkv_new, tm_new, cm_new)
+
+    x, (wkv_new, tm_new, cm_new) = jax.lax.scan(
+        scan_fn, x, (params["blocks"], state.wkv, state.tm_prev,
+                     state.cm_prev), unroll=cfg.scan_unroll)
+    logits = C.lm_head(params["embed"], x[:, None], cfg)[:, 0]
+    return logits, RwkvState(wkv_new, tm_new, cm_new, state.pos + 1)
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int = 0):
+    """Prefill via the chunked WKV, returning the decode state."""
+    B, S = tokens.shape
+    x = C.embed_tokens(params["embed"], tokens, cfg)
+    L = cfg.n_layers
+    H, hd, D = cfg.n_heads, cfg.hd, cfg.d_model
+
+    def scan_fn(xx, lp):
+        h = C.rmsnorm(xx, lp["ln1"])
+        sx = _shift(h)
+        mu = lp["mu"].astype(cfg.dtype)
+        xr, xk, xv, xw, xg = (h + mu[i] * (sx - h) for i in range(5))
+        r = jnp.einsum("bsd,de->bse", xr, lp["wr"].astype(cfg.dtype))
+        k = jnp.einsum("bsd,de->bse", xk, lp["wk"].astype(cfg.dtype))
+        v = jnp.einsum("bsd,de->bse", xv, lp["wv"].astype(cfg.dtype))
+        g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg,
+                                   lp["wg"].astype(cfg.dtype)))
+        w = _decay(lp, xw, cfg)
+        u = lp["u"].astype(jnp.float32).reshape(H, hd)
+        y, s_fin = wkv_ops.wkv_chunked(
+            r.reshape(B, S, H, hd), k.reshape(B, S, H, hd),
+            v.reshape(B, S, H, hd), w.reshape(B, S, H, hd), u)
+        y = C.rmsnorm(y.reshape(B, S, D), lp["ln_x"])
+        xx = xx + jnp.einsum("bsd,de->bse", (y * g).astype(cfg.dtype),
+                             lp["wo"].astype(cfg.dtype))
+        tm_prev = h[:, -1]
+        h2 = C.rmsnorm(xx, lp["ln2"])
+        xx = xx + _channel_mix_tail(lp, h2, cfg)
+        return xx, (s_fin, tm_prev, h2[:, -1])
+
+    def _channel_mix_tail(lp, h2, cfg):
+        sx = _shift(h2)
+        cmu = lp["cm_mu"].astype(cfg.dtype)
+        xk2 = h2 + cmu[0] * (sx - h2)
+        xr2 = h2 + cmu[1] * (sx - h2)
+        kk = jnp.square(jax.nn.relu(
+            jnp.einsum("bsd,df->bsf", xk2, lp["cm_k"].astype(cfg.dtype))))
+        rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2,
+                                       lp["cm_r"].astype(cfg.dtype)))
+        return rr * jnp.einsum("bsf,fd->bsd", kk,
+                               lp["cm_v"].astype(cfg.dtype))
+
+    x, (wkv_s, tm_prev, cm_prev) = jax.lax.scan(scan_fn, x, params["blocks"],
+                                                unroll=cfg.scan_unroll)
+    logits = C.lm_head(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, RwkvState(wkv_s, tm_prev, cm_prev, jnp.int32(S))

@@ -1,0 +1,177 @@
+"""Decoder-only transformer LM (dense GQA and MoE variants) with
+scan-over-layers, remat, and a KV-cache serving path.
+
+Layers are stacked into *blocks* so heterogeneous stacks still scan:
+  - dense archs: block = 1 dense layer
+  - mixtral: block = 1 MoE layer
+  - llama4 (interleaved): block = ``moe_every`` layers, the last one MoE.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as C
+from repro.models import mlp
+from repro.models.common import ArchConfig, param
+from repro.parallel.sharding import hint_batch
+
+
+# ---------------------------------------------------------------------------
+# Block = smallest repeating unit.
+# ---------------------------------------------------------------------------
+def _block_layout(cfg: ArchConfig) -> list[str]:
+    """Kinds of the layers inside one block: 'dense' | 'moe'."""
+    if cfg.n_experts == 0:
+        return ["dense"]
+    if cfg.moe_every == 1:
+        return ["moe"]
+    return ["dense"] * (cfg.moe_every - 1) + ["moe"]
+
+
+def n_blocks(cfg: ArchConfig) -> int:
+    per = len(_block_layout(cfg))
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per
+
+
+def init_block(key, cfg: ArchConfig):
+    layers = []
+    for kind in _block_layout(cfg):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        layer = {
+            "ln1": param(k3, (cfg.d_model,), ("embed",), cfg.param_dtype,
+                         init="zeros"),
+            "ln2": param(k3, (cfg.d_model,), ("embed",), cfg.param_dtype,
+                         init="zeros"),
+            "attn": attn.init(k1, cfg),
+            "mlp": mlp.init_moe(k2, cfg) if kind == "moe"
+                   else mlp.init_dense(k2, cfg),
+        }
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def init(key, cfg: ArchConfig):
+    kb, ke = jax.random.split(key)
+    keys = jax.random.split(kb, n_blocks(cfg))
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(keys)
+    return {"blocks": blocks, "embed": C.embed_init(ke, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Forward (training).
+# ---------------------------------------------------------------------------
+def _block_train(bp, x, cfg: ArchConfig):
+    x = hint_batch(x)
+    for kind, lp in zip(_block_layout(cfg), bp["layers"]):
+        h = C.rmsnorm(x, lp["ln1"])
+        x = x + attn.forward_train(lp["attn"], h, cfg)
+        h = C.rmsnorm(x, lp["ln2"])
+        if kind == "moe":
+            x = x + mlp.forward_moe(lp["mlp"], h, cfg)
+        else:
+            x = x + mlp.forward_dense(lp["mlp"], h, cfg)
+    return x
+
+
+def forward(params, tokens, cfg: ArchConfig,
+            inputs_embeds: jnp.ndarray | None = None) -> jnp.ndarray:
+    """tokens: i32[B, S] -> logits f32[B, S, V]."""
+    x = C.embed_tokens(params["embed"], tokens, cfg)
+    if inputs_embeds is not None:   # vlm: prepend precomputed patch embeds
+        x = jnp.concatenate([inputs_embeds.astype(cfg.dtype), x], axis=1)
+
+    body = C.make_remat(lambda xx, bp: _block_train(bp, xx, cfg), cfg.remat)
+
+    def scan_fn(xx, bp):
+        return body(xx, bp), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["blocks"],
+                        unroll=cfg.scan_unroll)
+    if inputs_embeds is not None:
+        x = x[:, inputs_embeds.shape[1]:]
+    return C.lm_head(params["embed"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    caches: Any          # stacked KVCache pytree [n_blocks, n_layers_per, ...]
+    pos: jnp.ndarray     # [] int32 next position
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    per = len(_block_layout(cfg))
+    nb = n_blocks(cfg)
+
+    def one(_):
+        return [attn.init_cache(cfg, batch, max_len) for _ in range(per)]
+    # stacked along block axis
+    caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
+        one(None))
+    return caches
+
+
+def _block_prefill(bp, x, cfg: ArchConfig, max_len: int):
+    new_caches = []
+    for kind, lp in zip(_block_layout(cfg), bp["layers"]):
+        h = C.rmsnorm(x, lp["ln1"])
+        a, cache = attn.forward_prefill(lp["attn"], h, cfg, max_len)
+        x = x + a
+        h = C.rmsnorm(x, lp["ln2"])
+        if kind == "moe":
+            x = x + mlp.forward_moe(lp["mlp"], h, cfg)
+        else:
+            x = x + mlp.forward_dense(lp["mlp"], h, cfg)
+        new_caches.append(cache)
+    return x, new_caches
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int):
+    """Returns (last-position logits f32[B, V], DecodeState)."""
+    x = C.embed_tokens(params["embed"], tokens, cfg)
+
+    def scan_fn(xx, bp):
+        xx, caches = _block_prefill(bp, xx, cfg, max_len)
+        return xx, caches
+
+    x, caches = jax.lax.scan(scan_fn, x, params["blocks"],
+                             unroll=cfg.scan_unroll)
+    logits = C.lm_head(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, DecodeState(caches, jnp.int32(tokens.shape[1]))
+
+
+def _block_decode(bp, x, caches, pos, cfg: ArchConfig):
+    new_caches = []
+    for i, (kind, lp) in enumerate(zip(_block_layout(cfg), bp["layers"])):
+        h = C.rmsnorm(x, lp["ln1"])
+        a, cache = attn.forward_decode(lp["attn"], h, caches[i], pos, cfg)
+        x = x + a
+        h = C.rmsnorm(x, lp["ln2"])
+        if kind == "moe":
+            x = x + mlp.forward_moe(lp["mlp"], h, cfg)
+        else:
+            x = x + mlp.forward_dense(lp["mlp"], h, cfg)
+        new_caches.append(cache)
+    return x, new_caches
+
+
+def decode_step(params, token, state: DecodeState, cfg: ArchConfig):
+    """token: i32[B] -> (logits f32[B, V], new DecodeState)."""
+    x = C.embed_tokens(params["embed"], token[:, None], cfg)
+
+    def scan_fn(xx, block):
+        bp, caches = block
+        xx, new_caches = _block_decode(bp, xx, caches, state.pos, cfg)
+        return xx, new_caches
+
+    x, caches = jax.lax.scan(scan_fn, x, (params["blocks"], state.caches),
+                             unroll=cfg.scan_unroll)
+    logits = C.lm_head(params["embed"], x, cfg)[:, 0]
+    return logits, DecodeState(caches, state.pos + 1)

@@ -1,0 +1,46 @@
+"""Vision-language model (InternVL2-1B backbone: InternViT + Qwen2-0.5B-ish
+LM). Per the assignment, the modality frontend is a STUB — ``input_specs``
+provides precomputed patch embeddings [B, n_patches, d_model] (the InternViT
+tower + MLP projector output); the LM backbone is real and shares the
+decoder-only transformer implementation (QKV bias per Qwen2 lineage).
+
+Training computes next-token loss on the text positions only (the patch
+prefix is context). Serving prefills [patches; prompt] then decodes text.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.common import ArchConfig
+from repro.models import common as C
+
+
+init = tfm.init
+init_cache = tfm.init_cache
+
+
+def forward(params, tokens, cfg: ArchConfig, patches=None, **_):
+    """tokens: i32[B, S_text]; patches: f32[B, P, D]."""
+    return tfm.forward(params, tokens, cfg, inputs_embeds=patches)
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int, patches=None):
+    """Prefill patches+prompt. Cache covers the concatenated sequence."""
+    x_patch = patches.astype(cfg.dtype)
+    x_tok = C.embed_tokens(params["embed"], tokens, cfg)
+    x = jnp.concatenate([x_patch, x_tok], axis=1)
+
+    import jax
+
+    def scan_fn(xx, bp):
+        xx, caches = tfm._block_prefill(bp, xx, cfg, max_len)
+        return xx, caches
+
+    x, caches = jax.lax.scan(scan_fn, x, params["blocks"])
+    logits = C.lm_head(params["embed"], x[:, -1:], cfg)[:, 0]
+    pos = jnp.int32(x_patch.shape[1] + tokens.shape[1])
+    return logits, tfm.DecodeState(caches, pos)
+
+
+decode_step = tfm.decode_step

@@ -1,0 +1,83 @@
+"""Model zoo dispatch: one uniform functional API over all families.
+
+    api = get_api(cfg)
+    params_ann = api.init(key)                      # Annotated (axes) tree
+    logits = api.forward(params, batch)
+    loss = api.loss(params, batch)
+    logits, state = api.prefill(params, batch, max_len)
+    logits, state = api.decode(params, tokens, state)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, mamba2, rwkv6, transformer, vlm
+from repro.models.common import ArchConfig
+from repro.models.loss import next_token_loss
+
+_FAMILY_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "ssm": rwkv6,
+    "hybrid": mamba2,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+@dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    mod: Any
+
+    def init(self, key):
+        return self.mod.init(key, self.cfg)
+
+    def _extras(self, batch: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
+        ex = {}
+        if "frames" in batch:
+            ex["frames"] = batch["frames"]
+        if "patches" in batch:
+            ex["patches"] = batch["patches"]
+        return ex
+
+    def forward(self, params, batch):
+        return self.mod.forward(params, batch["tokens"], self.cfg,
+                                **self._extras(batch))
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch)
+        return next_token_loss(logits, batch["tokens"])
+
+    def prefill(self, params, batch, max_len: int):
+        return self.mod.prefill(params, batch["tokens"], self.cfg, max_len,
+                                **self._extras(batch))
+
+    def decode(self, params, tokens, state):
+        return self.mod.decode_step(params, tokens, state, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int, pos: int | None = None):
+        """Full decode state with the cache sized ``max_len`` and the write
+        position at ``pos`` (default: cache almost full — the steady-state
+        decode step the decode_* shapes specify)."""
+        pos = max_len - 1 if pos is None else pos
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            caches = transformer.init_cache(cfg, batch, max_len)
+            return transformer.DecodeState(caches, jnp.int32(pos))
+        if cfg.family == "encdec":
+            return encdec.make_decode_state(cfg, batch, max_len, pos)
+        state = self.mod.init_cache(cfg, batch, max_len)
+        return state._replace(pos=jnp.int32(pos))
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path
+
+
+def get_api(cfg: ArchConfig) -> ModelAPI:
+    return ModelAPI(cfg, _FAMILY_MODULE[cfg.family])

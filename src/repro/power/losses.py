@@ -1,0 +1,35 @@
+"""Power-conversion losses (rectifier + secondary conversion), after
+Wojda et al. [42] as used by ExaDigiT: efficiency is a quadratic function of
+fractional load, applied in two stages (480V rectification, then on-board
+SIVOC / voltage regulation).
+
+Facility input power  P_in = P_IT / (eta_rect(load) * eta_sivoc(load)).
+Loss = P_in - P_IT.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.systems.config import PowerConfig
+
+
+def _eta(coeffs, load):
+    c0, c1, c2 = coeffs
+    eta = c0 + c1 * load + c2 * load * load
+    return jnp.clip(eta, 0.5, 0.999)
+
+
+def conversion(power_cfg: PowerConfig, p_it: jnp.ndarray,
+               n_racks: jnp.ndarray | float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (facility_input_power, loss_power) for aggregate IT power.
+
+    ``load`` is the fractional loading of the rectifier fleet: IT power over
+    the rated capacity of all racks. Efficiency degrades toward low load,
+    which is what makes *scheduling* visible in the loss curve (idle/fragmented
+    systems run their rectifiers at poor efficiency).
+    """
+    rated_w = jnp.asarray(n_racks, jnp.float32) * power_cfg.rated_rack_kw * 1e3
+    load = jnp.clip(p_it / jnp.maximum(rated_w, 1.0), 0.0, 1.5)
+    eta = _eta(power_cfg.rect_c, load) * _eta(power_cfg.sivoc_c, load)
+    p_in = p_it / eta
+    return p_in, p_in - p_it

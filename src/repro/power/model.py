@@ -1,0 +1,59 @@
+"""Utilization -> electrical power (paper §3.1: "simulated utilization is
+converted to a power profile, with power rectification and conversion losses
+applied [42]").
+
+Per-node IT power comes either from the job's recorded per-node power trace
+(trace datasets: Frontier, Marconi100) with last-observation-carried-forward
+for missing samples, or from a scalar per-job average (summary datasets:
+Fugaku, Lassen, Adastra). Idle nodes draw ``idle_node_w``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from repro.systems.config import SystemConfig
+
+
+def job_node_power(table: T.JobTable, jstate: jnp.ndarray, start: jnp.ndarray,
+                   t: jnp.ndarray, prof_dt: float) -> jnp.ndarray:
+    """Per-node power drawn by each job at time ``t``  -> f32[J].
+
+    LOCF semantics (paper §3.2.2): the profile index is clamped into
+    [0, P-1], so times before the first / after the last sample reuse the
+    nearest recorded value.
+    """
+    P = table.prof_len
+    elapsed = jnp.maximum(t - start, 0.0)
+    idx = jnp.clip((elapsed / prof_dt).astype(jnp.int32), 0, P - 1)
+    p = jnp.take_along_axis(table.power_prof, idx[:, None], axis=1)[:, 0]
+    running = jstate == T.RUNNING
+    return jnp.where(running, p, 0.0)
+
+
+def job_node_util(table: T.JobTable, jstate: jnp.ndarray, start: jnp.ndarray,
+                  t: jnp.ndarray, prof_dt: float) -> jnp.ndarray:
+    """Per-node utilization of each job at time ``t`` -> f32[J] in [0,1]."""
+    P = table.prof_len
+    elapsed = jnp.maximum(t - start, 0.0)
+    idx = jnp.clip((elapsed / prof_dt).astype(jnp.int32), 0, P - 1)
+    u = jnp.take_along_axis(table.util_prof, idx[:, None], axis=1)[:, 0]
+    return jnp.where(jstate == T.RUNNING, u, 0.0)
+
+
+def node_power(system: SystemConfig, table: T.JobTable, node_job: jnp.ndarray,
+               job_pw: jnp.ndarray) -> jnp.ndarray:
+    """Map per-job power onto the node axis -> f32[N].
+
+    ``node_job[n]`` is the occupying job id (or -1). Free nodes draw idle
+    power.
+    """
+    occupied = node_job >= 0
+    safe = jnp.maximum(node_job, 0)
+    p = jnp.take(job_pw, safe)
+    return jnp.where(occupied, p, system.power.idle_node_w)
+
+
+def system_it_power(node_pw: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(node_pw)

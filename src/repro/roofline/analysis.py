@@ -1,0 +1,205 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis`` of an SPMD executable describes the *per-device* module,
+so per-device quantities divide by per-chip rates directly. Collective bytes
+are not in cost_analysis: we parse the post-optimization HLO and sum operand
+bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+from repro.launch import mesh as M
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None or b == 0:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    We use the op *result* shape (for all-gather that's the gathered size,
+    for reduce-scatter the scattered size) as the wire-traffic proxy; the
+    result line in post-opt HLO is `shape = op-name(...)`.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([\w\[\],{}/ ]+?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", ls)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    out_total = {f"{k}_bytes": v for k, v in out.items()}
+    out_total.update({f"{k}_count": counts[k] for k in _COLLECTIVES})
+    out_total["total_bytes"] = sum(out.values())
+    return out_total
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float            # XLA 'bytes accessed' (unfused bound)
+    hbm_bytes_model: float             # fusion-aware analytic traffic model
+    collective_bytes_per_device: float
+    peak_memory_per_device: Optional[float]
+    t_compute_s: float
+    t_memory_s: float                  # from hbm_bytes_model
+    t_memory_unfused_s: float          # from XLA bytes accessed
+    t_collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    collective_detail: Dict[str, int]
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def analytic_hbm_bytes(cfg, seq_len: int, global_batch: int, kind: str,
+                       chips: int) -> float:
+    """Fusion-aware per-device HBM traffic model (what a TPU executes, as
+    opposed to XLA CPU's no-fusion 'bytes accessed' upper bound).
+
+    train:   params read (fwd+bwd) + grad write + AdamW moments r/w
+             + remat'd activation checkpoints (write + read + recompute)
+             + logits/loss traffic
+    prefill: params read + KV/state cache write + boundary activations
+    decode:  full (active) params read + cache read/update per token
+    """
+    pb = {2: 2, 4: 4}.get(jnp_bytes(cfg.param_dtype), 4)
+    mb = jnp_bytes(cfg.moment_dtype)
+    ab = 2  # bf16 activations
+    n_total = cfg.param_count
+    n_active = cfg.active_param_count
+    p_local = n_total * pb / chips
+    # activations are sharded over DP ways only (batch axis), not over TP:
+    # production meshes here use a 16-way model axis.
+    model_ways = min(16, chips)
+    dp_ways = max(chips // model_ways, 1)
+    toks_local = seq_len * global_batch / dp_ways
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+
+    if kind == "train":
+        params_t = 3 * p_local                    # fwd read, bwd read, write
+        opt_t = 4 * (n_total * mb / chips)        # m,v read+write
+        act_t = 3 * L * toks_local * D * ab       # ckpt w + r + recompute w
+        head_t = 2 * toks_local * (V / max(chips ** 0.5, 1)) * 4
+        return params_t + opt_t + act_t + head_t
+    if kind == "prefill":
+        cache_t = 2 * L * toks_local * cfg.n_kv_heads * cfg.hd * ab
+        return p_local + cache_t + L * toks_local * D * ab
+    # decode: one token / sequence; params dominate, plus cache r/w
+    b_local = max(global_batch / max(chips, 1), global_batch / chips)
+    active_frac = n_active / n_total
+    if cfg.n_experts:
+        # tiny decode batches touch ~B*top_k experts at most
+        import math
+        touched = min(global_batch * max(cfg.top_k, 1), cfg.n_experts)
+        moe_frac = touched / cfg.n_experts
+        active_frac = max(active_frac, min(1.0, moe_frac))
+    params_t = n_total * pb * active_frac / chips
+    if cfg.family == "ssm":
+        cache = L * global_batch * cfg.n_heads * cfg.hd * cfg.hd * 4
+    elif cfg.family == "hybrid":
+        n_shared = L // max(cfg.shared_attn_every, 1)
+        cache = L * global_batch * (2 * D) * cfg.ssm_state * 4 + \
+            n_shared * global_batch * seq_len * cfg.n_kv_heads * cfg.hd * 2 * ab
+    else:
+        layers_with_kv = L
+        cache = layers_with_kv * global_batch * seq_len * \
+            cfg.n_kv_heads * cfg.hd * 2 * ab
+    cache_t = cache * 1.0 / chips   # read once (update is += small)
+    return params_t + cache_t
+
+
+def jnp_bytes(dt) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+    return np.dtype(dt).itemsize if dt not in (jnp.bfloat16,) else 2
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict[str, float], hlo_text: str, model_flops: float,
+            peak_memory: Optional[float] = None,
+            hbm_model: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    # XLA reports -1 for unknown
+    if flops < 0:
+        flops = 0.0
+    byts = float(cost.get("bytes accessed", 0.0))
+    if byts <= 0:
+        # fall back to sum of operand/output traffic estimates
+        byts = sum(float(v) for k, v in cost.items()
+                   if k.startswith("bytes accessed"))
+    coll = collective_bytes(hlo_text)
+    cb = float(coll["total_bytes"])
+
+    t_comp = flops / M.PEAK_FLOPS_BF16
+    t_mem_unfused = byts / M.HBM_BW
+    t_mem = (hbm_model or byts) / M.HBM_BW
+    t_coll = cb / M.ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    global_flops = flops * chips
+    ratio = model_flops / global_flops if global_flops > 0 else 0.0
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    flops_per_device=flops, bytes_per_device=byts,
+                    hbm_bytes_model=hbm_model,
+                    collective_bytes_per_device=cb,
+                    peak_memory_per_device=peak_memory,
+                    t_compute_s=t_comp, t_memory_s=t_mem,
+                    t_memory_unfused_s=t_mem_unfused,
+                    t_collective_s=t_coll, bottleneck=bottleneck,
+                    model_flops=model_flops, useful_flops_ratio=ratio,
+                    collective_detail=coll)
+
+
+def model_flops_for(cfg, seq_len: int, global_batch: int, kind: str) -> float:
+    """6*N*D for training (N = active params, D = tokens); 2*N*D for a
+    single forward (prefill); 2*N per token for decode."""
+    n_active = cfg.active_param_count
+    if kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch

@@ -1,0 +1,137 @@
+"""HPC system configurations (paper Table 1).
+
+A ``SystemConfig`` is *static* (hashable) — it parameterizes the compiled
+engine. Numbers are taken from the paper where stated and from the cited
+public documentation otherwise; they are calibration targets for the
+synthetic dataset generators, not claims about the real machines. The
+power/cooling parasitics are sized so the simulated PUE lands near the
+paper's note that Frontier's actual PUE averages ~1.06.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class PowerConfig:
+    """util -> electrical power model for one node (repro.power.model)."""
+    idle_node_w: float = 200.0       # node power at zero utilization
+    peak_node_w: float = 1000.0      # node power at full utilization
+    # rectifier efficiency eta(load) = c0 + c1*load + c2*load^2 (clipped)
+    rect_c: Tuple[float, float, float] = (0.95, 0.05, -0.025)
+    # secondary (sivoc / board VR) efficiency, same polynomial form
+    sivoc_c: Tuple[float, float, float] = (0.97, 0.02, -0.01)
+    rated_rack_kw: float = 300.0     # rectifier rated load per rack
+    nodes_per_rack: int = 64
+    ref_node_w: float = 800.0        # reference per-node power for Fugaku pts
+
+
+@dataclass(frozen=True)
+class CoolingConfig:
+    """Lumped CDU + cooling tower parameters (repro.cooling.model)."""
+    n_groups: int = 8                # CDU groups (segment-reduce targets)
+    mdot_kg_s: float = 40.0          # water mass flow per CDU (kg/s)
+    cp_j_kg_k: float = 4186.0        # specific heat of water
+    t_supply_setpoint_c: float = 25.0
+    ua_w_k: float = 4.0e5            # facility HX conductance per group
+    tower_tau_s: float = 600.0       # first-order tower time constant
+    t_wetbulb_c: float = 18.0        # ambient wet-bulb
+    tower_approach_c: float = 4.0
+    n_tower_cells: int = 4
+    cell_rated_heat_w: float = 2.5e6  # heat rejection per tower cell
+    fan_rated_w: float = 1.0e5       # tower fan rated power per cell
+    pump_w_per_group: float = 1.0e4
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    name: str
+    n_nodes: int
+    prof_dt: float                   # telemetry sample period (s)
+    scheduler: str                   # production scheduler (documentation)
+    has_traces: bool                 # per-job time series vs scalar summary
+    power: PowerConfig = field(default_factory=PowerConfig)
+    cooling: CoolingConfig = field(default_factory=CoolingConfig)
+    # engine defaults
+    dt: float = 15.0                 # engine step (s)
+    sched_budget: int = 32           # placement attempts per engine step
+
+    def scaled(self, n_nodes: int) -> "SystemConfig":
+        """A reduced-size variant for CPU tests: the cooling plant and rack
+        fleet scale with the node count so PUE / loss fractions stay
+        realistic. Per-group parameters are unchanged (each CDU still serves
+        a similar node span)."""
+        ratio = n_nodes / self.n_nodes
+        # keep tower capacity proportional: resize cell count and rating so
+        # cells * rating ~= ratio * original capacity
+        cells = max(int(round(self.cooling.n_tower_cells * ratio)), 1)
+        cap = self.cooling.n_tower_cells * self.cooling.cell_rated_heat_w * ratio
+        cool = replace(
+            self.cooling,
+            n_groups=max(int(round(self.cooling.n_groups * ratio)), 2),
+            n_tower_cells=cells,
+            cell_rated_heat_w=cap / cells,
+        )
+        return replace(self, name=f"{self.name}-scaled{n_nodes}",
+                       n_nodes=n_nodes, cooling=cool)
+
+
+# --- Table 1 ---------------------------------------------------------------
+FRONTIER = SystemConfig(
+    name="frontier", n_nodes=9600, prof_dt=15.0, scheduler="slurm",
+    has_traces=True, dt=15.0,
+    power=PowerConfig(idle_node_w=700.0, peak_node_w=3200.0,
+                      rect_c=(0.955, 0.045, -0.02), sivoc_c=(0.975, 0.02, -0.01),
+                      rated_rack_kw=400.0, nodes_per_rack=128,
+                      ref_node_w=2500.0),
+    cooling=CoolingConfig(n_groups=25, mdot_kg_s=60.0, t_supply_setpoint_c=32.0,
+                          t_wetbulb_c=20.0, ua_w_k=1.2e6, n_tower_cells=16,
+                          fan_rated_w=1.5e5),
+)
+
+MARCONI100 = SystemConfig(
+    name="marconi100", n_nodes=980, prof_dt=20.0, scheduler="slurm",
+    has_traces=True, dt=20.0,
+    power=PowerConfig(idle_node_w=240.0, peak_node_w=2200.0, ref_node_w=1600.0),
+    cooling=CoolingConfig(n_groups=10, n_tower_cells=2, cell_rated_heat_w=1.5e6),
+)
+
+FUGAKU = SystemConfig(
+    name="fugaku", n_nodes=158976, prof_dt=60.0, scheduler="tcs",
+    has_traces=False, dt=60.0,
+    power=PowerConfig(idle_node_w=60.0, peak_node_w=180.0,
+                      rect_c=(0.955, 0.04, -0.02), nodes_per_rack=384,
+                      rated_rack_kw=70.0, ref_node_w=140.0),
+    cooling=CoolingConfig(n_groups=32, mdot_kg_s=80.0, ua_w_k=1.5e6,
+                          n_tower_cells=15),
+)
+
+LASSEN = SystemConfig(
+    name="lassen", n_nodes=792, prof_dt=60.0, scheduler="lsf",
+    has_traces=False, dt=30.0,
+    power=PowerConfig(idle_node_w=260.0, peak_node_w=2400.0, ref_node_w=1800.0),
+    cooling=CoolingConfig(n_groups=8, n_tower_cells=1, cell_rated_heat_w=2.5e6),
+)
+
+ADASTRA = SystemConfig(
+    name="adastraMI250", n_nodes=356, prof_dt=30.0, scheduler="slurm",
+    has_traces=False, dt=30.0,
+    power=PowerConfig(idle_node_w=450.0, peak_node_w=2800.0, ref_node_w=2000.0),
+    cooling=CoolingConfig(n_groups=4, t_supply_setpoint_c=30.0,
+                          n_tower_cells=1, cell_rated_heat_w=1.5e6),
+)
+
+SYSTEMS: Dict[str, SystemConfig] = {
+    s.name: s for s in (FRONTIER, MARCONI100, FUGAKU, LASSEN, ADASTRA)
+}
+# aliases matching the paper's CLI
+SYSTEMS["adastra"] = ADASTRA
+SYSTEMS["marconi"] = MARCONI100
+
+
+def get_system(name: str) -> SystemConfig:
+    try:
+        return SYSTEMS[name]
+    except KeyError:
+        raise KeyError(f"unknown system '{name}'; known: {sorted(SYSTEMS)}")

@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping, cosine schedule, and configurable moment
+dtype (bf16 moments for the 400B MoE so optimizer state fits the pod —
+DESIGN.md §2). Implemented directly (no optax dependency) as pure pytree ops
+so the optimizer state inherits parameter shardings leaf-for-leaf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    moment_dtype: Any = jnp.float32
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree_util.tree_map(z, params),
+                      jax.tree_util.tree_map(z, params))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), \
+        {"grad_norm": gnorm, "lr": lr}

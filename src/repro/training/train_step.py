@@ -1,0 +1,207 @@
+"""Training / serving step builders with full pjit sharding.
+
+``make_train_step`` returns (step_fn, param_shardings, opt_shardings,
+batch_shardings) ready to ``jax.jit(...).lower(...).compile()`` — the same
+path the multi-pod dry-run uses.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig, split_tree
+from repro.models.zoo import get_api
+from repro.parallel import sharding as shd
+from repro.training import optimizer as opt
+
+
+def batch_struct(cfg: ArchConfig, seq_len: int, global_batch: int,
+                 kind: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run pattern:
+    weak-type-correct, shardable, no device allocation)."""
+    B, S = global_batch, seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        # seq_len is the decoder target length; the audio encoder sees
+        # seq_len // 4 frames (w2v-BERT stride stub)
+        return {"tokens": sds((B, S), jnp.int32),
+                "frames": sds((B, max(S // 4, 8), cfg.d_model), jnp.float32)}
+    if cfg.family == "vlm":
+        n_text = max(S - cfg.frontend_tokens, 8)
+        return {"tokens": sds((B, n_text), jnp.int32),
+                "patches": sds((B, cfg.frontend_tokens, cfg.d_model),
+                               jnp.float32)}
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, seq_len: int,
+                    global_batch: int,
+                    opt_cfg: opt.AdamWConfig | None = None,
+                    accum_steps: int = 1):
+    """Returns (train_step, shardings dict, structs dict).
+
+    ``accum_steps > 1`` enables gradient accumulation: the global batch is
+    split into microbatches scanned sequentially, trading step latency for
+    activation memory — the standard way to fit long-sequence training when
+    remat alone is not enough."""
+    api = get_api(cfg)
+    opt_cfg = opt_cfg or opt.AdamWConfig(moment_dtype=cfg.moment_dtype)
+    rules = shd.rules_for(cfg, mesh, "train")
+    shd.set_batch_axes(shd._filter_axis(mesh, rules["batch"]))
+    assert global_batch % accum_steps == 0, (global_batch, accum_steps)
+
+    # -- abstract param/opt trees (no allocation) ---------------------------
+    def _init_split(key):
+        vals, _ = split_tree(api.init(key))
+        return vals
+    params_struct = jax.eval_shape(_init_split, jax.random.PRNGKey(0))
+    # logical axes are concrete metadata captured during abstract tracing
+    axes_tree = _axes_tree(api)
+
+    param_shardings = jax.tree_util.tree_map(
+        lambda axes, sds: NamedSharding(
+            mesh, shd.spec_for(mesh, rules, axes, sds.shape)),
+        axes_tree, params_struct,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    opt_struct = jax.eval_shape(
+        functools.partial(opt.init, opt_cfg), params_struct)
+    opt_shardings = opt.AdamWState(
+        NamedSharding(mesh, P()),
+        jax.tree_util.tree_map(lambda s: s, param_shardings),
+        jax.tree_util.tree_map(lambda s: s, param_shardings))
+    bstruct = batch_struct(cfg, seq_len, global_batch, "train")
+    bshard = shd.batch_shardings(mesh, rules, bstruct, global_batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            def loss_fn(p):
+                return api.loss(p, batch)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+        else:
+            # microbatch scan: grads accumulate in f32, activations live
+            # only for one microbatch at a time
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def one(carry, mb):
+                acc, loss_acc = carry
+                l, g = jax.value_and_grad(lambda p: api.loss(p, mb))(params)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(one, (zeros, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        new_params, new_opt, metrics = opt.apply(opt_cfg, grads, opt_state,
+                                                 params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    shardings = dict(params=param_shardings, opt=opt_shardings, batch=bshard)
+    structs = dict(params=params_struct, opt=opt_struct, batch=bstruct)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(param_shardings, opt_shardings, bshard),
+        out_shardings=(param_shardings, opt_shardings, None),
+        donate_argnums=(0, 1))
+    return jitted, shardings, structs
+
+
+def _axes_tree(api):
+    """Extract the logical-axes tree without allocating real params: run init
+    under eval_shape but capture axes via the Annotated wrappers, which are
+    constructed with concrete axis tuples during tracing."""
+    collected = {}
+
+    def probe(key):
+        ann = api.init(key)
+        vals, axes = split_tree(ann)
+        collected["axes"] = axes
+        return vals
+
+    jax.eval_shape(probe, jax.random.PRNGKey(0))
+    return collected["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Serving steps.
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, seq_len: int,
+                      global_batch: int, max_len: int | None = None):
+    api = get_api(cfg)
+    rules = shd.rules_for(cfg, mesh, "prefill")
+    shd.set_batch_axes(shd._filter_axis(mesh, rules["batch"]))
+    max_len = max_len or seq_len
+
+    axes_tree = _axes_tree(api)
+
+    def _init_split(key):
+        vals, _ = split_tree(api.init(key))
+        return vals
+    params_struct = jax.eval_shape(_init_split, jax.random.PRNGKey(0))
+    param_shardings = jax.tree_util.tree_map(
+        lambda axes, sds: NamedSharding(
+            mesh, shd.spec_for(mesh, rules, axes, sds.shape)),
+        axes_tree, params_struct,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+    bstruct = batch_struct(cfg, seq_len, global_batch, "prefill")
+    bshard = shd.batch_shardings(mesh, rules, bstruct, global_batch)
+
+    def prefill(params, batch):
+        return api.prefill(params, batch, max_len)
+
+    jitted = jax.jit(prefill, in_shardings=(param_shardings, bshard))
+    structs = dict(params=params_struct, batch=bstruct)
+    return jitted, dict(params=param_shardings, batch=bshard), structs
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, seq_len: int,
+                     global_batch: int, kind: str = "decode"):
+    """One-token serve step with a KV/state cache of length ``seq_len``."""
+    api = get_api(cfg)
+    rules = shd.rules_for(cfg, mesh,
+                          "long_decode" if kind == "long_decode" else
+                          "decode")
+    axes_tree = _axes_tree(api)
+
+    def _init_split(key):
+        vals, _ = split_tree(api.init(key))
+        return vals
+    params_struct = jax.eval_shape(_init_split, jax.random.PRNGKey(0))
+    param_shardings = jax.tree_util.tree_map(
+        lambda axes, sds: NamedSharding(
+            mesh, shd.spec_for(mesh, rules, axes, sds.shape)),
+        axes_tree, params_struct,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+    state_struct = jax.eval_shape(
+        lambda: api.init_cache(global_batch, seq_len))
+    state_shardings = shd.state_shardings(mesh, rules, state_struct, cfg,
+                                          global_batch, kind)
+    tok_struct = jax.ShapeDtypeStruct((global_batch,), jnp.int32)
+    tok_shard = shd.batch_shardings(mesh, rules, tok_struct, global_batch)
+
+    def decode(params, tokens, state):
+        return api.decode(params, tokens, state)
+
+    jitted = jax.jit(decode,
+                     in_shardings=(param_shardings, tok_shard,
+                                   state_shardings),
+                     out_shardings=(None, state_shardings),
+                     donate_argnums=(2,))
+    structs = dict(params=params_struct, tokens=tok_struct,
+                   state=state_struct)
+    return jitted, dict(params=param_shardings, tokens=tok_shard,
+                        state=state_shardings), structs

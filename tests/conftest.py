@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.systems.config import get_system
+
+
+@pytest.fixture(scope="session")
+def small_system():
+    return get_system("marconi100").scaled(64)
+
+
+@pytest.fixture(scope="session")
+def small_jobs(small_system):
+    spec = WorkloadSpec(n_jobs=80, duration_s=4 * 3600.0, load=1.0,
+                        trace_len=8, n_accounts=8, mean_wall_s=1800.0,
+                        seed=7)
+    return generate(small_system, spec)
+
+
+@pytest.fixture(scope="session")
+def small_table(small_jobs, small_system):
+    small_jobs.assign_prepop_placement(0.0, small_system.n_nodes)
+    return small_jobs.to_table(96)

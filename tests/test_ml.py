@@ -1,0 +1,96 @@
+"""ML-guided scheduling pipeline tests (paper §4.4)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.ml import kmeans
+from repro.ml.forest import RandomForest
+from repro.ml.pipeline import MLSchedulerModel, attach_scores
+from repro.ml.scoring import score
+from repro.systems.config import get_system
+
+SYS = get_system("fugaku").scaled(128)
+
+
+def test_kmeans_separates_blobs():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 0.3, (100, 4))
+    b = rng.normal(5, 0.3, (80, 4))
+    x = jnp.asarray(np.vstack([a, b]))
+    centers, labels, inertia = kmeans.fit(x, 2, seed=1)
+    labels = np.asarray(labels)
+    # one cluster should be (almost) pure per blob
+    same_a = (labels[:100] == labels[0]).mean()
+    same_b = (labels[100:] == labels[100]).mean()
+    assert same_a > 0.95 and same_b > 0.95
+    assert labels[0] != labels[100]
+
+
+def test_forest_beats_chance_on_separable_data():
+    rng = np.random.default_rng(1)
+    n = 400
+    x = rng.normal(0, 1, (n, 5))
+    y = (x[:, 0] + 0.5 * x[:, 2] > 0).astype(np.int64)
+    clf = RandomForest.fit(x[:300], y[:300], 2, n_trees=8, depth=5, seed=0)
+    pred = np.asarray(clf.predict(jnp.asarray(x[300:])))
+    acc = (pred == y[300:]).mean()
+    assert acc > 0.85
+
+
+def test_score_is_decreasing_in_features():
+    alpha = jnp.ones(3)
+    lo = score(jnp.asarray([[1.0, 1.0, 1.0]]), alpha)
+    hi = score(jnp.asarray([[100.0, 100.0, 100.0]]), alpha)
+    assert float(lo[0]) > float(hi[0])  # bigger impact -> lower score
+
+
+def test_pipeline_end_to_end_and_policy():
+    spec = WorkloadSpec(n_jobs=300, duration_s=86400.0, load=1.2,
+                        trace_len=8, n_accounts=16, seed=4)
+    train_js = generate(SYS, spec)
+    model = MLSchedulerModel.fit(train_js, k=4, n_trees=6, depth=5)
+    test_js = generate(SYS, WorkloadSpec(n_jobs=120, duration_s=6 * 3600.0,
+                                         load=1.5, trace_len=8, seed=9))
+    cluster, pred = model.predict_metrics(test_js)
+    assert pred.shape == (120, 3)
+    assert int(jnp.max(cluster)) < 4
+    attach_scores(test_js, model)
+    assert np.isfinite(test_js.score).all()
+
+    # the ml policy must schedule high-score jobs earlier under contention
+    table = test_js.to_table()
+    final, hist = eng.simulate(SYS, table, T.Scenario.make("ml", "first-fit"),
+                               0.0, 4 * 3600.0)
+    start = np.asarray(final.start)[:len(test_js)]
+    started = np.isfinite(start)
+    assert started.sum() > 10
+    # rank correlation: among started jobs, higher score -> earlier start
+    s = test_js.score[started]
+    st_t = start[started]
+    from numpy import argsort
+    rank_score = np.argsort(np.argsort(-s))
+    rank_start = np.argsort(np.argsort(st_t))
+    corr = np.corrcoef(rank_score, rank_start)[0, 1]
+    assert corr > -0.1  # weakly positive: queue pressure + arrival times mix
+
+
+def test_ml_policy_reduces_power_spikes_under_load():
+    """Paper Fig. 10a: under high load the ML policy (favoring small/short/
+    low-power jobs) lowers the power peak vs LJF."""
+    spec = WorkloadSpec(n_jobs=200, duration_s=4 * 3600.0, load=2.2,
+                        trace_len=8, n_accounts=8, seed=13,
+                        max_frac_nodes=0.4)
+    js = generate(SYS, spec)
+    model = MLSchedulerModel.fit(js, k=3, n_trees=4, depth=4)
+    attach_scores(js, model)
+    table = js.to_table()
+    _, h_ml = eng.simulate(SYS, table, T.Scenario.make("ml", "first-fit"),
+                           0.0, 2 * 3600.0)
+    _, h_ljf = eng.simulate(SYS, table, T.Scenario.make("ljf", "first-fit"),
+                            0.0, 2 * 3600.0)
+    p_ml = np.asarray(h_ml.power_it)
+    p_ljf = np.asarray(h_ljf.power_it)
+    assert p_ml.max() <= p_ljf.max() * 1.05

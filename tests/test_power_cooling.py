@@ -1,0 +1,86 @@
+"""Physics substrate tests: power model, conversion losses, cooling ODE."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cooling import model as cooling
+from repro.core import types as T
+from repro.power import losses as pl
+from repro.power import model as pm
+from repro.systems.config import get_system
+
+SYS = get_system("marconi100").scaled(64)
+
+
+def test_locf_profile_lookup():
+    table = T.JobTable(
+        submit=jnp.zeros(2), limit=jnp.ones(2), wall=jnp.ones(2) * 100,
+        nodes=jnp.ones(2, jnp.int32), priority=jnp.zeros(2),
+        account=jnp.zeros(2, jnp.int32), rec_start=jnp.zeros(2),
+        first_node=jnp.zeros(2, jnp.int32), score=jnp.zeros(2),
+        power_prof=jnp.asarray([[100.0, 200.0, 300.0],
+                                [50.0, 50.0, 50.0]]),
+        util_prof=jnp.ones((2, 3)) * 0.5, valid=jnp.ones(2, bool))
+    jstate = jnp.asarray([T.RUNNING, T.RUNNING], jnp.int32)
+    start = jnp.zeros(2)
+    # mid-trace
+    p = pm.job_node_power(table, jstate, start, jnp.float32(20.0), 20.0)
+    np.testing.assert_allclose(np.asarray(p), [200.0, 50.0])
+    # beyond the trace -> last observation carried forward (paper §3.2.2)
+    p = pm.job_node_power(table, jstate, start, jnp.float32(500.0), 20.0)
+    np.testing.assert_allclose(np.asarray(p), [300.0, 50.0])
+    # before start clamps to first sample
+    p = pm.job_node_power(table, jstate, start + 100.0, jnp.float32(0.0),
+                          20.0)
+    np.testing.assert_allclose(np.asarray(p), [100.0, 50.0])
+
+
+def test_idle_nodes_draw_idle_power():
+    node_job = jnp.asarray([-1, 0, -1], jnp.int32)
+    job_pw = jnp.asarray([900.0])
+    table = None
+    p = pm.node_power(SYS, table, node_job, job_pw)
+    np.testing.assert_allclose(
+        np.asarray(p), [SYS.power.idle_node_w, 900.0, SYS.power.idle_node_w])
+
+
+def test_conversion_losses_positive_and_bounded():
+    for load_w in [1e3, 1e5, 1e6, 5e6]:
+        p_in, loss = pl.conversion(SYS.power, jnp.float32(load_w), 10.0)
+        assert float(p_in) > load_w           # losses are positive
+        assert float(loss) / load_w < 0.6     # efficiency floor respected
+        assert np.isclose(float(p_in) - load_w, float(loss), rtol=1e-6)
+
+
+def test_efficiency_improves_with_load():
+    """Fractional loss at higher rectifier load must be lower (up to rated):
+    this is what makes scheduling visible in the loss curve."""
+    frac = []
+    for load_w in [1e4, 1e5, 1e6]:
+        p_in, loss = pl.conversion(SYS.power, jnp.float32(load_w), 10.0)
+        frac.append(float(loss) / load_w)
+    assert frac[0] > frac[1] > frac[2]
+
+
+def test_cooling_steady_state_tracks_load():
+    cfg = SYS.cooling
+    state = cooling.init_state(cfg)
+    lo = jnp.full((cfg.n_groups,), 2e4)
+    hi = jnp.full((cfg.n_groups,), 2e5)
+    for _ in range(500):
+        state, pw_lo, tret_lo = cooling.step(cfg, state, lo, 30.0)
+    state_hi = cooling.init_state(cfg)
+    for _ in range(500):
+        state_hi, pw_hi, tret_hi = cooling.step(cfg, state_hi, hi, 30.0)
+    assert float(tret_hi) > float(tret_lo)       # hotter water under load
+    assert float(pw_hi) > float(pw_lo)           # more fan power under load
+    assert float(state_hi.t_tower) > float(state.t_tower)
+    # return temperature always above wet bulb
+    assert float(tret_lo) > cfg.t_wetbulb_c
+
+
+def test_pue_above_one_and_reasonable():
+    p_it = jnp.float32(1.5e6)
+    _, loss = pl.conversion(SYS.power, p_it, 15.0)
+    pue = cooling.pue(p_it, loss, jnp.float32(5e4))
+    assert 1.0 < float(pue) < 1.5

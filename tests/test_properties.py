@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the engine's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.datasets.base import JobSet
+from repro.systems.config import get_system
+
+SYSTEM = get_system("lassen").scaled(16)
+N = SYSTEM.n_nodes
+DT = SYSTEM.dt
+
+
+@st.composite
+def jobsets(draw):
+    n = draw(st.integers(4, 24))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31 - 1)))
+    submit = np.sort(rng.uniform(0, 1800, n))
+    wall = np.maximum(np.round(rng.uniform(DT, 2400, n) / DT), 1) * DT
+    nodes = rng.integers(1, N + 1, n)
+    limit = wall * rng.uniform(1.0, 2.5, n)
+    return JobSet(submit=submit, limit=limit, wall=wall,
+                  nodes=nodes.astype(np.int64),
+                  priority=rng.uniform(0, 10, n),
+                  account=rng.integers(0, 4, n),
+                  rec_start=submit + rng.uniform(0, 600, n),
+                  power_prof=rng.uniform(300, 2000, (n, 1)).astype(np.float32),
+                  util_prof=rng.uniform(0.2, 1.0, (n, 1)).astype(np.float32))
+
+
+POLICIES = ["fcfs", "sjf", "ljf", "priority"]
+BACKFILLS = ["none", "first-fit", "easy"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(js=jobsets(), pol=st.sampled_from(POLICIES),
+       bf=st.sampled_from(BACKFILLS))
+def test_engine_invariants(js, pol, bf):
+    table = js.to_table(32)
+    scen = T.Scenario.make(pol, bf)
+    final, hist = eng.simulate(SYSTEM, table, scen, 0.0, 3600.0,
+                               num_accounts=8)
+    jstate = np.asarray(final.jstate)[:len(js)]
+    start = np.asarray(final.start)[:len(js)]
+    end = np.asarray(final.end)[:len(js)]
+    util = np.asarray(hist.util)
+
+    # utilization is a fraction
+    assert (util >= -1e-6).all() and (util <= 1.0 + 1e-6).all()
+    # no job starts before submission
+    started = np.isfinite(start)
+    assert (start[started] >= js.submit[started] - 1e-3).all()
+    # realized runtime == ground-truth wall
+    fin = np.isfinite(end) & started
+    np.testing.assert_allclose(end[fin] - start[fin], js.wall[fin],
+                               rtol=1e-5)
+    # done jobs completed within the horizon
+    done = jstate == T.DONE
+    assert (end[done] <= 3600.0 + 1e-3).all()
+    # free count consistent at the end
+    node_job = np.asarray(final.node_job)
+    assert int(final.free_count) == (node_job < 0).sum()
+    # energy accounting non-negative and consistent
+    assert float(final.energy_total) >= float(final.energy_it) >= 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(js=jobsets())
+def test_replay_is_deterministic_fixed_point(js):
+    """Rescheduling with the same policy the generator used (fcfs/first-fit)
+    from t0=0 reproduces the recorded starts when recorded starts came from
+    the same capacity semantics."""
+    from repro.datasets.synthetic import event_schedule
+    rec = event_schedule(js.submit, js.limit, js.wall, js.nodes, N, DT,
+                         policy="fcfs", backfill="firstfit")
+    ok = np.isfinite(rec)
+    js.rec_start = np.where(ok, rec, 7200.0)
+    table = js.to_table(32)
+    final, _ = eng.simulate(SYSTEM, table, T.Scenario.make("fcfs",
+                                                           "first-fit"),
+                            0.0, 3600.0, num_accounts=8)
+    start = np.asarray(final.start)[:len(js)]
+    both = np.isfinite(start) & ok & (rec < 3600.0 - DT)
+    np.testing.assert_allclose(start[both], rec[both], atol=DT)
+
+
+@settings(max_examples=10, deadline=None)
+@given(js=jobsets())
+def test_account_energy_conservation(js):
+    """Sum of per-account energy of completed jobs equals the sum of their
+    job energies."""
+    table = js.to_table(32)
+    final, _ = eng.simulate(SYSTEM, table, T.Scenario.make("fcfs",
+                                                           "first-fit"),
+                            0.0, 3600.0, num_accounts=8)
+    done = np.asarray(final.jstate)[:len(js)] == T.DONE
+    je = np.asarray(final.jenergy)[:len(js)]
+    acct_e = float(np.asarray(final.accounts.energy).sum())
+    assert np.isclose(acct_e, je[done].sum(), rtol=1e-4, atol=1.0)
