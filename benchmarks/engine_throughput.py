@@ -9,6 +9,13 @@ import time
 import numpy as np
 import jax
 
+if __package__ in (None, ""):  # `python benchmarks/engine_throughput.py`
+    import pathlib
+    import sys
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
 from benchmarks.common import save
 from repro.core import engine as eng
 from repro.core import types as T
@@ -68,3 +75,46 @@ def run(quick: bool = False):
         })
     save("engine_throughput", {"rows": rows})
     return rows
+
+
+def smoke(n_steps: int = 50):
+    """CI perf canary: a tiny 2-scenario sweep (grid signals active) for
+    ``n_steps`` engine steps. Fails loudly on compile errors and emits one
+    CSV row so perf regressions surface in PR logs."""
+    sys_ = get_system("marconi100").scaled(64)
+    js = generate(sys_, WorkloadSpec(n_jobs=64, duration_s=n_steps * sys_.dt,
+                                     load=1.2, trace_len=8, seed=1))
+    table = js.to_table()
+    t1 = n_steps * sys_.dt
+    from repro.grid import signals as gsig
+    sig = gsig.synthetic_signals(
+        sys_.grid, n_steps, sys_.dt, seed=1,
+        cap_base_w=0.5 * sys_.n_nodes * sys_.power.peak_node_w)
+    scens = [T.Scenario.make("fcfs", "easy"),
+             T.Scenario.make("carbon_aware", "easy", carbon_weight=4.0)]
+    eng.simulate_sweep(sys_, table, scens, 0.0, t1, signals=sig)  # compile
+    t0 = time.perf_counter()
+    final, _ = eng.simulate_sweep(sys_, table, scens, 0.0, t1, signals=sig)
+    jax.block_until_ready(final.t)
+    wall = time.perf_counter() - t0
+    row = {"name": "engine/smoke", "us_per_call": wall / n_steps * 1e6,
+           "wall_s": wall, "steps": n_steps, "scenarios": len(scens),
+           "jobs_done": float(np.asarray(final.completed).sum())}
+    print(f"{row['name']},{row['us_per_call']:.1f},"
+          f"steps={n_steps};scenarios={len(scens)};wall_s={wall:.3f}")
+    return [row]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="50-step CI canary instead of the full benchmark")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.steps)
+    else:
+        from benchmarks.common import emit_csv
+        emit_csv(run(quick=args.quick))

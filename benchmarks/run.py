@@ -20,6 +20,7 @@ BENCHES = [
     "fig6_frontier",
     "fig7_external",
     "fig8_incentives",
+    "fig_carbon",
     "fig10_ml",
     "engine_throughput",
     "roofline_table",

@@ -6,6 +6,8 @@ whole ledger update is O(J) and fully traceable.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -48,7 +50,25 @@ def fold_completions(system: SystemConfig, table: T.JobTable,
         turnaround_sum=add(accounts.turnaround_sum, turn),
         power_sum=add(accounts.power_sum, avg_pnode),
         fugaku_pts=add(accounts.fugaku_pts, pts),
+        carbon_kg=accounts.carbon_kg,   # accrued per step (accrue_grid)
+        cost=accounts.cost,
     )
+
+
+def accrue_grid(table: T.JobTable, accounts: T.AccountStats,
+                job_energy_step: jnp.ndarray, carbon_gkwh: jnp.ndarray,
+                price_kwh: jnp.ndarray) -> T.AccountStats:
+    """Per-step grid accrual: attribute each job's IT energy this step to
+    its account at the *current* carbon intensity and price, so accounts
+    that shift load into clean/cheap windows provably accumulate less —
+    the collect side of a low-carbon incentive (redeem via a scheduler
+    policy, like the Fugaku points loop)."""
+    A = accounts.energy.shape[0]
+    kwh = _segsum(job_energy_step, table.account, A) / 3.6e6
+    return dataclasses.replace(
+        accounts,
+        carbon_kg=accounts.carbon_kg + kwh * carbon_gkwh * 1e-3,
+        cost=accounts.cost + kwh * price_kwh)
 
 
 # --- persistence (paper: "--accounts / --accounts-json": collect in one run,
@@ -59,7 +79,11 @@ def to_json_dict(accounts: T.AccountStats) -> dict:
 
 
 def from_json_dict(d: dict) -> T.AccountStats:
-    return T.AccountStats(**{k: jnp.asarray(v, jnp.float32) for k, v in d.items()})
+    n = len(next(iter(d.values())))
+    zeros = [0.0] * n  # ledgers saved before the grid fields existed
+    return T.AccountStats(**{
+        f.name: jnp.asarray(d.get(f.name, zeros), jnp.float32)
+        for f in dataclasses.fields(T.AccountStats)})
 
 
 def save_json(accounts: T.AccountStats, path: str) -> None:

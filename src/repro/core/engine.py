@@ -3,9 +3,11 @@
 Main loop per step (paper's four well-defined steps):
   (1) prepare     -- clear completed jobs, free their nodes, fold accounting;
   (2) arrivals    -- move submitted jobs into the queue;
-  (3) schedule    -- policy sort + bounded admission (repro.core.scheduler);
-  (4) tick        -- power model -> conversion losses -> cooling ODE ->
-                     telemetry row; advance time.
+  (3) schedule    -- policy sort + bounded admission (repro.core.scheduler),
+                     cap-aware when a power-cap schedule is active;
+  (4) tick        -- power model -> DVFS cap enforcement (repro.grid) ->
+                     conversion losses -> cooling ODE -> telemetry row;
+                     advance time.
 
 The engine is pure: ``simulate`` compiles once per (system, job-table shape)
 and a *batch of scenarios* (policy x backfill x incentive weights) runs under
@@ -17,6 +19,7 @@ external scheduler decides placements between compiled steps.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
@@ -28,9 +31,11 @@ from repro.core import accounts as acct_mod
 from repro.core import resource_manager as rm
 from repro.core import scheduler as sched
 from repro.core import types as T
+from repro.grid import powercap
+from repro.grid import signals as gsig
+from repro.kernels.power_topo import ops as topo_ops
 from repro.power import losses as plosses
 from repro.power import model as pmodel
-from repro.kernels.power_topo import ops as topo_ops
 from repro.systems.config import SystemConfig
 
 
@@ -64,13 +69,19 @@ def init_state(system: SystemConfig, table: T.JobTable, t0: float,
     free_count = jnp.sum((node_job < 0).astype(jnp.int32))
     if accounts is None:
         accounts = T.AccountStats.zeros(num_accounts)
+    # prepopulated jobs ran unthrottled before the window: work-time
+    # progress equals their wall-clock elapsed at t0
+    progress = jnp.where(running0, jnp.maximum(t0 - table.rec_start, 0.0),
+                         0.0).astype(jnp.float32)
     return T.SimState(
-        t=jnp.float32(t0), jstate=jstate, start=start, end=end,
+        t=jnp.float32(t0), step=jnp.int32(0), jstate=jstate, start=start,
+        end=end, progress=progress,
         jenergy=jnp.zeros((J,), jnp.float32), node_job=node_job,
         free_count=free_count, accounts=accounts,
         cooling=cooling.init_state(system.cooling),
         energy_total=jnp.float32(0.0), energy_it=jnp.float32(0.0),
-        energy_loss=jnp.float32(0.0), completed=jnp.float32(0.0))
+        energy_loss=jnp.float32(0.0), completed=jnp.float32(0.0),
+        emissions_kg=jnp.float32(0.0), energy_cost=jnp.float32(0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -88,24 +99,49 @@ def _prepare_and_arrivals(system: SystemConfig, table: T.JobTable,
                                          st.start, st.end, st.jenergy)
     jstate = jnp.where((jstate == T.PENDING) & (table.submit <= t),
                        T.QUEUED, jstate)
-    return T.SimState(t=t, jstate=jstate, start=st.start, end=st.end,
-                      jenergy=st.jenergy, node_job=node_job,
-                      free_count=st.free_count + freed, accounts=accounts,
-                      cooling=st.cooling, energy_total=st.energy_total,
-                      energy_it=st.energy_it, energy_loss=st.energy_loss,
-                      completed=st.completed + jnp.sum(done_now))
+    return dataclasses.replace(
+        st, jstate=jstate, node_job=node_job,
+        free_count=st.free_count + freed, accounts=accounts,
+        completed=st.completed + jnp.sum(done_now))
 
 
-def _tick(system: SystemConfig, table: T.JobTable,
-          st: T.SimState) -> Tuple[T.SimState, T.StepRecord]:
-    """Phase (4): physics + accounting + telemetry; advances time."""
+def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
+          grid: gsig.GridNow | None, cap_active: jnp.ndarray | None
+          ) -> Tuple[T.SimState, T.StepRecord]:
+    """Phase (4): cap enforcement + physics + accounting + telemetry.
+
+    When the projected IT draw exceeds ``cap_active`` the DVFS pass
+    (repro.grid.powercap) throttles every running node's dynamic power by a
+    common factor c and the affected jobs' remaining runtime dilates by 1/c
+    for this step — capping trades completion latency for peak power.
+    ``grid is None`` is compile-time "no grid layer": single group-reduce,
+    no accrual, no dilation — the seed engine's exact cost.
+    """
     dt = system.dt
     t = st.t
-    job_pw = pmodel.job_node_power(table, st.jstate, st.start, t,
-                                   system.prof_dt)
+    has_grid = grid is not None
+    # profiles are indexed by work-time progress, so a throttled job's
+    # trace plays at its dilated tempo instead of wall-clock time
+    job_pw = pmodel.job_node_power_elapsed(table, st.jstate, st.progress,
+                                           system.prof_dt)
     node_pw = pmodel.node_power(system, table, st.node_job, job_pw)
-    p_it = pmodel.system_it_power(node_pw)
-    group_heat = topo_ops.group_power(node_pw, system.cooling.n_groups)
+    running = st.jstate == T.RUNNING
+    if has_grid:
+        idle = system.power.idle_node_w
+        cap = powercap.enforce_cap(system, node_pw, cap_active)
+        p_it = cap.p_it
+        group_heat = cap.group_heat
+        # DVFS only slows jobs with dynamic (above-idle) draw; a job at or
+        # below the idle floor keeps full speed (its power is untouched by
+        # throttle_power, so its runtime must be too)
+        c_job = jnp.where(running & (job_pw > idle), cap.c, 1.0)
+        job_pw = powercap.throttle_power(job_pw, idle, cap.c)
+        throttle = 1.0 - cap.c
+    else:
+        p_it = pmodel.system_it_power(node_pw)
+        group_heat = topo_ops.group_power(node_pw, system.cooling.n_groups)
+        cap_active = T.INF
+        throttle = jnp.float32(0.0)
     n_racks = max(system.n_nodes // system.power.nodes_per_rack, 1)
     p_in, p_loss = plosses.conversion(system.power, p_it, float(n_racks))
     cool_state, p_cool, t_tower_ret = cooling.step(system.cooling, st.cooling,
@@ -113,9 +149,29 @@ def _tick(system: SystemConfig, table: T.JobTable,
     p_total = p_in + p_cool
     pue = cooling.pue(p_it, p_loss, p_cool)
 
-    running = st.jstate == T.RUNNING
-    jenergy = st.jenergy + jnp.where(
+    job_e_step = jnp.where(
         running, job_pw * table.nodes.astype(jnp.float32) * dt, 0.0)
+    jenergy = st.jenergy + job_e_step
+
+    if has_grid:
+        accounts = acct_mod.accrue_grid(table, st.accounts, job_e_step,
+                                        grid.carbon, grid.price)
+        # runtime dilation: a throttled step advances a job's work-time by
+        # only c*dt (each unit of work takes 1/c longer), so its projected
+        # end recedes by the shortfall dt*(1 - c). The two views agree:
+        # t >= end  <=>  progress >= wall.  A job throttled at c for its
+        # whole life runs 1/c times longer in total.
+        end = jnp.where(running & jnp.isfinite(st.end),
+                        st.end + dt * (1.0 - c_job), st.end)
+        progress = st.progress + jnp.where(running, c_job * dt, 0.0)
+        emissions = p_total * dt * grid.carbon / 3.6e6 * 1e-3  # g/kWh -> kg
+        cost = p_total * dt * grid.price / 3.6e6               # $/kWh
+    else:
+        accounts = st.accounts
+        end = st.end
+        progress = st.progress + jnp.where(running, dt, 0.0)
+        emissions = jnp.float32(0.0)
+        cost = jnp.float32(0.0)
 
     busy = jnp.float32(system.n_nodes) - st.free_count.astype(jnp.float32)
     rec = T.StepRecord(
@@ -123,24 +179,38 @@ def _tick(system: SystemConfig, table: T.JobTable,
         power_total=p_total, pue=pue, t_tower_return=t_tower_ret,
         util=busy / system.n_nodes,
         n_queued=jnp.sum(st.jstate == T.QUEUED).astype(jnp.float32),
-        n_running=jnp.sum(running).astype(jnp.float32))
+        n_running=jnp.sum(running).astype(jnp.float32),
+        emissions_kg=emissions, energy_cost=cost, cap_w=cap_active,
+        throttle_frac=throttle)
 
-    new = T.SimState(
-        t=t + dt, jstate=st.jstate, start=st.start, end=st.end,
-        jenergy=jenergy, node_job=st.node_job, free_count=st.free_count,
-        accounts=st.accounts, cooling=cool_state,
+    new = dataclasses.replace(
+        st, t=t + dt, step=st.step + 1, end=end, progress=progress,
+        jenergy=jenergy, accounts=accounts, cooling=cool_state,
         energy_total=st.energy_total + p_total * dt,
         energy_it=st.energy_it + p_it * dt,
         energy_loss=st.energy_loss + p_loss * dt,
-        completed=st.completed)
+        emissions_kg=st.emissions_kg + emissions,
+        energy_cost=st.energy_cost + cost)
     return new, rec
 
 
 def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
-                scen: T.Scenario) -> Tuple[T.SimState, T.StepRecord]:
+                scen: T.Scenario, signals: gsig.GridSignals | None = None
+                ) -> Tuple[T.SimState, T.StepRecord]:
     st = _prepare_and_arrivals(system, table, st)
-    st = sched.schedule_step(system, table, st, scen)
-    return _tick(system, table, st)
+    if signals is None:
+        # no grid layer: skip the admission power pass and cap machinery
+        st = sched.schedule_step(system, table, st, scen)
+        return _tick(system, table, st, None, None)
+    grid = gsig.at_step(signals, st.step)
+    cap_active = grid.cap_w * scen.cap_scale
+    # raw IT draw after completions: the cap-aware admission baseline
+    job_pw = pmodel.job_node_power_elapsed(table, st.jstate, st.progress,
+                                           system.prof_dt)
+    node_pw = pmodel.node_power(system, table, st.node_job, job_pw)
+    st = sched.schedule_step(system, table, st, scen, grid,
+                             proj_pw=pmodel.system_it_power(node_pw))
+    return _tick(system, table, st, grid, cap_active)
 
 
 # ---------------------------------------------------------------------------
@@ -148,13 +218,18 @@ def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnums=(0,))
 def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
-                  place_ids: jnp.ndarray) -> Tuple[T.SimState, T.StepRecord]:
+                  place_ids: jnp.ndarray,
+                  signals: gsig.GridSignals | None = None
+                  ) -> Tuple[T.SimState, T.StepRecord]:
     """One engine step where placement decisions come from outside.
 
     ``place_ids``: i32[K] job ids the external scheduler wants started now
     (padded with -1). S-RAPS "interprets the information returned from the
     scheduler ... and triggers the resource manager" (paper §3.2.4).
+    The cap schedule (when ``signals`` is given) still applies — an
+    external scheduler cannot opt out of facility power management.
     """
+    grid = None if signals is None else gsig.at_step(signals, st.step)
     st = _prepare_and_arrivals(system, table, st)
 
     def body(i, carry):
@@ -175,34 +250,41 @@ def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     carry = (st.node_job, st.jstate, st.start, st.end, st.free_count)
     node_job, jstate, start, end, free_count = jax.lax.fori_loop(
         0, place_ids.shape[0], body, carry)
-    st = T.SimState(t=st.t, jstate=jstate, start=start, end=end,
-                    jenergy=st.jenergy, node_job=node_job,
-                    free_count=free_count, accounts=st.accounts,
-                    cooling=st.cooling, energy_total=st.energy_total,
-                    energy_it=st.energy_it, energy_loss=st.energy_loss,
-                    completed=st.completed)
-    return _tick(system, table, st)
+    st = dataclasses.replace(st, jstate=jstate, start=start, end=end,
+                             node_job=node_job, free_count=free_count)
+    return _tick(system, table, st, grid,
+                 None if grid is None else grid.cap_w)
 
 
 # ---------------------------------------------------------------------------
 # Full simulation.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0, 4))
+@functools.partial(jax.jit, static_argnums=(0, 5))
 def _simulate_jit(system: SystemConfig, table: T.JobTable, st0: T.SimState,
-                  scen: T.Scenario, n_steps: int):
+                  scen: T.Scenario, signals: gsig.GridSignals | None,
+                  n_steps: int):
+    # signals=None is an empty pytree: the no-grid fast path in engine_step
+    # is selected at trace time and the cap machinery vanishes entirely
     def body(st, _):
-        return engine_step(system, table, st, scen)
+        return engine_step(system, table, st, scen, signals)
     return jax.lax.scan(body, st0, None, length=n_steps)
 
 
 def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
              t0: float, t1: float,
              accounts: T.AccountStats | None = None,
-             num_accounts: int = 64) -> Tuple[T.SimState, T.StepRecord]:
-    """Run the twin from t0 to t1. Returns (final_state, history)."""
+             num_accounts: int = 64,
+             signals: gsig.GridSignals | None = None
+             ) -> Tuple[T.SimState, T.StepRecord]:
+    """Run the twin from t0 to t1. Returns (final_state, history).
+
+    ``signals`` (repro.grid.signals) enables the grid layer: carbon/price
+    accounting, the facility power-cap schedule and the grid-aware
+    policies. Defaults to neutral signals (zero carbon/price, uncapped).
+    """
     n_steps = int(round((t1 - t0) / system.dt))
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
-    return _simulate_jit(system, table, st0, scen, n_steps)
+    return _simulate_jit(system, table, st0, scen, signals, n_steps)
 
 
 _STATIC_CACHE: dict = {}
@@ -211,47 +293,53 @@ _STATIC_CACHE: dict = {}
 def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
                     backfill: str, t0: float, t1: float,
                     accounts: T.AccountStats | None = None,
-                    num_accounts: int = 64):
+                    num_accounts: int = 64,
+                    signals: gsig.GridSignals | None = None):
     """Single-scenario fast path: policy/backfill are *compile-time*
     constants, so only the selected priority key is computed, non-EASY runs
     skip the reservation machinery entirely, and all policy selects fold
     away (EXPERIMENTS.md §Perf-twin iter T1)."""
     n_steps = int(round((t1 - t0) / system.dt))
     scen = T.Scenario(T.POLICY_NAMES[policy], T.BACKFILL_NAMES[backfill],
+                      1.0, 1.0, 1.0,
                       1.0)  # raw Python values -> static in the closure
     key = (system, policy, backfill, n_steps, table.num_jobs,
-           table.prof_len, num_accounts)
+           table.prof_len, num_accounts, signals is None)
     fn = _STATIC_CACHE.get(key)
     if fn is None:
-        def run(table_, st0_):
+        def run(table_, st0_, signals_):
             def body(st, _):
-                return engine_step(system, table_, st, scen)
+                return engine_step(system, table_, st, scen, signals_)
             return jax.lax.scan(body, st0_, None, length=n_steps)
         fn = jax.jit(run)
         _STATIC_CACHE[key] = fn
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
-    return fn(table, st0)
+    return fn(table, st0, signals)
 
 
 def simulate_sweep(system: SystemConfig, table: T.JobTable,
                    scens: list[T.Scenario], t0: float, t1: float,
                    accounts: T.AccountStats | None = None,
-                   num_accounts: int = 64) -> Tuple[T.SimState, T.StepRecord]:
+                   num_accounts: int = 64,
+                   signals: gsig.GridSignals | None = None
+                   ) -> Tuple[T.SimState, T.StepRecord]:
     """Vectorized what-if sweep: one compiled program, S scenarios.
 
-    The job table and initial state are shared (broadcast); only the
-    Scenario leaves carry a batch axis.
+    The job table, initial state and grid signals are shared (broadcast);
+    only the Scenario leaves carry a batch axis — so a (policy x cap-level
+    x carbon-weight) sweep reads ONE signal set and scales the cap via
+    ``Scenario.cap_scale``.
     """
     n_steps = int(round((t1 - t0) / system.dt))
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
     batched = T.stack_scenarios(scens)
 
-    @functools.partial(jax.jit, static_argnums=(0, 4))
-    def run(sys_, table_, st0_, scen_, n_steps_):
+    @functools.partial(jax.jit, static_argnums=(0, 5))
+    def run(sys_, table_, st0_, scen_, signals_, n_steps_):
         def one(scen1):
             def body(st, _):
-                return engine_step(sys_, table_, st, scen1)
+                return engine_step(sys_, table_, st, scen1, signals_)
             return jax.lax.scan(body, st0_, None, length=n_steps_)
         return jax.vmap(one)(scen_)
 
-    return run(system, table, st0, batched, n_steps)
+    return run(system, table, st0, batched, signals, n_steps)

@@ -22,11 +22,14 @@ Design notes
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import resource_manager as rm
 from repro.core import types as T
+from repro.grid import signals as gsig
 from repro.systems.config import SystemConfig
 
 
@@ -34,18 +37,31 @@ from repro.systems.config import SystemConfig
 # Priority keys (smaller key = scheduled earlier).
 # ---------------------------------------------------------------------------
 def policy_key(table: T.JobTable, accounts: T.AccountStats,
-               scen: T.Scenario) -> jnp.ndarray:
+               scen: T.Scenario,
+               grid: gsig.GridNow | None = None) -> jnp.ndarray:
     """f32[J] primary sort key for the selected policy.
 
     When ``scen.policy`` is a *Python int* (static-scenario fast path,
     EXPERIMENTS.md §Perf-twin) only the selected key is computed; traced
     policies compute the full stack and select (vmappable sweeps).
     """
+    if grid is None:
+        grid = gsig.now_neutral()
     acct = table.account
 
     def avg_pw():
         return accounts.power_sum[acct] / jnp.maximum(
             accounts.jobs_done[acct], 1.0)
+
+    # grid-aware deferral (carbon_aware / price_aware): FCFS order plus a
+    # penalty on *energy-heavy* jobs (node-seconds as the energy proxy)
+    # while the signal sits above its rolling mean. Weight 0 == pure FCFS,
+    # so a (weight x cap) sweep brackets the baseline.
+    defer_cost = table.nodes.astype(jnp.float32) * table.limit
+
+    def grid_key(now, ref, weight):
+        excess = jnp.maximum(now - ref, 0.0) / jnp.maximum(ref, 1e-6)
+        return table.submit + weight * excess * defer_cost
 
     builders = [
         lambda: table.rec_start,            # REPLAY: recorded order
@@ -59,6 +75,10 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
         lambda: accounts.ed2p[acct],        # ACCT_ED2P
         lambda: -accounts.fugaku_pts[acct],  # ACCT_FUGAKU_PTS
         lambda: -table.score,               # ML score (higher is better)
+        lambda: grid_key(grid.carbon, grid.carbon_ref,
+                         scen.carbon_weight),       # CARBON_AWARE
+        lambda: grid_key(grid.price, grid.price_ref,
+                         scen.price_weight),        # PRICE_AWARE
     ]
     if isinstance(scen.policy, int):        # static fast path
         k = builders[scen.policy]()
@@ -75,14 +95,15 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
 
 
 def queue_order(table: T.JobTable, st: T.SimState, accounts: T.AccountStats,
-                scen: T.Scenario) -> tuple[jnp.ndarray, jnp.ndarray]:
+                scen: T.Scenario, grid: gsig.GridNow | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Sorted queue: eligible jobs first by (key, submit). Returns
     (order i32[J], eligible bool[J])."""
     queued = st.jstate == T.QUEUED
     replay_gate = jnp.where(scen.policy == T.POLICY_REPLAY,
                             table.rec_start <= st.t, True)
     elig = queued & replay_gate & table.valid
-    key = jnp.where(elig, policy_key(table, accounts, scen), jnp.inf)
+    key = jnp.where(elig, policy_key(table, accounts, scen, grid), jnp.inf)
     tie = jnp.where(elig, table.submit, jnp.inf)
     order = jnp.lexsort((tie, key))  # primary: key, secondary: submit
     return order.astype(jnp.int32), elig
@@ -121,10 +142,32 @@ def shadow_for(end_sorted: jnp.ndarray, cum_nodes: jnp.ndarray,
 # The scheduling pass.
 # ---------------------------------------------------------------------------
 def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
-                  scen: T.Scenario) -> T.SimState:
+                  scen: T.Scenario, grid: gsig.GridNow | None = None,
+                  proj_pw: jnp.ndarray | None = None) -> T.SimState:
     """One call of ``schedule`` (paper Algorithm step 3): reorder the queue by
-    the selected policy and admit jobs under the selected backfill rule."""
-    order, _elig = queue_order(table, st, st.accounts, scen)
+    the selected policy and admit jobs under the selected backfill rule.
+
+    Cap-aware admission: when a power-cap schedule is active
+    (``grid.cap_w * scen.cap_scale`` finite), a job is only started if the
+    projected IT power (``proj_pw``, the current raw draw, plus the added
+    draw of jobs placed earlier in this pass) stays under the cap — the
+    DVFS throttle (repro.grid.powercap) then only has to absorb profile
+    ramps, not admission mistakes. A head job blocked *by the cap alone*
+    halts admission under BF_NONE and BF_EASY (backfilled jobs would eat
+    the headroom it is waiting for and starve it); first-fit stays greedy.
+    ``grid is None`` (no signals) is compile-time: the cap machinery folds
+    away entirely."""
+    has_grid = grid is not None
+    if has_grid:
+        cap_active = grid.cap_w * scen.cap_scale
+        # estimated power a job adds on start: first profile sample above
+        # the idle floor its nodes already draw
+        est_add_pw = jnp.maximum(
+            table.power_prof[:, 0] - system.power.idle_node_w, 0.0) * \
+            table.nodes.astype(jnp.float32)
+    if proj_pw is None:
+        proj_pw = jnp.float32(0.0)
+    order, _elig = queue_order(table, st, st.accounts, scen, grid)
     static = isinstance(scen.backfill, int)
     if static and scen.backfill != T.BF_EASY:
         # static fast path: no reservation machinery needed
@@ -137,8 +180,9 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     is_replay = scen.policy == T.POLICY_REPLAY
 
     def body(i, carry):
-        (node_job, jstate, start, end, free_count,
-         blocked_any, head_blocked, shadow_t, shadow_extra) = carry
+        (node_job, jstate, start, end, free_count, proj,
+         blocked_any, head_blocked, head_capped,
+         shadow_t, shadow_extra) = carry
         j = order[i]
         valid = jstate[j] == T.QUEUED
         # replay eligibility re-gate (queue_order already filtered, but jobs
@@ -160,11 +204,16 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
         shadow_extra = jnp.where(first_block, sh_extra, shadow_extra)
 
         # --- admission rule ---
-        easy_ok = (t + table.limit[j] <= shadow_t) | (need <= shadow_extra)
+        # a cap-blocked head has no node-shadow to reserve (power, not
+        # nodes, is scarce): EASY halts instead, so backfill cannot eat
+        # the headroom the head is waiting for
+        easy_ok = ((t + table.limit[j] <= shadow_t) |
+                   (need <= shadow_extra)) & ~head_capped
         if static:
             can_bf = {T.BF_NONE: ~blocked_any,
                       T.BF_FIRSTFIT: jnp.bool_(True),
-                      T.BF_EASY: jnp.where(head_blocked, easy_ok, True),
+                      T.BF_EASY: jnp.where(head_blocked | head_capped,
+                                           easy_ok, True),
                       }[scen.backfill]
         else:
             can_bf = jnp.select(
@@ -172,33 +221,38 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                  scen.backfill == T.BF_FIRSTFIT],
                 [~blocked_any,
                  jnp.bool_(True)],
-                jnp.where(head_blocked, easy_ok, True),  # BF_EASY
+                jnp.where(head_blocked | head_capped, easy_ok, True),
             )
-        # replay ignores backfill logic: recorded schedule is ground truth
-        place = valid & fits & jnp.where(is_replay, True, can_bf)
+        # cap-aware admission: starting this job must not breach the cap
+        if has_grid:
+            cap_ok = proj + est_add_pw[j] <= cap_active
+        else:
+            cap_ok = jnp.bool_(True)
+        # replay ignores backfill and the cap: recorded schedule is truth
+        place = valid & fits & jnp.where(is_replay, True, can_bf & cap_ok)
 
         # --- commit ---
         node_job = rm.place(node_job, sel, j, place)
         free_count = free_count - jnp.where(place, need, 0)
+        if has_grid:
+            proj = proj + jnp.where(place, est_add_pw[j], 0.0)
         jstate = jstate.at[j].set(jnp.where(place, T.RUNNING, jstate[j]))
         start = start.at[j].set(jnp.where(place, t, start[j]))
         end = end.at[j].set(jnp.where(place, t + table.wall[j], end[j]))
 
-        blocked_any |= valid & ~fits
+        blocked_any |= valid & (~fits | ~cap_ok)
         head_blocked |= valid & ~fits
-        return (node_job, jstate, start, end, free_count,
-                blocked_any, head_blocked, shadow_t, shadow_extra)
+        head_capped |= valid & fits & ~cap_ok
+        return (node_job, jstate, start, end, free_count, proj,
+                blocked_any, head_blocked, head_capped,
+                shadow_t, shadow_extra)
 
     carry = (st.node_job, st.jstate, st.start, st.end, st.free_count,
-             jnp.bool_(False), jnp.bool_(False), jnp.float32(jnp.inf),
-             jnp.int32(0))
+             jnp.float32(proj_pw), jnp.bool_(False), jnp.bool_(False),
+             jnp.bool_(False), jnp.float32(jnp.inf), jnp.int32(0))
     K = min(system.sched_budget, table.num_jobs)
     (node_job, jstate, start, end, free_count, *_rest) = jax.lax.fori_loop(
         0, K, body, carry)
 
-    return T.SimState(t=st.t, jstate=jstate, start=start, end=end,
-                      jenergy=st.jenergy, node_job=node_job,
-                      free_count=free_count, accounts=st.accounts,
-                      cooling=st.cooling, energy_total=st.energy_total,
-                      energy_it=st.energy_it, energy_loss=st.energy_loss,
-                      completed=st.completed)
+    return dataclasses.replace(st, jstate=jstate, start=start, end=end,
+                               node_job=node_job, free_count=free_count)

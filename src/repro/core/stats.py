@@ -78,6 +78,13 @@ def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
         "power_efficiency": float(np.asarray(final.energy_it) /
                                   max(float(np.asarray(final.energy_total)), 1.0)),
         "carbon_kg_est": float(np.asarray(final.energy_total) / 3.6e9 * 370.0),
+        # grid-aware accounting (signal-weighted; zero under neutral signals)
+        "emissions_kg": float(np.asarray(final.emissions_kg)),
+        "energy_cost_usd": float(np.asarray(final.energy_cost)),
+        "avg_throttle_frac": float(
+            np.asarray(hist.throttle_frac, np.float64).mean()),
+        "throttled_steps": float(
+            (np.asarray(hist.throttle_frac, np.float64) > 1e-6).sum()),
     }
 
 

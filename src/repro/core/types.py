@@ -34,6 +34,9 @@ POLICY_ACCT_EDP = 7             # ascending accumulated EDP
 POLICY_ACCT_ED2P = 8            # ascending accumulated ED^2P
 POLICY_ACCT_FUGAKU_PTS = 9      # descending Fugaku points (Solorzano et al.)
 POLICY_ML = 10                  # ML-guided score S(X_i) (paper §4.4)
+POLICY_CARBON = 11              # grid-aware: defer energy-heavy jobs while
+                                # carbon intensity is above its rolling mean
+POLICY_PRICE = 12               # analogous on the electricity-price signal
 
 POLICY_NAMES = {
     "replay": POLICY_REPLAY,
@@ -47,6 +50,8 @@ POLICY_NAMES = {
     "acct_ed2p": POLICY_ACCT_ED2P,
     "acct_fugaku_pts": POLICY_ACCT_FUGAKU_PTS,
     "ml": POLICY_ML,
+    "carbon_aware": POLICY_CARBON,
+    "price_aware": POLICY_PRICE,
 }
 
 # Backfill modes (paper §3.2.5).
@@ -119,11 +124,14 @@ class AccountStats:
     turnaround_sum: jnp.ndarray  # f32[A]
     power_sum: jnp.ndarray     # f32[A] sum over jobs of avg per-node power
     fugaku_pts: jnp.ndarray    # f32[A]
+    carbon_kg: jnp.ndarray     # f32[A] grid-signal-weighted emissions (kg CO2)
+    cost: jnp.ndarray          # f32[A] electricity cost at the grid price ($)
 
     @staticmethod
     def zeros(num_accounts: int) -> "AccountStats":
         z = jnp.zeros((num_accounts,), jnp.float32)
-        return AccountStats(*(z for _ in range(9)))
+        n = len(dataclasses.fields(AccountStats))
+        return AccountStats(*(z for _ in range(n)))
 
 
 @_register
@@ -140,9 +148,12 @@ class CoolingState:
 class SimState:
     """Full engine state threaded through ``lax.scan``."""
     t: jnp.ndarray          # f32[] current simulation time (s)
+    step: jnp.ndarray       # i32[] engine step index (grid-signal cursor)
     jstate: jnp.ndarray     # i32[J] job lifecycle state
     start: jnp.ndarray      # f32[J] realized start time (or +inf)
     end: jnp.ndarray        # f32[J] realized end time (or +inf)
+    progress: jnp.ndarray   # f32[J] work-time since start (c*dt per step;
+                            # == wall-clock elapsed when never throttled)
     jenergy: jnp.ndarray    # f32[J] accumulated job energy (J)
     node_job: jnp.ndarray   # i32[N] job id occupying each node, -1 when free
     free_count: jnp.ndarray  # i32[] number of free nodes
@@ -153,6 +164,8 @@ class SimState:
     energy_it: jnp.ndarray      # f32[] integral of IT power
     energy_loss: jnp.ndarray    # f32[] integral of conversion losses
     completed: jnp.ndarray      # f32[] jobs completed inside the window
+    emissions_kg: jnp.ndarray   # f32[] integral of facility power x carbon
+    energy_cost: jnp.ndarray    # f32[] integral of facility power x price
 
 
 @_register
@@ -169,6 +182,10 @@ class StepRecord:
     util: jnp.ndarray         # f32[] busy nodes / total nodes
     n_queued: jnp.ndarray     # f32[]
     n_running: jnp.ndarray    # f32[]
+    emissions_kg: jnp.ndarray   # f32[] CO2 emitted this step (kg)
+    energy_cost: jnp.ndarray    # f32[] electricity cost this step ($)
+    cap_w: jnp.ndarray          # f32[] active facility IT power cap (W)
+    throttle_frac: jnp.ndarray  # f32[] 1 - DVFS cap factor (0 = unthrottled)
 
 
 # ---------------------------------------------------------------------------
@@ -181,13 +198,23 @@ class Scenario:
     backfill: jnp.ndarray     # i32[] BF_*
     # weight applied to the account-derived key when mixing with base priority
     acct_weight: jnp.ndarray  # f32[]
+    # grid-aware knobs (repro.grid): deferral weights for the carbon/price
+    # policies, and a multiplier on the facility power-cap schedule so a
+    # single vmapped sweep can scan cap levels against one shared signal set.
+    carbon_weight: jnp.ndarray  # f32[] POLICY_CARBON deferral strength
+    price_weight: jnp.ndarray   # f32[] POLICY_PRICE deferral strength
+    cap_scale: jnp.ndarray      # f32[] scales GridSignals.cap_w
 
     @staticmethod
     def make(policy: str | int, backfill: str | int = "none",
-             acct_weight: float = 1.0) -> "Scenario":
+             acct_weight: float = 1.0, carbon_weight: float = 1.0,
+             price_weight: float = 1.0,
+             cap_scale: float = 1.0) -> "Scenario":
         p = POLICY_NAMES[policy] if isinstance(policy, str) else policy
         b = BACKFILL_NAMES[backfill] if isinstance(backfill, str) else backfill
-        return Scenario(jnp.int32(p), jnp.int32(b), jnp.float32(acct_weight))
+        return Scenario(jnp.int32(p), jnp.int32(b), jnp.float32(acct_weight),
+                        jnp.float32(carbon_weight), jnp.float32(price_weight),
+                        jnp.float32(cap_scale))
 
 
 def stack_scenarios(scens: list) -> "Scenario":

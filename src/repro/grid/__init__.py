@@ -1,0 +1,11 @@
+"""Grid-aware power management: time-varying grid signals (carbon intensity,
+electricity price, facility power-cap schedule), DVFS cap enforcement, and
+the sustainability-aware scheduling hooks they feed.
+
+``signals``  -- precomputed per-step signal arrays + in-scan indexing.
+``powercap`` -- per-step proportional DVFS throttle against the active cap.
+"""
+from repro.grid.signals import (  # noqa: F401
+    GridNow, GridSignals, at_step, constant_signals, neutral,
+    synthetic_signals)
+from repro.grid.powercap import enforce_cap, throttle_power  # noqa: F401

@@ -1,0 +1,69 @@
+"""DVFS power-cap enforcement (per engine step).
+
+When the projected IT power exceeds the active cap, every running node is
+throttled by a common cap factor ``c`` in ``[c_min, 1]``. DVFS only buys
+back *dynamic* power: each node keeps its idle floor and scales the draw
+above it,
+
+    p_throttled = min(p, idle) + c * max(p - idle, 0)
+
+so the solvable cap range is ``[floor_total, raw_total]`` and
+
+    c = clip((cap - floor_total) / dyn_total, c_min, 1).
+
+Per-group aggregation reuses the ``kernels/power_topo`` segment-reduce (the
+same reduction that feeds the cooling model), so the throttled per-CDU heat
+loads come out of the enforcement pass for free.
+
+The runtime cost of throttling is modelled as proportional slowdown: the
+engine stretches every affected job's remaining runtime by ``1/c`` for the
+throttled step (repro.core.engine._tick).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.kernels.power_topo import ops as topo_ops
+from repro.systems.config import SystemConfig
+
+
+class CapResult(NamedTuple):
+    c: jnp.ndarray           # f32[]  cap factor in [c_min, 1]
+    p_it: jnp.ndarray        # f32[]  throttled total IT power (W)
+    group_heat: jnp.ndarray  # f32[G] throttled per-CDU-group heat (W)
+    p_it_raw: jnp.ndarray    # f32[]  unthrottled IT power (W)
+
+
+def throttle_power(pw: jnp.ndarray, idle_w: float,
+                   c: jnp.ndarray) -> jnp.ndarray:
+    """Scale the dynamic (above-idle) share of a power array by ``c``."""
+    floor = jnp.minimum(pw, idle_w)
+    return floor + c * (pw - floor)
+
+
+def enforce_cap(system: SystemConfig, node_pw: jnp.ndarray,
+                cap_w: jnp.ndarray) -> CapResult:
+    """Compute the cap factor for this step and the throttled aggregates.
+
+    ``cap_w`` may be ``inf`` (uncapped -> c = 1). A cap below the idle
+    floor saturates at ``c_min``: the idle draw is not DVFS-addressable,
+    matching real power-capping interfaces.
+    """
+    idle = system.power.idle_node_w
+    floor = jnp.minimum(node_pw, idle)
+    dyn = node_pw - floor
+    G = system.cooling.n_groups
+    floor_g = topo_ops.group_power(floor, G)
+    dyn_g = topo_ops.group_power(dyn, G)
+    floor_tot = jnp.sum(floor_g)
+    dyn_tot = jnp.sum(dyn_g)
+
+    c_raw = (cap_w - floor_tot) / jnp.maximum(dyn_tot, 1.0)
+    c = jnp.clip(c_raw, system.grid.c_min, 1.0)
+    c = jnp.where(jnp.isfinite(cap_w), c, jnp.float32(1.0))
+
+    group_heat = floor_g + c * dyn_g
+    return CapResult(c=c, p_it=floor_tot + c * dyn_tot,
+                     group_heat=group_heat, p_it_raw=floor_tot + dyn_tot)

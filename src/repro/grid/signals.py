@@ -1,0 +1,142 @@
+"""Time-varying grid signals for sustainability what-ifs.
+
+A ``GridSignals`` bundle holds three per-step arrays sampled at the engine
+``dt`` — carbon intensity (g CO2 / kWh), electricity price ($ / kWh) and a
+facility IT power-cap schedule (W, ``inf`` = uncapped) — plus precomputed
+trailing rolling means of carbon and price so "is the signal above its
+recent average?" is a single in-scan gather, not a windowed reduction.
+
+Signals are *host-precomputed* numpy -> device arrays: the compiled engine
+only ever indexes them by step (clamped, LOCF-style, matching the job
+profile semantics of paper §3.2.2), so one signal set is shared across an
+entire vmapped scenario sweep and per-scenario cap levels are expressed as
+a traced multiplier (``Scenario.cap_scale``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import _register
+from repro.systems.config import GridConfig
+
+
+@_register
+@dataclass
+class GridSignals:
+    """Per-step grid signals. Shapes: f32[S] (S = engine steps)."""
+    carbon_gkwh: jnp.ndarray   # carbon intensity (g CO2 / kWh)
+    price_kwh: jnp.ndarray     # electricity price ($ / kWh)
+    cap_w: jnp.ndarray         # facility IT power cap (W); +inf = uncapped
+    carbon_ref: jnp.ndarray    # trailing rolling mean of carbon_gkwh
+    price_ref: jnp.ndarray     # trailing rolling mean of price_kwh
+
+    @property
+    def num_steps(self) -> int:
+        return self.carbon_gkwh.shape[0]
+
+
+class GridNow(NamedTuple):
+    """The signal values active at one engine step (scalars, traced)."""
+    carbon: jnp.ndarray      # f32[] g CO2 / kWh
+    carbon_ref: jnp.ndarray  # f32[] rolling mean
+    price: jnp.ndarray       # f32[] $ / kWh
+    price_ref: jnp.ndarray   # f32[] rolling mean
+    cap_w: jnp.ndarray       # f32[] base cap (pre Scenario.cap_scale)
+
+
+def at_step(signals: GridSignals, step: jnp.ndarray) -> GridNow:
+    """Gather the signal row active at ``step`` (clamped into range)."""
+    i = jnp.clip(step, 0, signals.num_steps - 1)
+    return GridNow(carbon=signals.carbon_gkwh[i],
+                   carbon_ref=signals.carbon_ref[i],
+                   price=signals.price_kwh[i],
+                   price_ref=signals.price_ref[i],
+                   cap_w=signals.cap_w[i])
+
+
+def now_neutral() -> GridNow:
+    """Signal values that make every grid-aware term a no-op."""
+    z = jnp.float32(0.0)
+    one = jnp.float32(1.0)
+    return GridNow(carbon=z, carbon_ref=one, price=z, price_ref=one,
+                   cap_w=jnp.float32(jnp.inf))
+
+
+def _rolling_mean(x: np.ndarray, window: int) -> np.ndarray:
+    """Trailing mean over the last ``window`` samples (partial at the start)."""
+    w = max(int(window), 1)
+    c = np.concatenate([[0.0], np.cumsum(x, dtype=np.float64)])
+    i = np.arange(1, len(x) + 1)
+    lo = np.maximum(i - w, 0)
+    return ((c[i] - c[lo]) / (i - lo)).astype(np.float32)
+
+
+def constant_signals(n_steps: int, carbon_gkwh: float = 0.0,
+                     price_kwh: float = 0.0,
+                     cap_w: float = float("inf")) -> GridSignals:
+    """Flat signals; refs equal the signal so the deferral excess is zero."""
+    full = lambda v: jnp.full((max(n_steps, 1),), v, jnp.float32)
+    return GridSignals(carbon_gkwh=full(carbon_gkwh),
+                       price_kwh=full(price_kwh), cap_w=full(cap_w),
+                       carbon_ref=full(max(carbon_gkwh, 1.0)),
+                       price_ref=full(max(price_kwh, 1e-6)))
+
+
+def neutral(n_steps: int) -> GridSignals:
+    """Default signals: zero carbon/price, uncapped — grid layer inert."""
+    return constant_signals(n_steps)
+
+
+def synthetic_signals(cfg: GridConfig, n_steps: int, dt: float,
+                      t0: float = 0.0, cap_base_w: float = float("inf"),
+                      cap_peak_w: float | None = None,
+                      seed: int = 0) -> GridSignals:
+    """Diurnal + AR(1)-noise generators for carbon, price and the cap.
+
+    Carbon peaks mid-day-ish trough overnight (fossil marginal mix); price
+    peaks in the evening window ``cfg.peak_hours``, during which the cap
+    schedule drops from ``cap_base_w`` to ``cap_peak_w`` (when given) —
+    the "cap the machine during the price peak" what-if.
+    """
+    rng = np.random.default_rng(seed)
+    t = t0 + dt * np.arange(n_steps, dtype=np.float64)
+    hours = (t / 3600.0) % 24.0
+    day = 2 * np.pi * t / 86400.0
+
+    def ar1_noise(frac):
+        e = rng.normal(0.0, frac, n_steps)
+        out = np.empty(n_steps)
+        acc = 0.0
+        rho = 0.95
+        for i in range(n_steps):
+            acc = rho * acc + np.sqrt(1 - rho * rho) * e[i]
+            out[i] = acc
+        return out
+
+    carbon = cfg.carbon_mean_gkwh + cfg.carbon_amp_gkwh * np.sin(
+        day - np.pi / 2)  # trough at midnight, peak mid-afternoon
+    carbon = np.maximum(carbon * (1.0 + ar1_noise(cfg.noise_frac)), 1.0)
+
+    peak_lo, peak_hi = cfg.peak_hours
+    evening = np.exp(-0.5 * ((hours - (peak_lo + peak_hi) / 2) / 2.0) ** 2)
+    price = cfg.price_mean_kwh + cfg.price_amp_kwh * (
+        0.6 * np.sin(day - np.pi / 2) + 1.4 * evening)
+    price = np.maximum(price * (1.0 + ar1_noise(cfg.noise_frac)), 1e-4)
+
+    cap = np.full(n_steps, cap_base_w, np.float64)
+    if cap_peak_w is not None:
+        in_peak = (hours >= peak_lo) & (hours < peak_hi)
+        cap = np.where(in_peak, cap_peak_w, cap)
+
+    w = int(round(cfg.ref_window_s / dt))
+    return GridSignals(
+        carbon_gkwh=jnp.asarray(carbon, jnp.float32),
+        price_kwh=jnp.asarray(price, jnp.float32),
+        cap_w=jnp.asarray(cap, jnp.float32),
+        carbon_ref=jnp.asarray(_rolling_mean(carbon, w)),
+        price_ref=jnp.asarray(_rolling_mean(price, w)))

@@ -258,12 +258,12 @@ def run_twin_cell(multi_pod: bool, n_scenarios: int = 512,
                                      trace_len=96, seed=1))
     table = js.to_table(1280)
     st0 = eng.init_state(sys_, table, 0.0, 86400.0)
-    scen_struct = T.Scenario(
-        jax.ShapeDtypeStruct((n_scenarios,), jnp.int32),
-        jax.ShapeDtypeStruct((n_scenarios,), jnp.int32),
-        jax.ShapeDtypeStruct((n_scenarios,), jnp.float32))
+    proto = T.Scenario.make("fcfs")   # field layout source of truth
+    scen_struct = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((n_scenarios,), x.dtype), proto)
     axes = mesh.axis_names  # shard scenarios over ALL mesh axes
-    scen_shard = T.Scenario(*([NamedSharding(mesh, P(axes))] * 3))
+    scen_shard = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P(axes)), proto)
     n_steps = 256  # one compile unit; runtime scans further
 
     def sweep(table_, st0_, scen_):

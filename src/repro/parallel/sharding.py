@@ -30,6 +30,17 @@ from repro.models.common import ArchConfig, Annotated
 
 Rules = Dict[str, Any]
 
+
+def mesh_axis_types_kwargs(n_axes: int) -> Dict[str, Any]:
+    """kwargs for ``jax.make_mesh`` requesting Auto axis types, across JAX
+    versions: ``jax.sharding.AxisType`` (and the ``axis_types`` parameter)
+    only exist on newer JAX; older releases (e.g. 0.4.x) are Auto-only, so
+    omitting the kwarg is equivalent there."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
 DEFAULT_RULES: Rules = {
     "batch": ("pod", "data"),
     "embed": "data",          # FSDP

@@ -16,20 +16,30 @@ from repro.core import types as T
 from repro.systems.config import SystemConfig
 
 
-def job_node_power(table: T.JobTable, jstate: jnp.ndarray, start: jnp.ndarray,
-                   t: jnp.ndarray, prof_dt: float) -> jnp.ndarray:
-    """Per-node power drawn by each job at time ``t``  -> f32[J].
+def job_node_power_elapsed(table: T.JobTable, jstate: jnp.ndarray,
+                           elapsed: jnp.ndarray,
+                           prof_dt: float) -> jnp.ndarray:
+    """Per-node power of each job ``elapsed`` work-seconds into its run
+    -> f32[J]. Under DVFS throttling the engine passes its work-time
+    progress (which advances at c*dt per step) so a slowed job's profile
+    plays at its dilated tempo rather than in wall-clock time.
 
     LOCF semantics (paper §3.2.2): the profile index is clamped into
     [0, P-1], so times before the first / after the last sample reuse the
     nearest recorded value.
     """
     P = table.prof_len
-    elapsed = jnp.maximum(t - start, 0.0)
     idx = jnp.clip((elapsed / prof_dt).astype(jnp.int32), 0, P - 1)
     p = jnp.take_along_axis(table.power_prof, idx[:, None], axis=1)[:, 0]
     running = jstate == T.RUNNING
     return jnp.where(running, p, 0.0)
+
+
+def job_node_power(table: T.JobTable, jstate: jnp.ndarray, start: jnp.ndarray,
+                   t: jnp.ndarray, prof_dt: float) -> jnp.ndarray:
+    """Per-node power drawn by each job at time ``t``  -> f32[J]."""
+    return job_node_power_elapsed(table, jstate,
+                                  jnp.maximum(t - start, 0.0), prof_dt)
 
 
 def job_node_util(table: T.JobTable, jstate: jnp.ndarray, start: jnp.ndarray,

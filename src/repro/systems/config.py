@@ -45,6 +45,26 @@ class CoolingConfig:
 
 
 @dataclass(frozen=True)
+class GridConfig:
+    """Grid-signal generators + DVFS power-capping limits (repro.grid).
+
+    The *signals* themselves (carbon intensity, price, cap schedule) are
+    precomputed arrays sampled at engine ``dt`` — see
+    ``repro.grid.signals.synthetic_signals``; this config holds the static
+    generator parameters and the throttle floor the cap-enforcement pass may
+    not go below.
+    """
+    c_min: float = 0.5               # lowest DVFS cap factor (1 = no throttle)
+    carbon_mean_gkwh: float = 350.0  # diurnal carbon intensity mean (g/kWh)
+    carbon_amp_gkwh: float = 120.0   # diurnal swing amplitude
+    price_mean_kwh: float = 0.08     # electricity price mean ($/kWh)
+    price_amp_kwh: float = 0.04      # diurnal swing amplitude
+    noise_frac: float = 0.05         # multiplicative AR(1) noise level
+    ref_window_s: float = 6 * 3600.0  # rolling-mean window for "above average"
+    peak_hours: Tuple[float, float] = (17.0, 21.0)  # evening price/cap peak
+
+
+@dataclass(frozen=True)
 class SystemConfig:
     name: str
     n_nodes: int
@@ -53,6 +73,7 @@ class SystemConfig:
     has_traces: bool                 # per-job time series vs scalar summary
     power: PowerConfig = field(default_factory=PowerConfig)
     cooling: CoolingConfig = field(default_factory=CoolingConfig)
+    grid: GridConfig = field(default_factory=GridConfig)
     # engine defaults
     dt: float = 15.0                 # engine step (s)
     sched_budget: int = 32           # placement attempts per engine step

@@ -2,7 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import engine as eng
 from repro.core import types as T
@@ -85,6 +88,31 @@ def test_replay_is_deterministic_fixed_point(js):
     start = np.asarray(final.start)[:len(js)]
     both = np.isfinite(start) & ok & (rec < 3600.0 - DT)
     np.testing.assert_allclose(start[both], rec[both], atol=DT)
+
+
+@settings(max_examples=10, deadline=None)
+@given(js=jobsets(), cap_mult=st.floats(1.3, 6.0))
+def test_power_cap_never_exceeded(js, cap_mult):
+    """Under any job table and any cap above the idle floor (with the DVFS
+    floor c_min ~ 0), per-step IT power never exceeds the cap, and the
+    emissions accumulator matches the telemetry integral."""
+    import dataclasses
+    from repro.grid import signals as gsig
+    sys2 = dataclasses.replace(
+        SYSTEM, grid=dataclasses.replace(SYSTEM.grid, c_min=1e-3))
+    n_steps = int(3600.0 / DT)
+    floor = SYSTEM.n_nodes * SYSTEM.power.idle_node_w
+    cap = cap_mult * floor
+    sig = gsig.constant_signals(n_steps, carbon_gkwh=400.0, price_kwh=0.1,
+                                cap_w=cap)
+    table = js.to_table(32)
+    final, hist = eng.simulate(sys2, table,
+                               T.Scenario.make("fcfs", "first-fit"),
+                               0.0, 3600.0, num_accounts=8, signals=sig)
+    assert (np.asarray(hist.power_it) <= cap + 1.0).all()
+    p = np.asarray(hist.power_total, np.float64)
+    expect = (p * DT * 0.4).sum() / 3.6e6
+    assert np.isclose(float(final.emissions_kg), expect, rtol=1e-4, atol=1e-6)
 
 
 @settings(max_examples=10, deadline=None)
