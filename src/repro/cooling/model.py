@@ -1,82 +1,241 @@
-"""Lumped-parameter thermo-fluid cooling model.
+"""Transient thermo-fluid cooling twin: CDUs, facility HX, tower, basin.
 
-Stand-in for the Modelica transient model of Kumar et al. [25] / Greenwood et
-al. [22] used by ExaDigiT. We keep the quantities the paper plots — PUE and
-the water temperature arriving at the cooling towers (Fig. 6) — and their
-qualitative response to scheduling-induced load swings, using a lumped model:
+Stand-in for the Modelica transient model of Kumar et al. [25] / Greenwood
+et al. [22] used by ExaDigiT, grown from the original first-order lumped
+model into a small transient plant so Fig. 6-style "what does this schedule
+do to the tower loop?" questions — and their weather what-ifs — have real
+dynamics behind them. Per engine step ``dt`` (units: W, kg/s, °C, s):
 
-  per CDU group g (heat pickup):
-      T_return[g] = T_supply[g] + Q[g] / (mdot * cp)
-  facility loop (first-order approach to the tower basin temperature):
-      dT_supply[g]/dt = (T_mix - T_supply[g]) / tau_hx,
-      T_mix = T_tower + Q[g]/UA          (HX effectiveness folded into UA)
-  tower (first-order lag toward wet-bulb + approach, loaded by total heat):
-      T_target = T_wb + approach + Q_tot / (UA_tower)
-      dT_tower/dt = (T_target - T_tower) / tau_tower
-  fan power: cube-law on required heat-rejection fraction.
+CDU loop, per group g (``kernels.power_topo.cdu_update_ref`` — fused with
+the node->group segment reduction on the accelerated path):
+  valve      mdot[g]  -> demand q[g]/(cp·ΔT_design), slewed with tau_valve
+  pickup     T_ret[g]  = T_sup[g] + q[g]/(mdot[g]·cp)
+  supply     T_sup[g] -> max(setpoint, T_basin + q[g]/UA), relaxed w/ tau_hx
 
-PUE = (P_IT + P_loss + P_cooling) / P_IT, matching the paper's note that PUE
-for the real system averages ~1.06.
+Heat reuse (district-heating export): when the flow-weighted return temp is
+hot enough to be useful, up to ``reuse_frac`` of the heat (capped at
+``reuse_max_w``) is diverted before the tower and never loads it.
+
+Tower + basin:
+  staging    s -> (q_tower + basin-error correction)/(cell_ua·(T_b − T_wb)),
+              slewed with tau_fan, clipped to [0, n_cells]
+  rejection  q_rej = s·cell_ua·(T_basin − T_wb)      (evaporative: wet-bulb
+              is the floor — this is where weather enters the twin)
+  basin      M·cp·dT_basin/dt = q_tower − q_rej       (thermal mass)
+
+Parasitic power: tower fans follow a staged cube law (whole cells at rated
+power + the modulating cell at speed³); CDU pumps follow a cube law on flow
+fraction with a 20% base. PUE = (P_IT + P_loss + P_cool) / P_IT, calibrated
+so nominal load lands near the paper's note of ~1.06 for the real system.
 """
 from __future__ import annotations
 
-import jax
+from typing import NamedTuple
+
 import jax.numpy as jnp
 
 from repro.core.types import CoolingState
+from repro.kernels.power_topo import ops as topo_ops
+from repro.kernels.power_topo.ref import CduParams, cdu_update_ref
 from repro.systems.config import CoolingConfig
 
 
+class CoolingOut(NamedTuple):
+    """Per-step cooling telemetry (all f32[] unless noted)."""
+    p_cooling: jnp.ndarray      # total cooling parasitics, fans + pumps (W)
+    p_fan: jnp.ndarray          # tower fan power (W)
+    p_pump: jnp.ndarray         # CDU pump power (W)
+    t_tower_return: jnp.ndarray  # flow-weighted water temp at the towers (°C)
+    t_basin: jnp.ndarray        # basin temperature after the step (°C)
+    t_supply_max: jnp.ndarray   # hottest CDU supply temperature (°C)
+    t_return_max: jnp.ndarray   # hottest CDU return temperature (°C)
+    q_reuse_w: jnp.ndarray      # heat exported for reuse this step (W)
+    q_reject_w: jnp.ndarray     # heat rejected by the tower this step (W)
+
+
+class ThermalNow(NamedTuple):
+    """Cooling-loop pressure signals for the scheduler (traced scalars)."""
+    excess: jnp.ndarray      # f32[] how far the hottest return temp sits
+    #                          inside the soft band below its limit (0 = cool,
+    #                          1 = at the limit; unclipped above)
+    overheat: jnp.ndarray    # bool[] supply setpoint lost by more than the
+    #                          margin -> admission throttling engages
+    t_return_max: jnp.ndarray  # f32[] hottest CDU return temperature (°C)
+    t_supply_max: jnp.ndarray  # f32[] hottest CDU supply temperature (°C)
+
+
+def cdu_params(cfg: CoolingConfig, dt: float) -> CduParams:
+    """Static kernel scalars for the per-CDU loop update."""
+    return CduParams(
+        cp_j_kg_k=cfg.cp_j_kg_k, ua_w_k=cfg.ua_w_k, dt=dt,
+        tau_hx_s=cfg.tau_hx_s, tau_valve_s=cfg.tau_valve_s,
+        delta_t_design_c=cfg.delta_t_design_c,
+        mdot_min_kg_s=cfg.mdot_min_frac * cfg.mdot_kg_s,
+        mdot_max_kg_s=cfg.mdot_kg_s)
+
+
 def init_state(cfg: CoolingConfig) -> CoolingState:
+    """Idle-plant initial condition: supply at setpoint, valves at the floor,
+    basin at wet-bulb + approach, fans off."""
     g = jnp.full((cfg.n_groups,), cfg.t_supply_setpoint_c, jnp.float32)
     return CoolingState(
         t_supply=g,
         t_return=g + 5.0,
-        t_tower=jnp.float32(cfg.t_wetbulb_c + cfg.tower_approach_c),
-    )
+        mdot=jnp.full((cfg.n_groups,), cfg.mdot_min_frac * cfg.mdot_kg_s,
+                      jnp.float32),
+        t_basin=jnp.float32(cfg.t_wetbulb_c + cfg.tower_approach_c),
+        fan_stages=jnp.float32(0.0))
+
+
+def _effective(cfg: CoolingConfig, t_wetbulb_c, setpoint_delta_c):
+    """(ambient wet-bulb, effective supply setpoint) for this step (°C).
+
+    Single source of the two per-step knobs: the wet-bulb defaults to the
+    static config when no weather trace drives the run, and the setpoint
+    is the config value shifted by the traced ``Scenario.setpoint_delta_c``.
+    """
+    t_wb = jnp.float32(cfg.t_wetbulb_c) if t_wetbulb_c is None \
+        else t_wetbulb_c
+    t_set = cfg.t_supply_setpoint_c + jnp.asarray(setpoint_delta_c,
+                                                  jnp.float32)
+    return t_wb, t_set
+
+
+def _finish_step(cfg: CoolingConfig, state: CoolingState, dt: float,
+                 t_wb, t_set, q, t_return, t_supply, mdot
+                 ) -> tuple[CoolingState, CoolingOut]:
+    """Tower-side half of the step: reuse split, fan staging, basin mass,
+    parasitic power. ``q``/``t_return``/``t_supply``/``mdot`` come from the
+    CDU update (plain jnp or the fused kernel); ``t_set`` is the effective
+    (setpoint-swept) supply setpoint the basin target follows."""
+    q_tot = jnp.sum(q)
+
+    # water temperature arriving at the towers = flow-weighted return temp
+    t_ret_mix = jnp.sum(mdot * t_return) / jnp.maximum(jnp.sum(mdot), 1e-6)
+
+    # heat reuse: divert exportable heat from the hot return stream before
+    # the tower (only worth it when the water is hot enough to sell)
+    q_reuse = jnp.where(t_ret_mix >= cfg.reuse_t_min_c,
+                        jnp.minimum(cfg.reuse_frac * q_tot, cfg.reuse_max_w),
+                        0.0)
+    q_tower = q_tot - q_reuse
+
+    # fan staging: reject the tower-bound heat (minus what the passive path
+    # already carries) at the current driving ΔT, plus a proportional
+    # correction that steers the basin to its target
+    cell_ua = cfg.cell_ua()
+    mcp_b = cfg.basin_mcp()
+    passive_ua = cfg.passive_ua_frac * cfg.n_tower_cells * cell_ua
+    q_passive = passive_ua * (state.t_basin - t_wb)
+    t_b_tgt = jnp.maximum(t_wb + cfg.tower_approach_c,
+                          t_set - cfg.basin_margin_c)
+    drive = jnp.maximum(state.t_basin - t_wb, 0.5)
+    q_need = q_tower - q_passive + \
+        mcp_b * (state.t_basin - t_b_tgt) / cfg.tower_tau_s
+    s_tgt = jnp.clip(q_need / (cell_ua * drive), 0.0,
+                     float(cfg.n_tower_cells))
+    fan = state.fan_stages + (s_tgt - state.fan_stages) * \
+        jnp.clip(dt / cfg.tau_fan_s, 0.0, 1.0)
+
+    # basin thermal mass: heat in from the HX minus tower rejection. The
+    # fan path only ever rejects (evaporative, wet-bulb floor); the passive
+    # path is bidirectional — a heat wave warms an idle basin
+    q_rej = jnp.maximum(fan * cell_ua * (state.t_basin - t_wb), 0.0) + \
+        q_passive
+    t_basin = state.t_basin + (q_tower - q_rej) * dt / mcp_b
+
+    # parasitics: staged cube-law fans (whole cells at rated power, the
+    # modulating cell at speed^3) + cube-law pumps with a 20% base
+    k = jnp.floor(fan)
+    r = fan - k
+    fan_w = cfg.fan_rated_w * (k + r ** 3)
+    frac = mdot / cfg.mdot_kg_s
+    pump_w = jnp.sum(cfg.pump_w_per_group * (0.2 + 0.8 * frac ** 3))
+
+    new = CoolingState(t_supply=t_supply, t_return=t_return, mdot=mdot,
+                       t_basin=t_basin, fan_stages=fan)
+    out = CoolingOut(
+        p_cooling=fan_w + pump_w, p_fan=fan_w, p_pump=pump_w,
+        t_tower_return=t_ret_mix, t_basin=t_basin,
+        t_supply_max=jnp.max(t_supply), t_return_max=jnp.max(t_return),
+        q_reuse_w=q_reuse, q_reject_w=q_rej)
+    return new, out
 
 
 def step(cfg: CoolingConfig, state: CoolingState, group_heat_w: jnp.ndarray,
-         dt: float) -> tuple[CoolingState, jnp.ndarray, jnp.ndarray]:
-    """Advance the cooling loop by ``dt`` seconds.
+         dt: float, t_wetbulb_c=None, setpoint_delta_c=0.0
+         ) -> tuple[CoolingState, CoolingOut]:
+    """Advance the cooling loop by ``dt`` seconds from per-group heat.
 
     Args:
-      group_heat_w: f32[G] heat load per CDU group (== IT power per group).
+      group_heat_w: f32[G] heat load per CDU group (W) — IT power per group,
+        already throttled when a power cap is active.
+      t_wetbulb_c: ambient wet-bulb (°C, traced); defaults to the static
+        ``cfg.t_wetbulb_c`` when no weather trace drives the run.
+      setpoint_delta_c: offset on the supply setpoint (°C, traced) — the
+        ``Scenario.setpoint_delta_c`` sweep knob.
     Returns:
-      (new_state, cooling_power_w, tower_return_temp_c)
+      (new_state, CoolingOut telemetry).
     """
-    q = group_heat_w
-    q_tot = jnp.sum(q)
+    t_wb, t_set = _effective(cfg, t_wetbulb_c, setpoint_delta_c)
+    q, t_return, t_supply, mdot = cdu_update_ref(
+        group_heat_w, state.t_supply, state.mdot, state.t_basin, t_set,
+        cdu_params(cfg, dt))
+    return _finish_step(cfg, state, dt, t_wb, t_set, q, t_return, t_supply,
+                        mdot)
 
-    # CDU heat pickup
-    mcp = cfg.mdot_kg_s * cfg.cp_j_kg_k
-    t_return = state.t_supply + q / mcp
 
-    # facility loop: supply relaxes toward tower temp + HX penalty
-    t_mix = state.t_tower + q / cfg.ua_w_k
-    tau_hx = 120.0
-    t_supply = state.t_supply + (t_mix - state.t_supply) * (dt / tau_hx)
+def step_from_node_power(cfg: CoolingConfig, state: CoolingState,
+                         node_pw: jnp.ndarray, dt: float,
+                         t_wetbulb_c=None, setpoint_delta_c=0.0,
+                         use_pallas: bool = False
+                         ) -> tuple[CoolingState, CoolingOut, jnp.ndarray]:
+    """Like ``step`` but fused: the node->CDU segment reduction and the CDU
+    loop update run as one pass (``kernels.power_topo.fused_cooling``), and
+    total IT power falls out of the group sums for free.
 
-    # tower: loaded equilibrium + first-order lag
-    ua_tower = cfg.ua_w_k * cfg.n_groups
-    t_target = cfg.t_wetbulb_c + cfg.tower_approach_c + q_tot / ua_tower
-    alpha = dt / cfg.tower_tau_s
-    t_tower = state.t_tower + (t_target - state.t_tower) * jnp.clip(alpha, 0.0, 1.0)
+    Returns:
+      (new_state, CoolingOut, p_it) with ``p_it`` = f32[] total IT power (W).
+    """
+    t_wb, t_set = _effective(cfg, t_wetbulb_c, setpoint_delta_c)
+    q, t_return, t_supply, mdot = topo_ops.fused_cooling(
+        node_pw, state.t_supply, state.mdot, state.t_basin,
+        jnp.broadcast_to(t_set, state.t_basin.shape), cfg.n_groups,
+        cdu_params(cfg, dt), use_pallas=use_pallas)
+    new, out = _finish_step(cfg, state, dt, t_wb, t_set, q, t_return,
+                            t_supply, mdot)
+    return new, out, jnp.sum(q)
 
-    # water temperature arriving at the towers = flow-weighted return temp
-    t_tower_return = jnp.mean(t_return)
 
-    # parasitic power: tower fans (cube law on load fraction) + CDU pumps
-    q_rated = cfg.n_tower_cells * cfg.cell_rated_heat_w
-    frac = jnp.clip(q_tot / q_rated, 0.0, 1.2)
-    fan_w = cfg.n_tower_cells * cfg.fan_rated_w * frac ** 3
-    pump_w = cfg.n_groups * cfg.pump_w_per_group
-    cooling_w = fan_w + pump_w
+def thermal_now(cfg: CoolingConfig, state: CoolingState,
+                setpoint_delta_c=0.0) -> ThermalNow:
+    """Cooling-pressure signals for the scheduler, from the current state.
 
-    return CoolingState(t_supply=t_supply, t_return=t_return,
-                        t_tower=t_tower), cooling_w, t_tower_return
+    ``excess`` ramps 0 -> 1 across the soft band
+    [t_return_limit_c - thermal_margin_c, t_return_limit_c]; the
+    thermal_aware policy multiplies it into its heat-dense-job penalty.
+    ``overheat`` trips when the hottest CDU supply exceeds the (effective)
+    setpoint by ``t_supply_margin_c`` — cooling has lost setpoint control,
+    so admission throttles until it recovers.
+    """
+    t_ret = jnp.max(state.t_return)
+    t_sup = jnp.max(state.t_supply)
+    soft = cfg.t_return_limit_c - cfg.thermal_margin_c
+    excess = jnp.maximum(t_ret - soft, 0.0) / cfg.thermal_margin_c
+    _, t_set = _effective(cfg, None, setpoint_delta_c)
+    overheat = t_sup > t_set + cfg.t_supply_margin_c
+    return ThermalNow(excess=excess, overheat=overheat, t_return_max=t_ret,
+                      t_supply_max=t_sup)
+
+
+def thermal_neutral() -> ThermalNow:
+    """Signals that make every cooling-aware term a no-op."""
+    z = jnp.float32(0.0)
+    return ThermalNow(excess=z, overheat=jnp.bool_(False), t_return_max=z,
+                      t_supply_max=z)
 
 
 def pue(p_it: jnp.ndarray, p_loss: jnp.ndarray,
         p_cooling: jnp.ndarray) -> jnp.ndarray:
+    """Power usage effectiveness: facility input power over IT power (W/W)."""
     return (p_it + p_loss + p_cooling) / jnp.maximum(p_it, 1.0)

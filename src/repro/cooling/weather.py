@@ -1,0 +1,159 @@
+"""Weather traces for cooling what-ifs: per-step ambient conditions.
+
+The transient cooling twin (repro.cooling.model) is driven by the ambient
+wet-bulb temperature — the floor an evaporative tower can cool against —
+so "what does a heat wave do to the tower loop?" becomes a simulation
+input, exactly like the grid layer's carbon/price/cap signals
+(repro.grid.signals): weather is host-precomputed into per-step arrays
+sampled at the engine ``dt``, and the compiled engine only ever *gathers*
+the row at the current step (clamped, LOCF-style). One ``WeatherSignals``
+set is shared by broadcast across a vmapped scenario sweep; a sweep over
+weather *scenarios* stacks several sets on the batch axis
+(``stack_weather`` / ``engine.simulate_sweep(weather=[...])``).
+
+Units: all temperatures are °C; times are seconds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import _register
+
+
+@_register
+@dataclass
+class WeatherSignals:
+    """Per-step ambient conditions. Shapes: f32[S] (S = engine steps)."""
+    t_wetbulb_c: jnp.ndarray   # ambient wet-bulb temperature (°C)
+    t_drybulb_c: jnp.ndarray   # ambient dry-bulb temperature (°C)
+
+    @property
+    def num_steps(self) -> int:
+        return self.t_wetbulb_c.shape[0]
+
+
+class WeatherNow(NamedTuple):
+    """The ambient conditions active at one engine step (traced scalars)."""
+    t_wetbulb_c: jnp.ndarray   # f32[] °C
+    t_drybulb_c: jnp.ndarray   # f32[] °C
+
+
+def at_step(weather: WeatherSignals, step: jnp.ndarray) -> WeatherNow:
+    """Gather the weather row active at ``step`` (index clamped into range,
+    matching the LOCF profile semantics of paper §3.2.2)."""
+    i = jnp.clip(step, 0, weather.num_steps - 1)
+    return WeatherNow(t_wetbulb_c=weather.t_wetbulb_c[i],
+                      t_drybulb_c=weather.t_drybulb_c[i])
+
+
+def constant_weather(n_steps: int, t_wetbulb_c: float,
+                     t_drybulb_c: float | None = None) -> WeatherSignals:
+    """Flat ambient conditions (the pre-weather engine behavior, made
+    explicit). ``t_drybulb_c`` defaults to wet-bulb + 8 °C depression."""
+    if t_drybulb_c is None:
+        t_drybulb_c = t_wetbulb_c + 8.0
+    full = lambda v: jnp.full((max(n_steps, 1),), v, jnp.float32)
+    return WeatherSignals(t_wetbulb_c=full(t_wetbulb_c),
+                          t_drybulb_c=full(t_drybulb_c))
+
+
+def from_arrays(t_wetbulb_c: np.ndarray,
+                t_drybulb_c: np.ndarray | None = None) -> WeatherSignals:
+    """Loader hook: wrap measured per-step temperature arrays (°C).
+
+    This is the bridge for real meteorological traces (e.g. hourly METAR /
+    ERA5 rows resampled to the engine ``dt`` on the host): the engine does
+    not care where the arrays came from, only that they are sampled at
+    ``SystemConfig.dt``. Dry-bulb defaults to wet-bulb + 8 °C.
+    """
+    wb = np.asarray(t_wetbulb_c, np.float32)
+    db = (wb + 8.0 if t_drybulb_c is None
+          else np.asarray(t_drybulb_c, np.float32))
+    if db.shape != wb.shape:
+        raise ValueError(f"shape mismatch: {wb.shape} vs {db.shape}")
+    return WeatherSignals(t_wetbulb_c=jnp.asarray(wb), t_drybulb_c=jnp.asarray(db))
+
+
+def synthetic_weather(n_steps: int, dt: float, t0: float = 0.0,
+                      t_wb_mean_c: float = 18.0,
+                      diurnal_amp_c: float = 4.0,
+                      seasonal_amp_c: float = 6.0,
+                      day_of_year: float = 172.0,
+                      depression_c: float = 8.0,
+                      noise_c: float = 0.5,
+                      seed: int = 0) -> WeatherSignals:
+    """Synthetic diurnal + seasonal wet-bulb/dry-bulb generator.
+
+    Wet-bulb = annual mean + seasonal sinusoid (peaking at midsummer,
+    ``day_of_year`` selects where in the year the window sits) + diurnal
+    sinusoid (trough ~05:00, peak ~15:00) + AR(1) weather noise. Dry-bulb
+    adds a wet-bulb depression that widens in the afternoon (drier air when
+    it is hottest).
+
+    Args:
+      n_steps: number of engine steps to generate.
+      dt: engine step (s).
+      t0: simulation start time (s) — sets the diurnal phase.
+      t_wb_mean_c: annual-mean wet-bulb (°C).
+      diurnal_amp_c / seasonal_amp_c: sinusoid amplitudes (°C).
+      day_of_year: where the window starts in the seasonal cycle (days).
+      depression_c: mean dry-bulb minus wet-bulb (°C).
+      noise_c: AR(1) noise standard deviation (°C).
+      seed: RNG seed for the noise.
+    Returns:
+      ``WeatherSignals`` with f32[n_steps] arrays.
+    """
+    rng = np.random.default_rng(seed)
+    t = t0 + dt * np.arange(n_steps, dtype=np.float64)
+    day = 2 * np.pi * t / 86400.0
+    season = 2 * np.pi * (day_of_year + t / 86400.0) / 365.0
+
+    e = rng.normal(0.0, noise_c, n_steps)
+    noise = np.empty(n_steps)
+    acc, rho = 0.0, 0.995
+    for i in range(n_steps):
+        acc = rho * acc + np.sqrt(1 - rho * rho) * e[i]
+        noise[i] = acc
+
+    # diurnal trough ~05:00, peak ~15:00; seasonal peak at midsummer (~day 172)
+    diurnal = np.sin(day - 2 * np.pi * 10.0 / 24.0)
+    seasonal = np.cos(season - 2 * np.pi * 172.0 / 365.0)
+    wb = t_wb_mean_c + seasonal_amp_c * seasonal + diurnal_amp_c * diurnal \
+        + noise
+    # afternoon air is drier: depression widens with the diurnal phase
+    db = wb + depression_c * (1.0 + 0.35 * diurnal)
+    return WeatherSignals(t_wetbulb_c=jnp.asarray(wb, jnp.float32),
+                          t_drybulb_c=jnp.asarray(db, jnp.float32))
+
+
+def heat_wave(base: WeatherSignals, dt: float, start_s: float,
+              duration_s: float, peak_amp_c: float = 8.0) -> WeatherSignals:
+    """Overlay a heat-wave bump on an existing trace.
+
+    The bump is a smooth plateau (cosine ramp up / down over the first and
+    last 20% of ``duration_s``) of ``peak_amp_c`` °C added to both wet-bulb
+    and dry-bulb — the "what if the schedule meets a 3-day heat wave?"
+    scenario input.
+    """
+    n = base.num_steps
+    t = dt * np.arange(n, dtype=np.float64)
+    x = (t - start_s) / max(duration_s, 1.0)   # 0..1 inside the wave
+    ramp = 0.2
+    up = 0.5 * (1 - np.cos(np.pi * np.clip(x / ramp, 0.0, 1.0)))
+    down = 0.5 * (1 - np.cos(np.pi * np.clip((1.0 - x) / ramp, 0.0, 1.0)))
+    bump = np.where((x >= 0.0) & (x <= 1.0),
+                    peak_amp_c * np.minimum(up, down), 0.0).astype(np.float32)
+    return WeatherSignals(
+        t_wetbulb_c=base.t_wetbulb_c + jnp.asarray(bump),
+        t_drybulb_c=base.t_drybulb_c + jnp.asarray(bump))
+
+
+def stack_weather(traces: Sequence[WeatherSignals]) -> WeatherSignals:
+    """Stack weather scenarios on a leading batch axis for vmapped sweeps
+    (each scenario row then sees its own trace; see engine.simulate_sweep)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *traces)

@@ -24,7 +24,18 @@ def fold_completions(system: SystemConfig, table: T.JobTable,
                      accounts: T.AccountStats, done_now: jnp.ndarray,
                      start: jnp.ndarray, end: jnp.ndarray,
                      jenergy: jnp.ndarray) -> T.AccountStats:
-    """Accumulate statistics of jobs that completed this step."""
+    """Accumulate statistics of jobs that completed this step.
+
+    Args:
+      done_now: bool[J] jobs finishing at this engine step.
+      start, end: f32[J] realized start/end times (s).
+      jenergy: f32[J] accumulated per-job IT energy (J).
+    Returns:
+      Updated ledgers: node-hours, energy (J), EDP (J·s), ED²P (J·s²),
+      wait/turnaround sums (s), average per-node power (W), Fugaku points.
+      The carbon/cost columns are untouched here — they accrue per step at
+      the then-current grid signal (``accrue_grid``).
+    """
     A = accounts.energy.shape[0]
     m = done_now.astype(jnp.float32)
     nodes_f = table.nodes.astype(jnp.float32)
@@ -62,7 +73,15 @@ def accrue_grid(table: T.JobTable, accounts: T.AccountStats,
     its account at the *current* carbon intensity and price, so accounts
     that shift load into clean/cheap windows provably accumulate less —
     the collect side of a low-carbon incentive (redeem via a scheduler
-    policy, like the Fugaku points loop)."""
+    policy, like the Fugaku points loop).
+
+    Args:
+      job_energy_step: f32[J] IT energy each job consumed this step (J).
+      carbon_gkwh: f32[] carbon intensity now (g CO2 / kWh).
+      price_kwh: f32[] electricity price now ($ / kWh).
+    Returns:
+      Ledgers with ``carbon_kg`` (kg CO2) and ``cost`` ($) advanced.
+    """
     A = accounts.energy.shape[0]
     kwh = _segsum(job_energy_step, table.account, A) / 3.6e6
     return dataclasses.replace(

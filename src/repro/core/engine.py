@@ -4,15 +4,23 @@ Main loop per step (paper's four well-defined steps):
   (1) prepare     -- clear completed jobs, free their nodes, fold accounting;
   (2) arrivals    -- move submitted jobs into the queue;
   (3) schedule    -- policy sort + bounded admission (repro.core.scheduler),
-                     cap-aware when a power-cap schedule is active;
+                     cap-aware when a power-cap schedule is active and
+                     thermally throttled when cooling loses its setpoint;
   (4) tick        -- power model -> DVFS cap enforcement (repro.grid) ->
-                     conversion losses -> cooling ODE -> telemetry row;
+                     conversion losses -> transient cooling loop
+                     (repro.cooling, weather-driven) -> telemetry row;
                      advance time.
 
 The engine is pure: ``simulate`` compiles once per (system, job-table shape)
 and a *batch of scenarios* (policy x backfill x incentive weights) runs under
 ``vmap`` — see ``simulate_sweep``. On multi-host/TPU deployments the scenario
 axis is sharded (see repro.launch.simulate / EXPERIMENTS.md).
+
+Per-step environment inputs follow one pattern: host-precomputed arrays
+(``repro.grid.signals.GridSignals``, ``repro.cooling.weather
+.WeatherSignals``) are gathered at ``SimState.step`` inside the scan, so
+one signal/weather set is shared by broadcast across a vmapped sweep —
+or stacked on the batch axis for weather-scenario sweeps.
 
 ``external_step`` supports the paper's §4.2 plugin mode: an event-based
 external scheduler decides placements between compiled steps.
@@ -27,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cooling import model as cooling
+from repro.cooling import weather as wsig
 from repro.core import accounts as acct_mod
 from repro.core import resource_manager as rm
 from repro.core import scheduler as sched
@@ -45,6 +54,12 @@ from repro.systems.config import SystemConfig
 def init_state(system: SystemConfig, table: T.JobTable, t0: float,
                t1: float, accounts: T.AccountStats | None = None,
                num_accounts: int = 64) -> T.SimState:
+    """Initial engine state for the window ``[t0, t1]`` (seconds).
+
+    Dismisses jobs entirely outside the window, prepopulates jobs already
+    running at ``t0`` per the telemetry, queues jobs submitted but not yet
+    started, and starts the cooling loop from its idle-plant condition.
+    """
     J = table.num_jobs
     rec_end = table.rec_start + table.wall
     jstate = jnp.full((J,), T.PENDING, jnp.int32)
@@ -81,7 +96,8 @@ def init_state(system: SystemConfig, table: T.JobTable, t0: float,
         cooling=cooling.init_state(system.cooling),
         energy_total=jnp.float32(0.0), energy_it=jnp.float32(0.0),
         energy_loss=jnp.float32(0.0), completed=jnp.float32(0.0),
-        emissions_kg=jnp.float32(0.0), energy_cost=jnp.float32(0.0))
+        emissions_kg=jnp.float32(0.0), energy_cost=jnp.float32(0.0),
+        energy_cooling=jnp.float32(0.0), heat_reuse_j=jnp.float32(0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +122,10 @@ def _prepare_and_arrivals(system: SystemConfig, table: T.JobTable,
 
 
 def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
-          grid: gsig.GridNow | None, cap_active: jnp.ndarray | None
+          grid: gsig.GridNow | None, cap_active: jnp.ndarray | None,
+          wx: wsig.WeatherNow | None = None,
+          setpoint_delta_c=0.0,
+          thermal: cooling.ThermalNow | None = None
           ) -> Tuple[T.SimState, T.StepRecord]:
     """Phase (4): cap enforcement + physics + accounting + telemetry.
 
@@ -114,12 +133,20 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
     (repro.grid.powercap) throttles every running node's dynamic power by a
     common factor c and the affected jobs' remaining runtime dilates by 1/c
     for this step — capping trades completion latency for peak power.
-    ``grid is None`` is compile-time "no grid layer": single group-reduce,
-    no accrual, no dilation — the seed engine's exact cost.
+    ``grid is None`` is compile-time "no grid layer": no accrual, no
+    dilation, and the node->CDU segment reduction fuses with the cooling
+    loop update (repro.kernels.power_topo.fused_cooling) — the seed
+    engine's exact cost.
+
+    ``wx`` carries the ambient conditions for this step (°C); ``None`` is
+    compile-time "no weather trace" and the static ``CoolingConfig``
+    wet-bulb applies. ``setpoint_delta_c`` is the traced setpoint-sweep
+    knob (``Scenario.setpoint_delta_c``).
     """
     dt = system.dt
     t = st.t
     has_grid = grid is not None
+    t_wb = None if wx is None else wx.t_wetbulb_c
     # profiles are indexed by work-time progress, so a throttled job's
     # trace plays at its dilated tempo instead of wall-clock time
     job_pw = pmodel.job_node_power_elapsed(table, st.jstate, st.progress,
@@ -130,22 +157,26 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         idle = system.power.idle_node_w
         cap = powercap.enforce_cap(system, node_pw, cap_active)
         p_it = cap.p_it
-        group_heat = cap.group_heat
         # DVFS only slows jobs with dynamic (above-idle) draw; a job at or
         # below the idle floor keeps full speed (its power is untouched by
         # throttle_power, so its runtime must be too)
         c_job = jnp.where(running & (job_pw > idle), cap.c, 1.0)
         job_pw = powercap.throttle_power(job_pw, idle, cap.c)
         throttle = 1.0 - cap.c
+        cool_state, cool = cooling.step(system.cooling, st.cooling,
+                                        cap.group_heat, dt, t_wb,
+                                        setpoint_delta_c)
     else:
-        p_it = pmodel.system_it_power(node_pw)
-        group_heat = topo_ops.group_power(node_pw, system.cooling.n_groups)
         cap_active = T.INF
         throttle = jnp.float32(0.0)
+        # fused path: segment reduce + CDU loop update in one pass; total
+        # IT power falls out of the group sums
+        cool_state, cool, p_it = cooling.step_from_node_power(
+            system.cooling, st.cooling, node_pw, dt, t_wb, setpoint_delta_c)
     n_racks = max(system.n_nodes // system.power.nodes_per_rack, 1)
     p_in, p_loss = plosses.conversion(system.power, p_it, float(n_racks))
-    cool_state, p_cool, t_tower_ret = cooling.step(system.cooling, st.cooling,
-                                                   group_heat, dt)
+    p_cool = cool.p_cooling
+    t_tower_ret = cool.t_tower_return
     p_total = p_in + p_cool
     pue = cooling.pue(p_it, p_loss, p_cool)
 
@@ -181,7 +212,14 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         n_queued=jnp.sum(st.jstate == T.QUEUED).astype(jnp.float32),
         n_running=jnp.sum(running).astype(jnp.float32),
         emissions_kg=emissions, energy_cost=cost, cap_w=cap_active,
-        throttle_frac=throttle)
+        throttle_frac=throttle,
+        power_fan=cool.p_fan, power_pump=cool.p_pump,
+        q_reuse_w=cool.q_reuse_w, t_basin=cool.t_basin,
+        t_supply_max=cool.t_supply_max,
+        t_wetbulb=(jnp.float32(system.cooling.t_wetbulb_c) if wx is None
+                   else wx.t_wetbulb_c),
+        thermal_throttled=(jnp.float32(0.0) if thermal is None else
+                           thermal.overheat.astype(jnp.float32)))
 
     new = dataclasses.replace(
         st, t=t + dt, step=st.step + 1, end=end, progress=progress,
@@ -190,18 +228,29 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         energy_it=st.energy_it + p_it * dt,
         energy_loss=st.energy_loss + p_loss * dt,
         emissions_kg=st.emissions_kg + emissions,
-        energy_cost=st.energy_cost + cost)
+        energy_cost=st.energy_cost + cost,
+        energy_cooling=st.energy_cooling + p_cool * dt,
+        heat_reuse_j=st.heat_reuse_j + cool.q_reuse_w * dt)
     return new, rec
 
 
 def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
-                scen: T.Scenario, signals: gsig.GridSignals | None = None
+                scen: T.Scenario, signals: gsig.GridSignals | None = None,
+                weather: wsig.WeatherSignals | None = None
                 ) -> Tuple[T.SimState, T.StepRecord]:
+    """One engine step: phases (1)-(4). ``signals`` enables the grid layer,
+    ``weather`` drives the cooling tower's ambient wet-bulb; both are
+    compile-time ``None`` when absent (their machinery folds away)."""
     st = _prepare_and_arrivals(system, table, st)
+    wx = None if weather is None else wsig.at_step(weather, st.step)
+    # cooling-pressure signals for the thermal_aware policy + admission gate
+    thermal = cooling.thermal_now(system.cooling, st.cooling,
+                                  scen.setpoint_delta_c)
     if signals is None:
         # no grid layer: skip the admission power pass and cap machinery
-        st = sched.schedule_step(system, table, st, scen)
-        return _tick(system, table, st, None, None)
+        st = sched.schedule_step(system, table, st, scen, thermal=thermal)
+        return _tick(system, table, st, None, None, wx,
+                     scen.setpoint_delta_c, thermal)
     grid = gsig.at_step(signals, st.step)
     cap_active = grid.cap_w * scen.cap_scale
     # raw IT draw after completions: the cap-aware admission baseline
@@ -209,8 +258,10 @@ def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                                            system.prof_dt)
     node_pw = pmodel.node_power(system, table, st.node_job, job_pw)
     st = sched.schedule_step(system, table, st, scen, grid,
-                             proj_pw=pmodel.system_it_power(node_pw))
-    return _tick(system, table, st, grid, cap_active)
+                             proj_pw=pmodel.system_it_power(node_pw),
+                             thermal=thermal)
+    return _tick(system, table, st, grid, cap_active, wx,
+                 scen.setpoint_delta_c, thermal)
 
 
 # ---------------------------------------------------------------------------
@@ -219,18 +270,23 @@ def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
 @functools.partial(jax.jit, static_argnums=(0,))
 def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                   place_ids: jnp.ndarray,
-                  signals: gsig.GridSignals | None = None
+                  signals: gsig.GridSignals | None = None,
+                  weather: wsig.WeatherSignals | None = None
                   ) -> Tuple[T.SimState, T.StepRecord]:
     """One engine step where placement decisions come from outside.
 
     ``place_ids``: i32[K] job ids the external scheduler wants started now
     (padded with -1). S-RAPS "interprets the information returned from the
     scheduler ... and triggers the resource manager" (paper §3.2.4).
-    The cap schedule (when ``signals`` is given) still applies — an
-    external scheduler cannot opt out of facility power management.
+    The cap schedule (when ``signals`` is given) and the thermal admission
+    gate still apply — an external scheduler cannot opt out of facility
+    power or thermal management.
     """
     grid = None if signals is None else gsig.at_step(signals, st.step)
+    wx = None if weather is None else wsig.at_step(weather, st.step)
     st = _prepare_and_arrivals(system, table, st)
+    thermal = cooling.thermal_now(system.cooling, st.cooling)
+    thermal_ok = ~thermal.overheat
 
     def body(i, carry):
         node_job, jstate, start, end, free_count = carry
@@ -238,7 +294,8 @@ def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
         ok = j >= 0
         jj = jnp.maximum(j, 0)
         need = table.nodes[jj]
-        can = ok & (jstate[jj] == T.QUEUED) & (need <= free_count)
+        can = ok & (jstate[jj] == T.QUEUED) & (need <= free_count) & \
+            thermal_ok
         sel = rm.firstfree_mask(node_job, need)
         node_job = rm.place(node_job, sel, jj, can)
         free_count = free_count - jnp.where(can, need, 0)
@@ -253,20 +310,22 @@ def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     st = dataclasses.replace(st, jstate=jstate, start=start, end=end,
                              node_job=node_job, free_count=free_count)
     return _tick(system, table, st, grid,
-                 None if grid is None else grid.cap_w)
+                 None if grid is None else grid.cap_w, wx,
+                 thermal=thermal)
 
 
 # ---------------------------------------------------------------------------
 # Full simulation.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0, 5))
+@functools.partial(jax.jit, static_argnums=(0, 6))
 def _simulate_jit(system: SystemConfig, table: T.JobTable, st0: T.SimState,
                   scen: T.Scenario, signals: gsig.GridSignals | None,
-                  n_steps: int):
-    # signals=None is an empty pytree: the no-grid fast path in engine_step
-    # is selected at trace time and the cap machinery vanishes entirely
+                  weather: wsig.WeatherSignals | None, n_steps: int):
+    # signals/weather=None are empty pytrees: the no-grid / no-weather fast
+    # paths in engine_step are selected at trace time and their machinery
+    # vanishes entirely
     def body(st, _):
-        return engine_step(system, table, st, scen, signals)
+        return engine_step(system, table, st, scen, signals, weather)
     return jax.lax.scan(body, st0, None, length=n_steps)
 
 
@@ -274,17 +333,30 @@ def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
              t0: float, t1: float,
              accounts: T.AccountStats | None = None,
              num_accounts: int = 64,
-             signals: gsig.GridSignals | None = None
+             signals: gsig.GridSignals | None = None,
+             weather: wsig.WeatherSignals | None = None
              ) -> Tuple[T.SimState, T.StepRecord]:
-    """Run the twin from t0 to t1. Returns (final_state, history).
+    """Run the twin from ``t0`` to ``t1`` (seconds).
 
-    ``signals`` (repro.grid.signals) enables the grid layer: carbon/price
-    accounting, the facility power-cap schedule and the grid-aware
-    policies. Defaults to neutral signals (zero carbon/price, uncapped).
+    Args:
+      system: static machine description (compile-time constant).
+      table: padded job table (times s, power W).
+      scen: traced scenario knobs (policy, backfill, weights).
+      t0, t1: simulation window (s).
+      accounts: optional warm-start per-account ledgers.
+      num_accounts: ledger size when ``accounts`` is None.
+      signals: per-step grid signals (g CO2/kWh, $/kWh, cap W) — enables
+        carbon/price accounting, the facility power-cap schedule and the
+        grid-aware policies. ``None`` = neutral (zero carbon/price,
+        uncapped).
+      weather: per-step ambient conditions (°C) driving the cooling tower.
+        ``None`` = the static ``CoolingConfig.t_wetbulb_c``.
+    Returns:
+      (final SimState, StepRecord history with one row per step).
     """
     n_steps = int(round((t1 - t0) / system.dt))
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
-    return _simulate_jit(system, table, st0, scen, signals, n_steps)
+    return _simulate_jit(system, table, st0, scen, signals, weather, n_steps)
 
 
 _STATIC_CACHE: dict = {}
@@ -294,34 +366,37 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
                     backfill: str, t0: float, t1: float,
                     accounts: T.AccountStats | None = None,
                     num_accounts: int = 64,
-                    signals: gsig.GridSignals | None = None):
+                    signals: gsig.GridSignals | None = None,
+                    weather: wsig.WeatherSignals | None = None):
     """Single-scenario fast path: policy/backfill are *compile-time*
     constants, so only the selected priority key is computed, non-EASY runs
     skip the reservation machinery entirely, and all policy selects fold
     away (EXPERIMENTS.md §Perf-twin iter T1)."""
     n_steps = int(round((t1 - t0) / system.dt))
     scen = T.Scenario(T.POLICY_NAMES[policy], T.BACKFILL_NAMES[backfill],
-                      1.0, 1.0, 1.0,
-                      1.0)  # raw Python values -> static in the closure
+                      1.0, 1.0, 1.0, 1.0, 1.0,
+                      0.0)  # raw Python values -> static in the closure
     key = (system, policy, backfill, n_steps, table.num_jobs,
-           table.prof_len, num_accounts, signals is None)
+           table.prof_len, num_accounts, signals is None, weather is None)
     fn = _STATIC_CACHE.get(key)
     if fn is None:
-        def run(table_, st0_, signals_):
+        def run(table_, st0_, signals_, weather_):
             def body(st, _):
-                return engine_step(system, table_, st, scen, signals_)
+                return engine_step(system, table_, st, scen, signals_,
+                                   weather_)
             return jax.lax.scan(body, st0_, None, length=n_steps)
         fn = jax.jit(run)
         _STATIC_CACHE[key] = fn
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
-    return fn(table, st0, signals)
+    return fn(table, st0, signals, weather)
 
 
 def simulate_sweep(system: SystemConfig, table: T.JobTable,
                    scens: list[T.Scenario], t0: float, t1: float,
                    accounts: T.AccountStats | None = None,
                    num_accounts: int = 64,
-                   signals: gsig.GridSignals | None = None
+                   signals: gsig.GridSignals | None = None,
+                   weather=None,
                    ) -> Tuple[T.SimState, T.StepRecord]:
     """Vectorized what-if sweep: one compiled program, S scenarios.
 
@@ -329,17 +404,30 @@ def simulate_sweep(system: SystemConfig, table: T.JobTable,
     only the Scenario leaves carry a batch axis — so a (policy x cap-level
     x carbon-weight) sweep reads ONE signal set and scales the cap via
     ``Scenario.cap_scale``.
+
+    ``weather`` may be a single ``WeatherSignals`` (shared by broadcast,
+    like signals) or a *list* with one trace per scenario — stacked onto
+    the batch axis so a (policy x weather-scenario x setpoint) sweep runs
+    as one vmapped program (see examples/cooling_whatif.py).
     """
     n_steps = int(round((t1 - t0) / system.dt))
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
     batched = T.stack_scenarios(scens)
+    if isinstance(weather, (list, tuple)):
+        if len(weather) != len(scens):
+            raise ValueError(f"need one weather trace per scenario: "
+                             f"{len(weather)} != {len(scens)}")
+        weather_b, w_axis = wsig.stack_weather(weather), 0
+    else:
+        weather_b, w_axis = weather, None
 
-    @functools.partial(jax.jit, static_argnums=(0, 5))
-    def run(sys_, table_, st0_, scen_, signals_, n_steps_):
-        def one(scen1):
+    @functools.partial(jax.jit, static_argnums=(0, 6))
+    def run(sys_, table_, st0_, scen_, signals_, weather_, n_steps_):
+        def one(scen1, weather1):
             def body(st, _):
-                return engine_step(sys_, table_, st, scen1, signals_)
+                return engine_step(sys_, table_, st, scen1, signals_,
+                                   weather1)
             return jax.lax.scan(body, st0_, None, length=n_steps_)
-        return jax.vmap(one)(scen_)
+        return jax.vmap(one, in_axes=(0, w_axis))(scen_, weather_)
 
-    return run(system, table, st0, batched, signals, n_steps)
+    return run(system, table, st0, batched, signals, weather_b, n_steps)

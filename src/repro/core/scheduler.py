@@ -27,6 +27,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.cooling import model as cmodel
 from repro.core import resource_manager as rm
 from repro.core import types as T
 from repro.grid import signals as gsig
@@ -38,8 +39,18 @@ from repro.systems.config import SystemConfig
 # ---------------------------------------------------------------------------
 def policy_key(table: T.JobTable, accounts: T.AccountStats,
                scen: T.Scenario,
-               grid: gsig.GridNow | None = None) -> jnp.ndarray:
-    """f32[J] primary sort key for the selected policy.
+               grid: gsig.GridNow | None = None,
+               thermal: cmodel.ThermalNow | None = None) -> jnp.ndarray:
+    """f32[J] primary sort key for the selected policy (smaller = earlier).
+
+    Args:
+      table: static job table (times s, power W).
+      accounts: per-account ledgers feeding the incentive policies.
+      scen: traced scenario knobs (policy id, deferral weights).
+      grid: grid-signal values at this step (g CO2/kWh, $/kWh, W); neutral
+        when ``None``.
+      thermal: cooling-pressure signals at this step (°C-derived, see
+        ``repro.cooling.model.thermal_now``); neutral when ``None``.
 
     When ``scen.policy`` is a *Python int* (static-scenario fast path,
     EXPERIMENTS.md §Perf-twin) only the selected key is computed; traced
@@ -47,6 +58,8 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
     """
     if grid is None:
         grid = gsig.now_neutral()
+    if thermal is None:
+        thermal = cmodel.thermal_neutral()
     acct = table.account
 
     def avg_pw():
@@ -62,6 +75,16 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
     def grid_key(now, ref, weight):
         excess = jnp.maximum(now - ref, 0.0) / jnp.maximum(ref, 1e-6)
         return table.submit + weight * excess * defer_cost
+
+    # cooling-aware deferral (thermal_aware): FCFS order plus a penalty on
+    # *heat-dense* jobs (estimated W x node·s, in kW·node·s so the scale
+    # matches the grid policies) that ramps in as the hottest CDU return
+    # temperature enters the soft band below its limit. Weight 0 == FCFS.
+    defer_heat = defer_cost * table.power_prof[:, 0] * 1e-3
+
+    def thermal_key():
+        return table.submit + scen.thermal_weight * thermal.excess * \
+            defer_heat
 
     builders = [
         lambda: table.rec_start,            # REPLAY: recorded order
@@ -79,6 +102,7 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
                          scen.carbon_weight),       # CARBON_AWARE
         lambda: grid_key(grid.price, grid.price_ref,
                          scen.price_weight),        # PRICE_AWARE
+        thermal_key,                                # THERMAL_AWARE
     ]
     if isinstance(scen.policy, int):        # static fast path
         k = builders[scen.policy]()
@@ -95,7 +119,8 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
 
 
 def queue_order(table: T.JobTable, st: T.SimState, accounts: T.AccountStats,
-                scen: T.Scenario, grid: gsig.GridNow | None = None
+                scen: T.Scenario, grid: gsig.GridNow | None = None,
+                thermal: cmodel.ThermalNow | None = None
                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Sorted queue: eligible jobs first by (key, submit). Returns
     (order i32[J], eligible bool[J])."""
@@ -103,7 +128,8 @@ def queue_order(table: T.JobTable, st: T.SimState, accounts: T.AccountStats,
     replay_gate = jnp.where(scen.policy == T.POLICY_REPLAY,
                             table.rec_start <= st.t, True)
     elig = queued & replay_gate & table.valid
-    key = jnp.where(elig, policy_key(table, accounts, scen, grid), jnp.inf)
+    key = jnp.where(elig, policy_key(table, accounts, scen, grid, thermal),
+                    jnp.inf)
     tie = jnp.where(elig, table.submit, jnp.inf)
     order = jnp.lexsort((tie, key))  # primary: key, secondary: submit
     return order.astype(jnp.int32), elig
@@ -143,7 +169,8 @@ def shadow_for(end_sorted: jnp.ndarray, cum_nodes: jnp.ndarray,
 # ---------------------------------------------------------------------------
 def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                   scen: T.Scenario, grid: gsig.GridNow | None = None,
-                  proj_pw: jnp.ndarray | None = None) -> T.SimState:
+                  proj_pw: jnp.ndarray | None = None,
+                  thermal: cmodel.ThermalNow | None = None) -> T.SimState:
     """One call of ``schedule`` (paper Algorithm step 3): reorder the queue by
     the selected policy and admit jobs under the selected backfill rule.
 
@@ -156,8 +183,17 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     halts admission under BF_NONE and BF_EASY (backfilled jobs would eat
     the headroom it is waiting for and starve it); first-fit stays greedy.
     ``grid is None`` (no signals) is compile-time: the cap machinery folds
-    away entirely."""
+    away entirely.
+
+    Thermal admission throttling: when the cooling loop has lost the supply
+    setpoint by more than ``CoolingConfig.t_supply_margin_c``
+    (``thermal.overheat``, see repro.cooling.model.thermal_now), every
+    non-replay admission is deferred for this step — starting more work
+    while the CDUs cannot hold their setpoint only pushes the loop further
+    from it. Replay is exempt (the recorded schedule is ground truth), and
+    running jobs are untouched (heat relief comes from completions)."""
     has_grid = grid is not None
+    thermal_ok = jnp.bool_(True) if thermal is None else ~thermal.overheat
     if has_grid:
         cap_active = grid.cap_w * scen.cap_scale
         # estimated power a job adds on start: first profile sample above
@@ -167,7 +203,7 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
             table.nodes.astype(jnp.float32)
     if proj_pw is None:
         proj_pw = jnp.float32(0.0)
-    order, _elig = queue_order(table, st, st.accounts, scen, grid)
+    order, _elig = queue_order(table, st, st.accounts, scen, grid, thermal)
     static = isinstance(scen.backfill, int)
     if static and scen.backfill != T.BF_EASY:
         # static fast path: no reservation machinery needed
@@ -228,8 +264,10 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
             cap_ok = proj + est_add_pw[j] <= cap_active
         else:
             cap_ok = jnp.bool_(True)
-        # replay ignores backfill and the cap: recorded schedule is truth
-        place = valid & fits & jnp.where(is_replay, True, can_bf & cap_ok)
+        # replay ignores backfill, the cap and the thermal gate: recorded
+        # schedule is truth
+        place = valid & fits & jnp.where(is_replay, True,
+                                         can_bf & cap_ok & thermal_ok)
 
         # --- commit ---
         node_job = rm.place(node_job, sel, j, place)

@@ -19,6 +19,18 @@ SIZE_EDGES = (1, 8, 128)  # small <8, medium <128, large >=128
 
 def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
               hist: T.StepRecord) -> Dict[str, float]:
+    """Reduce a run to its scalar summary metrics (paper §3.2.6).
+
+    Args:
+      system: the machine the run simulated (for dt / node counts).
+      table: the job table the run consumed.
+      final: final engine state (accumulators in J, kg, $).
+      hist: per-step telemetry (powers in W, temperatures in °C).
+    Returns:
+      Flat dict of floats — scheduler metrics (s), energy (MWh), power
+      (MW), PUE, emissions (kg), cost ($), and cooling-loop telemetry
+      (°C / MWh).
+    """
     done = np.asarray(final.jstate == T.DONE)
     start = np.asarray(final.start)
     end = np.asarray(final.end)
@@ -85,6 +97,24 @@ def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
             np.asarray(hist.throttle_frac, np.float64).mean()),
         "throttled_steps": float(
             (np.asarray(hist.throttle_frac, np.float64) > 1e-6).sum()),
+        # cooling-loop telemetry (repro.cooling): tower temps in °C,
+        # parasitic/exported energies in MWh
+        "t_tower_return_avg_c": float(
+            np.asarray(hist.t_tower_return, np.float64).mean()),
+        "t_tower_return_max_c": float(
+            np.asarray(hist.t_tower_return, np.float64).max()),
+        "t_supply_max_c": float(
+            np.asarray(hist.t_supply_max, np.float64).max()),
+        "t_basin_max_c": float(np.asarray(hist.t_basin, np.float64).max()),
+        "avg_wetbulb_c": float(np.asarray(hist.t_wetbulb, np.float64).mean()),
+        "cooling_energy_mwh": float(np.asarray(final.energy_cooling) / 3.6e9),
+        "fan_energy_mwh": float(
+            np.asarray(hist.power_fan, np.float64).sum() * system.dt / 3.6e9),
+        "pump_energy_mwh": float(
+            np.asarray(hist.power_pump, np.float64).sum() * system.dt / 3.6e9),
+        "heat_reuse_mwh": float(np.asarray(final.heat_reuse_j) / 3.6e9),
+        "thermal_throttled_steps": float(
+            (np.asarray(hist.thermal_throttled, np.float64) > 0.5).sum()),
     }
 
 

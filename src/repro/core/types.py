@@ -37,6 +37,8 @@ POLICY_ML = 10                  # ML-guided score S(X_i) (paper §4.4)
 POLICY_CARBON = 11              # grid-aware: defer energy-heavy jobs while
                                 # carbon intensity is above its rolling mean
 POLICY_PRICE = 12               # analogous on the electricity-price signal
+POLICY_THERMAL = 13             # cooling-aware: defer heat-dense jobs while
+                                # the tower return temp approaches its limit
 
 POLICY_NAMES = {
     "replay": POLICY_REPLAY,
@@ -52,6 +54,7 @@ POLICY_NAMES = {
     "ml": POLICY_ML,
     "carbon_aware": POLICY_CARBON,
     "price_aware": POLICY_PRICE,
+    "thermal_aware": POLICY_THERMAL,
 }
 
 # Backfill modes (paper §3.2.5).
@@ -137,10 +140,16 @@ class AccountStats:
 @_register
 @dataclass
 class CoolingState:
-    """Lumped-parameter thermo-fluid state (see repro.cooling.model)."""
-    t_supply: jnp.ndarray   # f32[G] CDU supply water temperature (C)
-    t_return: jnp.ndarray   # f32[G] CDU return water temperature (C)
-    t_tower: jnp.ndarray    # f32[]  cooling-tower basin / return temperature (C)
+    """Transient thermo-fluid state of the cooling loop (repro.cooling.model).
+
+    G = number of CDU groups. All temperatures in °C, flow in kg/s, fan
+    staging in "active cells" (continuous in [0, n_tower_cells]).
+    """
+    t_supply: jnp.ndarray    # f32[G] CDU supply water temperature (°C)
+    t_return: jnp.ndarray    # f32[G] CDU return water temperature (°C)
+    mdot: jnp.ndarray        # f32[G] CDU water mass flow (kg/s, valve state)
+    t_basin: jnp.ndarray     # f32[]  cooling-tower basin temperature (°C)
+    fan_stages: jnp.ndarray  # f32[]  active tower cells (continuous staging)
 
 
 @_register
@@ -160,12 +169,14 @@ class SimState:
     accounts: AccountStats
     cooling: CoolingState
     # global accumulators
-    energy_total: jnp.ndarray   # f32[] integral of facility input power
-    energy_it: jnp.ndarray      # f32[] integral of IT power
-    energy_loss: jnp.ndarray    # f32[] integral of conversion losses
+    energy_total: jnp.ndarray   # f32[] integral of facility input power (J)
+    energy_it: jnp.ndarray      # f32[] integral of IT power (J)
+    energy_loss: jnp.ndarray    # f32[] integral of conversion losses (J)
     completed: jnp.ndarray      # f32[] jobs completed inside the window
     emissions_kg: jnp.ndarray   # f32[] integral of facility power x carbon
-    energy_cost: jnp.ndarray    # f32[] integral of facility power x price
+    energy_cost: jnp.ndarray    # f32[] integral of facility power x price ($)
+    energy_cooling: jnp.ndarray  # f32[] integral of cooling parasitics (J)
+    heat_reuse_j: jnp.ndarray   # f32[] integral of exported (reused) heat (J)
 
 
 @_register
@@ -186,6 +197,14 @@ class StepRecord:
     energy_cost: jnp.ndarray    # f32[] electricity cost this step ($)
     cap_w: jnp.ndarray          # f32[] active facility IT power cap (W)
     throttle_frac: jnp.ndarray  # f32[] 1 - DVFS cap factor (0 = unthrottled)
+    # cooling-loop telemetry (repro.cooling.model)
+    power_fan: jnp.ndarray      # f32[] tower fan power (W)
+    power_pump: jnp.ndarray     # f32[] CDU pump power (W)
+    q_reuse_w: jnp.ndarray      # f32[] heat exported for reuse (W)
+    t_basin: jnp.ndarray        # f32[] tower basin temperature (°C)
+    t_supply_max: jnp.ndarray   # f32[] hottest CDU supply temperature (°C)
+    t_wetbulb: jnp.ndarray      # f32[] ambient wet-bulb driving the tower (°C)
+    thermal_throttled: jnp.ndarray  # f32[] 1 when supply-temp admission gate on
 
 
 # ---------------------------------------------------------------------------
@@ -204,17 +223,24 @@ class Scenario:
     carbon_weight: jnp.ndarray  # f32[] POLICY_CARBON deferral strength
     price_weight: jnp.ndarray   # f32[] POLICY_PRICE deferral strength
     cap_scale: jnp.ndarray      # f32[] scales GridSignals.cap_w
+    # cooling-aware knobs (repro.cooling): deferral weight for the
+    # thermal_aware policy, and an offset on the CDU supply setpoint so a
+    # single vmapped sweep can scan setpoints against one compiled program.
+    thermal_weight: jnp.ndarray    # f32[] POLICY_THERMAL deferral strength
+    setpoint_delta_c: jnp.ndarray  # f32[] offset on t_supply_setpoint_c (°C)
 
     @staticmethod
     def make(policy: str | int, backfill: str | int = "none",
              acct_weight: float = 1.0, carbon_weight: float = 1.0,
-             price_weight: float = 1.0,
-             cap_scale: float = 1.0) -> "Scenario":
+             price_weight: float = 1.0, cap_scale: float = 1.0,
+             thermal_weight: float = 1.0,
+             setpoint_delta_c: float = 0.0) -> "Scenario":
         p = POLICY_NAMES[policy] if isinstance(policy, str) else policy
         b = BACKFILL_NAMES[backfill] if isinstance(backfill, str) else backfill
         return Scenario(jnp.int32(p), jnp.int32(b), jnp.float32(acct_weight),
                         jnp.float32(carbon_weight), jnp.float32(price_weight),
-                        jnp.float32(cap_scale))
+                        jnp.float32(cap_scale), jnp.float32(thermal_weight),
+                        jnp.float32(setpoint_delta_c))
 
 
 def stack_scenarios(scens: list) -> "Scenario":

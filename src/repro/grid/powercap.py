@@ -38,7 +38,15 @@ class CapResult(NamedTuple):
 
 def throttle_power(pw: jnp.ndarray, idle_w: float,
                    c: jnp.ndarray) -> jnp.ndarray:
-    """Scale the dynamic (above-idle) share of a power array by ``c``."""
+    """Scale the dynamic (above-idle) share of a power array by ``c``.
+
+    Args:
+      pw: f32[...] power draws (W).
+      idle_w: per-node idle floor (W) — not DVFS-addressable.
+      c: f32[] cap factor in [c_min, 1].
+    Returns:
+      f32[...] throttled powers (W): ``min(pw, idle) + c·max(pw−idle, 0)``.
+    """
     floor = jnp.minimum(pw, idle_w)
     return floor + c * (pw - floor)
 
@@ -47,9 +55,15 @@ def enforce_cap(system: SystemConfig, node_pw: jnp.ndarray,
                 cap_w: jnp.ndarray) -> CapResult:
     """Compute the cap factor for this step and the throttled aggregates.
 
-    ``cap_w`` may be ``inf`` (uncapped -> c = 1). A cap below the idle
-    floor saturates at ``c_min``: the idle draw is not DVFS-addressable,
-    matching real power-capping interfaces.
+    Args:
+      node_pw: f32[N] per-node power draws (W).
+      cap_w: f32[] active facility IT power cap (W); ``inf`` = uncapped
+        -> c = 1. A cap below the idle floor saturates at ``c_min``: the
+        idle draw is not DVFS-addressable, matching real power-capping
+        interfaces.
+    Returns:
+      ``CapResult``: cap factor c, throttled total IT power (W), throttled
+      per-CDU-group heat (W) and the unthrottled total (W).
     """
     idle = system.power.idle_node_w
     floor = jnp.minimum(node_pw, idle)

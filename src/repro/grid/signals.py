@@ -50,7 +50,16 @@ class GridNow(NamedTuple):
 
 
 def at_step(signals: GridSignals, step: jnp.ndarray) -> GridNow:
-    """Gather the signal row active at ``step`` (clamped into range)."""
+    """Gather the signal row active at ``step`` (clamped into range,
+    LOCF-style like job profiles, paper §3.2.2).
+
+    Args:
+      signals: per-step arrays sampled at the engine ``dt``.
+      step: i32[] engine step index (``SimState.step``).
+    Returns:
+      Traced scalars: carbon (g CO2/kWh), price ($/kWh), their rolling
+      means, and the base cap (W, before ``Scenario.cap_scale``).
+    """
     i = jnp.clip(step, 0, signals.num_steps - 1)
     return GridNow(carbon=signals.carbon_gkwh[i],
                    carbon_ref=signals.carbon_ref[i],
@@ -79,7 +88,14 @@ def _rolling_mean(x: np.ndarray, window: int) -> np.ndarray:
 def constant_signals(n_steps: int, carbon_gkwh: float = 0.0,
                      price_kwh: float = 0.0,
                      cap_w: float = float("inf")) -> GridSignals:
-    """Flat signals; refs equal the signal so the deferral excess is zero."""
+    """Flat signals; refs equal the signal so the deferral excess is zero.
+
+    Args:
+      n_steps: number of engine steps to cover.
+      carbon_gkwh: constant carbon intensity (g CO2 / kWh).
+      price_kwh: constant electricity price ($ / kWh).
+      cap_w: constant facility IT power cap (W); ``inf`` = uncapped.
+    """
     full = lambda v: jnp.full((max(n_steps, 1),), v, jnp.float32)
     return GridSignals(carbon_gkwh=full(carbon_gkwh),
                        price_kwh=full(price_kwh), cap_w=full(cap_w),

@@ -1,2 +1,3 @@
-from repro.kernels.power_topo.ops import group_power  # noqa: F401
-from repro.kernels.power_topo.ref import group_power_ref  # noqa: F401
+from repro.kernels.power_topo.ops import fused_cooling, group_power  # noqa: F401
+from repro.kernels.power_topo.ref import (  # noqa: F401
+    CduParams, cdu_update_ref, fused_cooling_ref, group_power_ref)

@@ -1,16 +1,19 @@
-"""Jit'd wrapper for the power-topology reduction.
+"""Jit'd wrappers for the power-topology kernels.
 
-``group_power`` is what the engine calls. On CPU (this container) it lowers
-to the XLA path (the oracle math); on TPU deployments set
-``use_pallas=True`` to take the VMEM-tiled kernel. The wrapper owns padding
-so the kernel only sees aligned shapes.
+``group_power`` (segment reduce) and ``fused_cooling`` (segment reduce +
+CDU loop update in one pass) are what the engine calls. On CPU (this
+container) they lower to the XLA path (the oracle math); on TPU
+deployments set ``use_pallas=True`` to take the VMEM-tiled kernels. The
+wrappers own padding so the kernels only see aligned shapes.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.power_topo.power_topo import group_power_pallas
-from repro.kernels.power_topo.ref import group_power_ref
+from repro.kernels.power_topo.power_topo import (fused_cooling_pallas,
+                                                 group_power_pallas)
+from repro.kernels.power_topo.ref import (CduParams, cdu_update_ref,
+                                          fused_cooling_ref, group_power_ref)
 
 _LANE = 128
 
@@ -25,6 +28,22 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+def _group_layout(x: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """Lay f32[S, N] out for the per-group kernels: (S, G, span) with span
+    padded to the lane width, flattened back to (S, G*span_pad).
+
+    Zero padding is exact for a sum reduction, and the ceil-span grouping
+    MUST match ``ref.group_ids`` (node n -> group ``min(n // span, G-1)``)
+    — this helper is the single place that encodes it for the Pallas path.
+    """
+    S, N = x.shape
+    span = -(-N // n_groups)          # ceil: matches ref.group_ids
+    x = _pad_to(x, 1, span * n_groups)
+    x = x.reshape(S, n_groups, span)
+    x = _pad_to(x, 2, _LANE)
+    return x.reshape(S, -1)
+
+
 def group_power(node_pw: jnp.ndarray, n_groups: int,
                 use_pallas: bool = False, interpret: bool = True
                 ) -> jnp.ndarray:
@@ -32,18 +51,51 @@ def group_power(node_pw: jnp.ndarray, n_groups: int,
     squeeze = node_pw.ndim == 1
     x = node_pw[None, :] if squeeze else node_pw
     if use_pallas:
-        # Zero padding is exact for a sum reduction. Lay the array out as
-        # (S, G, span) so each kernel program sees exactly one ref-group,
-        # then pad span to the lane width and S to the sublane width.
-        S, N = x.shape
-        span = -(-N // n_groups)          # ceil: matches ref.group_ids
-        x = _pad_to(x, 1, span * n_groups)
-        x = x.reshape(S, n_groups, span)
-        x = _pad_to(x, 2, _LANE)
-        x = x.reshape(S, -1)
-        x = _pad_to(x, 0, 8)
+        # each kernel program sees exactly one ref-group tile; the batch
+        # axis pads to the sublane width
+        S = x.shape[0]
+        x = _pad_to(_group_layout(x, n_groups), 0, 8)
         out = group_power_pallas(x, n_groups, s_block=8, interpret=interpret)
         out = out[:S]
     else:
         out = group_power_ref(x, n_groups)
     return out[0] if squeeze else out
+
+
+def fused_cooling(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
+                  mdot: jnp.ndarray, t_basin: jnp.ndarray,
+                  t_set: jnp.ndarray, n_groups: int, params: CduParams,
+                  use_pallas: bool = False, interpret: bool = True):
+    """Fused per-step cooling update: per-CDU heat + loop state in one pass.
+
+    Args:
+      node_pw: f32[N] or f32[S, N] per-node power (W).
+      t_supply, mdot: f32[G] / f32[S, G] CDU supply temps (°C), flows (kg/s).
+      t_basin, t_set: f32[] / f32[S] basin temp and effective setpoint (°C).
+      n_groups: number of CDU groups G.
+      params: static CduParams scalars.
+    Returns:
+      (q, t_return, t_supply_new, mdot_new) with the input's batch shape:
+      per-group heat (W), return temp (°C), relaxed supply (°C), flow (kg/s).
+    """
+    squeeze = node_pw.ndim == 1
+    if not use_pallas:
+        return fused_cooling_ref(node_pw, t_supply, mdot, t_basin, t_set,
+                                 n_groups, params)
+    x = node_pw[None, :] if squeeze else node_pw
+    up = lambda a: a[None, ...] if squeeze else a
+    ts, md = up(t_supply), up(mdot)
+    tb, tset = up(t_basin)[:, None], up(t_set)[:, None]
+    S = x.shape[0]
+    x = _group_layout(x, n_groups)
+    # pad the batch axis to the sublane width; state pads replicate row 0 so
+    # padded rows stay finite (they are sliced off below)
+    pad_rows = (-S) % 8
+    pad = lambda a: jnp.concatenate(
+        [a, jnp.broadcast_to(a[:1], (pad_rows,) + a.shape[1:])]) \
+        if pad_rows else a
+    outs = fused_cooling_pallas(pad(x), pad(ts), pad(md), pad(tb), pad(tset),
+                                params, n_groups, s_block=8,
+                                interpret=interpret)
+    outs = tuple(o[:S] for o in outs)
+    return tuple(o[0] for o in outs) if squeeze else outs

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: batched node-power -> CDU-group segment reduction.
+"""Pallas TPU kernels: batched node-power -> CDU-group segment reduction,
+plus the fused per-step cooling update.
 
 This is the twin's per-tick hot spot at scale: with S sharded scenarios and
 N nodes (up to 158,976 for Fugaku) the reduction is (S x N) -> (S x G) every
@@ -9,6 +10,13 @@ Tiling: grid = (G, S/S_block); the input block is (S_block, N/G) resident in
 VMEM, output block is (S_block, 1). For TPU, S_block is a multiple of 8 and
 N/G is padded to a multiple of 128 by the wrapper (ops.py) so the MXU/VPU
 lanes stay aligned.
+
+``fused_cooling_pallas`` extends the reduction kernel with the per-CDU
+piece of the transient cooling update (valve slew + heat pickup +
+supply-loop relaxation, see ``ref.cdu_update_ref``): the per-group heat
+never round-trips to HBM between the reduce and the loop update — one
+grid program produces the group heat AND the new CDU temperatures/flows
+for its (S_block x group) tile while it is resident in VMEM.
 """
 from __future__ import annotations
 
@@ -17,6 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.power_topo.ref import CduParams
 
 
 def _kernel(x_ref, o_ref):
@@ -44,3 +54,62 @@ def group_power_pallas(node_pw: jnp.ndarray, n_groups: int,
         interpret=interpret,
     )(node_pw)
     return out
+
+
+def _fused_kernel(p: CduParams, x_ref, ts_ref, md_ref, tb_ref, tset_ref,
+                  q_ref, tr_ref, tso_ref, mdo_ref):
+    """One (S_block x group) tile: segment-reduce + CDU loop update.
+
+    Refs: x (S_block, span); all others (S_block, 1). The math must mirror
+    ``ref.cdu_update_ref`` exactly (the parity test holds it to 1e-4).
+    """
+    q = jnp.sum(x_ref[...], axis=1, keepdims=True)
+    ts = ts_ref[...]
+    # slew factors clipped at 1, matching the ref (coarse dt snaps)
+    a_valve = min(p.dt / p.tau_valve_s, 1.0)
+    a_hx = min(p.dt / p.tau_hx_s, 1.0)
+    dem = jnp.clip(q / (p.cp_j_kg_k * p.delta_t_design_c),
+                   p.mdot_min_kg_s, p.mdot_max_kg_s)
+    md_new = md_ref[...] + (dem - md_ref[...]) * a_valve
+    tgt = jnp.maximum(tset_ref[...], tb_ref[...] + q / p.ua_w_k)
+    q_ref[...] = q
+    tr_ref[...] = ts + q / (md_new * p.cp_j_kg_k)
+    tso_ref[...] = ts + (tgt - ts) * a_hx
+    mdo_ref[...] = md_new
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8))
+def fused_cooling_pallas(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
+                         mdot: jnp.ndarray, t_basin: jnp.ndarray,
+                         t_set: jnp.ndarray, params: CduParams,
+                         n_groups: int, s_block: int = 8,
+                         interpret: bool = True):
+    """Fused (segment-reduce + CDU update) over a scenario batch.
+
+    Args:
+      node_pw: f32[S, N] per-node power; N divisible by ``n_groups``
+        (the wrapper in ops.py owns padding).
+      t_supply, mdot: f32[S, G] current CDU loop state.
+      t_basin, t_set: f32[S, 1] basin temperature / effective setpoint.
+      params: static CduParams scalars (baked into the kernel).
+    Returns:
+      (q, t_return, t_supply_new, mdot_new), each f32[S, G].
+    """
+    S, N = node_pw.shape
+    assert N % n_groups == 0, "pad N to a multiple of n_groups first"
+    span = N // n_groups
+    assert S % s_block == 0, "pad S to a multiple of s_block first"
+
+    grid = (n_groups, S // s_block)
+    col = pl.BlockSpec((s_block, 1), lambda g, s: (s, g))
+    shared = pl.BlockSpec((s_block, 1), lambda g, s: (s, 0))
+    gshape = jax.ShapeDtypeStruct((S, n_groups), node_pw.dtype)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, params),
+        grid=grid,
+        in_specs=[pl.BlockSpec((s_block, span), lambda g, s: (s, g)),
+                  col, col, shared, shared],
+        out_specs=(col, col, col, col),
+        out_shape=(gshape, gshape, gshape, gshape),
+        interpret=interpret,
+    )(node_pw, t_supply, mdot, t_basin, t_set)

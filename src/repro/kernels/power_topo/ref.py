@@ -1,11 +1,40 @@
-"""Pure-jnp oracle for the power-topology segment reduction.
+"""Pure-jnp oracles for the power-topology kernels.
 
 Node n belongs to CDU group ``n * G // N`` (contiguous spans, mirroring how
 cabinets map to CDUs). Inputs may carry a leading scenario-batch axis.
+
+Two oracles live here:
+
+* ``group_power_ref`` — the plain segment reduction (node power -> per-CDU
+  heat), used by the engine's capped path and by the DVFS enforcement pass.
+* ``cdu_update_ref`` / ``fused_cooling_ref`` — the per-CDU piece of the
+  transient cooling update (valve dynamics + heat pickup + supply-loop
+  relaxation), optionally fused with the segment reduction. This is the
+  single source of truth for the in-kernel math: ``repro.cooling.model``
+  calls ``cdu_update_ref`` directly and the Pallas kernel
+  (``power_topo.fused_cooling_pallas``) must match it to <= 1e-4.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
+
+
+class CduParams(NamedTuple):
+    """Static scalars of the CDU loop update (units: SI, °C).
+
+    Mirrors the relevant ``CoolingConfig`` fields; kept as a plain tuple so
+    the kernel layer does not depend on repro.systems.
+    """
+    cp_j_kg_k: float      # water specific heat (J/(kg·K))
+    ua_w_k: float         # facility HX conductance per group (W/K)
+    dt: float             # engine step (s)
+    tau_hx_s: float       # supply-loop relaxation time constant (s)
+    tau_valve_s: float    # valve/flow slew time constant (s)
+    delta_t_design_c: float  # design water ΔT across a CDU (°C)
+    mdot_min_kg_s: float  # valve floor (kg/s)
+    mdot_max_kg_s: float  # full-open flow (kg/s)
 
 
 def group_ids(n_nodes: int, n_groups: int) -> jnp.ndarray:
@@ -21,3 +50,50 @@ def group_power_ref(node_pw: jnp.ndarray, n_groups: int) -> jnp.ndarray:
     one_hot = (gid[:, None] == jnp.arange(n_groups)[None, :]).astype(
         node_pw.dtype)
     return node_pw @ one_hot
+
+
+def cdu_update_ref(q: jnp.ndarray, t_supply: jnp.ndarray, mdot: jnp.ndarray,
+                   t_basin: jnp.ndarray, t_set: jnp.ndarray,
+                   p: CduParams):
+    """Per-CDU loop update for one engine step (pure jnp, elementwise in G).
+
+    Args:
+      q: f32[..., G] heat load per CDU group (W).
+      t_supply: f32[..., G] current supply water temperature (°C).
+      mdot: f32[..., G] current water mass flow (kg/s).
+      t_basin: f32[...] tower basin temperature (°C), broadcast over G.
+      t_set: f32[...] effective supply setpoint (°C), broadcast over G.
+      p: static scalars (CduParams).
+    Returns:
+      (q, t_return, t_supply_new, mdot_new), each f32[..., G]:
+      the heat passthrough, return water temperature, relaxed supply
+      temperature and slewed flow.
+    """
+    # valve: flow slews toward the demand that holds the design ΔT. The
+    # slew factors are clipped at 1 (static Python min — dt and tau are
+    # compile-time scalars) so a coarse engine dt > tau snaps to the
+    # target instead of overshooting the [min, max] flow bounds
+    a_valve = min(p.dt / p.tau_valve_s, 1.0)
+    a_hx = min(p.dt / p.tau_hx_s, 1.0)
+    dem = jnp.clip(q / (p.cp_j_kg_k * p.delta_t_design_c),
+                   p.mdot_min_kg_s, p.mdot_max_kg_s)
+    mdot_new = mdot + (dem - mdot) * a_valve
+    # heat pickup across the cold plates at the new flow
+    t_return = t_supply + q / (mdot_new * p.cp_j_kg_k)
+    # supply relaxes toward what the facility HX can deliver: never below
+    # basin temperature + HX penalty, never below the setpoint
+    tgt = jnp.maximum(t_set[..., None], t_basin[..., None] + q / p.ua_w_k)
+    t_supply_new = t_supply + (tgt - t_supply) * a_hx
+    return q, t_return, t_supply_new, mdot_new
+
+
+def fused_cooling_ref(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
+                      mdot: jnp.ndarray, t_basin: jnp.ndarray,
+                      t_set: jnp.ndarray, n_groups: int, p: CduParams):
+    """Segment-reduce heat per CDU group + CDU loop update, one logical pass.
+
+    f32[..., N] node power -> (q, t_return, t_supply_new, mdot_new), each
+    f32[..., G]. Oracle for ``power_topo.fused_cooling_pallas``.
+    """
+    q = group_power_ref(node_pw, n_groups)
+    return cdu_update_ref(q, t_supply, mdot, t_basin, t_set, p)

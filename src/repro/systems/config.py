@@ -29,19 +29,63 @@ class PowerConfig:
 
 @dataclass(frozen=True)
 class CoolingConfig:
-    """Lumped CDU + cooling tower parameters (repro.cooling.model)."""
+    """Transient CDU + cooling-tower loop parameters (repro.cooling.model).
+
+    Units: temperatures °C, heat/power W, flow kg/s, conductance W/K,
+    time constants s. Derived quantities (tower-cell conductance, basin
+    thermal mass) default to ``None`` and are computed from the rated
+    numbers — see ``cell_ua()`` / ``basin_mcp()`` — so per-system configs
+    stay consistent when only the rated capacity is overridden.
+    """
     n_groups: int = 8                # CDU groups (segment-reduce targets)
-    mdot_kg_s: float = 40.0          # water mass flow per CDU (kg/s)
-    cp_j_kg_k: float = 4186.0        # specific heat of water
+    mdot_kg_s: float = 40.0          # max water mass flow per CDU (kg/s)
+    cp_j_kg_k: float = 4186.0        # specific heat of water (J/(kg·K))
     t_supply_setpoint_c: float = 25.0
-    ua_w_k: float = 4.0e5            # facility HX conductance per group
-    tower_tau_s: float = 600.0       # first-order tower time constant
-    t_wetbulb_c: float = 18.0        # ambient wet-bulb
-    tower_approach_c: float = 4.0
+    ua_w_k: float = 4.0e5            # facility HX conductance per group (W/K)
+    tower_tau_s: float = 600.0       # basin/tower thermal time constant (s)
+    t_wetbulb_c: float = 18.0        # default ambient wet-bulb (no weather)
+    tower_approach_c: float = 4.0    # tower approach at design (°C above wb)
     n_tower_cells: int = 4
-    cell_rated_heat_w: float = 2.5e6  # heat rejection per tower cell
-    fan_rated_w: float = 1.0e5       # tower fan rated power per cell
-    pump_w_per_group: float = 1.0e4
+    cell_rated_heat_w: float = 2.5e6  # heat rejection per tower cell (W)
+    fan_rated_w: float = 4.0e4       # tower fan rated power per cell (W)
+    pump_w_per_group: float = 1.0e4  # CDU pump rated power (W, at full flow)
+    # --- CDU valve/pump dynamics -------------------------------------------
+    delta_t_design_c: float = 8.0    # design water ΔT across a CDU
+    mdot_min_frac: float = 0.2       # valve floor as a fraction of mdot_kg_s
+    tau_valve_s: float = 60.0        # flow slew time constant
+    tau_hx_s: float = 120.0          # facility HX / supply-loop time constant
+    # --- tower fan staging --------------------------------------------------
+    tau_fan_s: float = 120.0         # fan staging slew time constant
+    cell_ua_w_k: float | None = None  # tower-cell conductance at full fan
+    basin_mcp_j_k: float | None = None  # basin thermal mass × cp (J/K)
+    basin_margin_c: float = 3.0      # basin target sits this far below setpoint
+    # fans-off ambient coupling (natural draft + windage), as a fraction of
+    # the full-fan tower conductance; bidirectional — a heat wave warms an
+    # idle basin toward the ambient wet-bulb through this path
+    passive_ua_frac: float = 0.15
+    # --- heat reuse / export (district-heating side stream) -----------------
+    reuse_frac: float = 0.0          # fraction of return heat divertible
+    reuse_max_w: float = 0.0         # export capacity cap (W)
+    reuse_t_min_c: float = 30.0      # minimum return temp for useful export
+    # --- thermal-aware scheduling limits ------------------------------------
+    t_return_limit_c: float = 45.0   # hard limit on CDU return water temp
+    thermal_margin_c: float = 5.0    # soft band below the limit (policy ramp)
+    # supply excess (above setpoint) that halts admission: a last-resort
+    # brake, sized to trip only after the thermal_aware deferral band —
+    # ambient alone can push supply a few °C over setpoint in a heat wave
+    t_supply_margin_c: float = 10.0
+
+    def cell_ua(self) -> float:
+        """Tower-cell conductance (W/K) at full fan speed; rated heat over a
+        6 °C basin-to-wet-bulb driving ΔT unless set explicitly."""
+        return self.cell_ua_w_k if self.cell_ua_w_k is not None \
+            else self.cell_rated_heat_w / 6.0
+
+    def basin_mcp(self) -> float:
+        """Basin thermal mass × cp (J/K): sized so the open-loop tower time
+        constant is ``tower_tau_s`` at full-fan conductance."""
+        return self.basin_mcp_j_k if self.basin_mcp_j_k is not None \
+            else self.tower_tau_s * self.n_tower_cells * self.cell_ua()
 
 
 @dataclass(frozen=True)
@@ -85,7 +129,8 @@ class SystemConfig:
         a similar node span)."""
         ratio = n_nodes / self.n_nodes
         # keep tower capacity proportional: resize cell count and rating so
-        # cells * rating ~= ratio * original capacity
+        # cells * rating ~= ratio * original capacity; fan rating and the
+        # heat-export cap follow so parasitic *fractions* stay realistic
         cells = max(int(round(self.cooling.n_tower_cells * ratio)), 1)
         cap = self.cooling.n_tower_cells * self.cooling.cell_rated_heat_w * ratio
         cool = replace(
@@ -93,6 +138,9 @@ class SystemConfig:
             n_groups=max(int(round(self.cooling.n_groups * ratio)), 2),
             n_tower_cells=cells,
             cell_rated_heat_w=cap / cells,
+            fan_rated_w=self.cooling.fan_rated_w *
+            (cap / cells) / self.cooling.cell_rated_heat_w,
+            reuse_max_w=self.cooling.reuse_max_w * ratio,
         )
         return replace(self, name=f"{self.name}-scaled{n_nodes}",
                        n_nodes=n_nodes, cooling=cool)
@@ -108,14 +156,17 @@ FRONTIER = SystemConfig(
                       ref_node_w=2500.0),
     cooling=CoolingConfig(n_groups=25, mdot_kg_s=60.0, t_supply_setpoint_c=32.0,
                           t_wetbulb_c=20.0, ua_w_k=1.2e6, n_tower_cells=16,
-                          fan_rated_w=1.5e5),
+                          reuse_frac=0.15, reuse_max_w=4.0e6,
+                          reuse_t_min_c=34.0),
 )
 
 MARCONI100 = SystemConfig(
     name="marconi100", n_nodes=980, prof_dt=20.0, scheduler="slurm",
     has_traces=True, dt=20.0,
     power=PowerConfig(idle_node_w=240.0, peak_node_w=2200.0, ref_node_w=1600.0),
-    cooling=CoolingConfig(n_groups=10, n_tower_cells=2, cell_rated_heat_w=1.5e6),
+    cooling=CoolingConfig(n_groups=10, n_tower_cells=2, cell_rated_heat_w=1.5e6,
+                          fan_rated_w=2.4e4, reuse_frac=0.2,
+                          reuse_max_w=3.0e5, reuse_t_min_c=32.0),
 )
 
 FUGAKU = SystemConfig(
@@ -140,7 +191,8 @@ ADASTRA = SystemConfig(
     has_traces=False, dt=30.0,
     power=PowerConfig(idle_node_w=450.0, peak_node_w=2800.0, ref_node_w=2000.0),
     cooling=CoolingConfig(n_groups=4, t_supply_setpoint_c=30.0,
-                          n_tower_cells=1, cell_rated_heat_w=1.5e6),
+                          n_tower_cells=1, cell_rated_heat_w=1.5e6,
+                          fan_rated_w=2.4e4),
 )
 
 SYSTEMS: Dict[str, SystemConfig] = {

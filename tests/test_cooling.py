@@ -1,0 +1,352 @@
+"""Transient cooling twin tests: energy conservation, PUE calibration,
+monotone load-step response, fused-kernel parity, weather what-ifs and the
+thermal-aware scheduling hooks."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cooling import model as cooling
+from repro.cooling import weather as wx
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.kernels.power_topo import ops as topo_ops
+from repro.kernels.power_topo import ref as topo_ref
+from repro.power import losses as pl
+from repro.systems.config import get_system
+
+
+@pytest.fixture(scope="module")
+def system():
+    return get_system("marconi100").scaled(64)
+
+
+def run_to_steady(cfg, q, dt=30.0, n=2000, state=None):
+    state = cooling.init_state(cfg) if state is None else state
+    out = None
+    for _ in range(n):
+        state, out = cooling.step(cfg, state, q, dt)
+    return state, out
+
+
+# ---------------------------------------------------------------------------
+# Energy conservation.
+# ---------------------------------------------------------------------------
+def test_basin_energy_balance_discrete_identity(system):
+    """Over any transient, the basin's stored-energy change equals the
+    integral of (heat in - heat rejected): the basin update conserves
+    energy exactly (float tolerance)."""
+    cfg = system.cooling
+    dt = 30.0
+    rng = np.random.default_rng(0)
+    state = cooling.init_state(cfg)
+    t0 = float(state.t_basin)
+    acc = 0.0
+    for k in range(400):
+        q = jnp.asarray(rng.uniform(1e4, 2e5, cfg.n_groups), jnp.float32)
+        state, out = cooling.step(cfg, state, q, dt)
+        q_tower = float(jnp.sum(q)) - float(out.q_reuse_w)
+        acc += (q_tower - float(out.q_reject_w)) * dt
+    stored = cfg.basin_mcp() * (float(state.t_basin) - t0)
+    assert np.isclose(acc, stored, rtol=1e-3, atol=1e3)
+
+
+def test_steady_state_rejects_plus_reuses_all_heat(system):
+    """At steady state the tower + heat-export streams carry away all the
+    IT heat (global energy balance within 2%)."""
+    cfg = system.cooling
+    q = jnp.full((cfg.n_groups,), 8e4, jnp.float32)
+    _, out = run_to_steady(cfg, q)
+    q_tot = float(jnp.sum(q))
+    q_out = float(out.q_reject_w) + float(out.q_reuse_w)
+    assert abs(q_out - q_tot) / q_tot < 0.02
+
+
+# ---------------------------------------------------------------------------
+# PUE calibration.
+# ---------------------------------------------------------------------------
+def test_pue_nominal_near_paper_value():
+    """PUE >= 1 always, and ~1.06 at nominal (70%) load on the full
+    Frontier config — the paper notes the real system averages ~1.06."""
+    sysc = get_system("frontier")
+    cfg = sysc.cooling
+    p_it = 0.7 * sysc.n_nodes * sysc.power.peak_node_w
+    q = jnp.full((cfg.n_groups,), p_it / cfg.n_groups, jnp.float32)
+    _, out = run_to_steady(cfg, q, dt=sysc.dt)
+    n_racks = max(sysc.n_nodes // sysc.power.nodes_per_rack, 1)
+    _, loss = pl.conversion(sysc.power, jnp.float32(p_it), float(n_racks))
+    pue = float(cooling.pue(jnp.float32(p_it), loss, out.p_cooling))
+    assert 1.0 < pue
+    assert 1.03 < pue < 1.09
+
+
+def test_pue_at_least_one_across_loads(system):
+    cfg = system.cooling
+    n_racks = max(system.n_nodes // system.power.nodes_per_rack, 1)
+    for frac in (0.1, 0.4, 0.8, 1.0):
+        p_it = frac * system.n_nodes * system.power.peak_node_w
+        q = jnp.full((cfg.n_groups,), p_it / cfg.n_groups, jnp.float32)
+        _, out = run_to_steady(cfg, q, n=800)
+        _, loss = pl.conversion(system.power, jnp.float32(p_it),
+                                float(n_racks))
+        assert float(cooling.pue(jnp.float32(p_it), loss,
+                                 out.p_cooling)) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Transient response.
+# ---------------------------------------------------------------------------
+def test_monotone_tower_temp_response_to_load_step(system):
+    """After a step increase in heat load, the tower return temperature
+    rises monotonically (no oscillation/overshoot) to a hotter steady
+    state."""
+    cfg = system.cooling
+    dt = 30.0
+    lo = jnp.full((cfg.n_groups,), 2e4, jnp.float32)
+    hi = jnp.full((cfg.n_groups,), 1.2e5, jnp.float32)
+    state, out_lo = run_to_steady(cfg, lo, dt=dt)
+    t_lo = float(out_lo.t_tower_return)
+    trace = []
+    for _ in range(600):
+        state, out = cooling.step(cfg, state, hi, dt)
+        trace.append(float(out.t_tower_return))
+    trace = np.asarray(trace)
+    assert trace[-1] > t_lo + 1.0                 # visibly hotter
+    assert (np.diff(trace) >= -1e-3).all()        # monotone rise
+    # settled: last 10% of the window moves < 0.05 °C
+    assert trace[-1] - trace[int(0.9 * len(trace))] < 0.05
+
+
+def test_valve_flow_tracks_demand(system):
+    """CDU flow slews toward q/(cp·ΔT_design) and respects its bounds."""
+    cfg = system.cooling
+    # demand above the floor but below full-open
+    q_g = 0.5 * cfg.mdot_kg_s * cfg.cp_j_kg_k * cfg.delta_t_design_c
+    q = jnp.full((cfg.n_groups,), q_g, jnp.float32)
+    state, _ = run_to_steady(cfg, q, n=400)
+    expect = q_g / (cfg.cp_j_kg_k * cfg.delta_t_design_c)
+    np.testing.assert_allclose(np.asarray(state.mdot), expect, rtol=1e-3)
+    # design ΔT holds when the valve is in its control range
+    d = np.asarray(state.t_return) - np.asarray(state.t_supply)
+    np.testing.assert_allclose(d, cfg.delta_t_design_c, rtol=1e-3)
+    state, _ = run_to_steady(cfg, jnp.zeros((cfg.n_groups,), jnp.float32),
+                             n=400)
+    np.testing.assert_allclose(np.asarray(state.mdot),
+                               cfg.mdot_min_frac * cfg.mdot_kg_s, rtol=1e-3)
+
+
+def test_heat_reuse_engages_only_when_hot(system):
+    """The export stream carries heat only when the return water is hot
+    enough to be useful, and never exceeds its capacity cap."""
+    cfg = dataclasses.replace(system.cooling, reuse_frac=0.3,
+                              reuse_max_w=5e4, reuse_t_min_c=30.0)
+    cold, out_cold = run_to_steady(cfg, jnp.full((cfg.n_groups,), 1e4,
+                                                 jnp.float32))
+    assert float(out_cold.q_reuse_w) == 0.0
+    hot, out_hot = run_to_steady(cfg, jnp.full((cfg.n_groups,), 2e5,
+                                               jnp.float32))
+    assert float(out_hot.t_tower_return) >= 30.0
+    assert 0.0 < float(out_hot.q_reuse_w) <= 5e4 + 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel parity (acceptance: <= 1e-4).
+# ---------------------------------------------------------------------------
+def test_fused_cooling_kernel_matches_ref():
+    rng = np.random.default_rng(7)
+    for S, N, G in [(3, 100, 4), (8, 256, 8), (1, 37, 5)]:
+        node_pw = jnp.asarray(rng.uniform(200.0, 2500.0, (S, N)), jnp.float32)
+        ts = jnp.asarray(rng.uniform(20.0, 35.0, (S, G)), jnp.float32)
+        md = jnp.asarray(rng.uniform(8.0, 40.0, (S, G)), jnp.float32)
+        tb = jnp.asarray(rng.uniform(18.0, 30.0, (S,)), jnp.float32)
+        tset = jnp.asarray(rng.uniform(24.0, 32.0, (S,)), jnp.float32)
+        p = topo_ref.CduParams(cp_j_kg_k=4186.0, ua_w_k=4e5, dt=15.0,
+                               tau_hx_s=120.0, tau_valve_s=60.0,
+                               delta_t_design_c=8.0, mdot_min_kg_s=8.0,
+                               mdot_max_kg_s=40.0)
+        want = topo_ref.fused_cooling_ref(node_pw, ts, md, tb, tset, G, p)
+        got = topo_ops.fused_cooling(node_pw, ts, md, tb, tset, G, p,
+                                     use_pallas=True, interpret=True)
+        for w, g, name in zip(want, got,
+                              ("q", "t_return", "t_supply", "mdot")):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_fused_cooling_kernel_unbatched_shapes():
+    p = topo_ref.CduParams(cp_j_kg_k=4186.0, ua_w_k=4e5, dt=15.0,
+                           tau_hx_s=120.0, tau_valve_s=60.0,
+                           delta_t_design_c=8.0, mdot_min_kg_s=8.0,
+                           mdot_max_kg_s=40.0)
+    node_pw = jnp.full((64,), 900.0)
+    ts = jnp.full((4,), 25.0)
+    md = jnp.full((4,), 10.0)
+    want = topo_ref.fused_cooling_ref(node_pw, ts, md, jnp.float32(22.0),
+                                      jnp.float32(25.0), 4, p)
+    got = topo_ops.fused_cooling(node_pw, ts, md, jnp.float32(22.0),
+                                 jnp.float32(25.0), 4, p, use_pallas=True,
+                                 interpret=True)
+    for w, g in zip(want, got):
+        assert g.shape == (4,)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4)
+
+
+def test_engine_fused_path_matches_plain_step(system):
+    """The engine's fused no-grid cooling path must equal step() fed with
+    the separate segment reduction (same math, one pass)."""
+    rng = np.random.default_rng(3)
+    cfg = system.cooling
+    node_pw = jnp.asarray(rng.uniform(200.0, 2200.0, system.n_nodes),
+                          jnp.float32)
+    state = cooling.init_state(cfg)
+    gh = topo_ops.group_power(node_pw, cfg.n_groups)
+    s_a, out_a = cooling.step(cfg, state, gh, system.dt)
+    s_b, out_b, p_it = cooling.step_from_node_power(cfg, state, node_pw,
+                                                    system.dt)
+    np.testing.assert_allclose(np.asarray(s_a.t_supply),
+                               np.asarray(s_b.t_supply), rtol=1e-6)
+    np.testing.assert_allclose(float(out_a.t_tower_return),
+                               float(out_b.t_tower_return), rtol=1e-6)
+    np.testing.assert_allclose(float(p_it), float(jnp.sum(node_pw)),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Weather + scheduling integration.
+# ---------------------------------------------------------------------------
+T1 = 4 * 3600.0
+
+
+def make_table(system, seed, load=1.2, trace_len=8):
+    js = generate(system, WorkloadSpec(
+        n_jobs=64, duration_s=T1, load=load, trace_len=trace_len,
+        n_accounts=8, mean_wall_s=1800.0, seed=seed))
+    js.assign_prepop_placement(0.0, system.n_nodes)
+    return js.to_table(80)
+
+
+def test_heat_wave_raises_tower_temps(system):
+    table = make_table(system, 1)
+    n_steps = int(T1 / system.dt)
+    base = wx.constant_weather(n_steps, system.cooling.t_wetbulb_c)
+    wave = wx.heat_wave(base, system.dt, start_s=3600.0, duration_s=7200.0,
+                        peak_amp_c=10.0)
+    scen = T.Scenario.make("fcfs", "first-fit")
+    _, h0 = eng.simulate(system, table, scen, 0.0, T1, num_accounts=8,
+                         weather=base)
+    _, h1 = eng.simulate(system, table, scen, 0.0, T1, num_accounts=8,
+                         weather=wave)
+    # baseline equals the no-weather run (constant trace == static config)
+    _, h2 = eng.simulate(system, table, scen, 0.0, T1, num_accounts=8)
+    np.testing.assert_allclose(np.asarray(h0.t_tower_return),
+                               np.asarray(h2.t_tower_return), rtol=1e-6)
+    assert float(np.asarray(h1.t_tower_return).max()) > \
+        float(np.asarray(h0.t_tower_return).max()) + 3.0
+    assert float(np.asarray(h1.t_basin).max()) > \
+        float(np.asarray(h0.t_basin).max()) + 3.0
+
+
+def test_thermal_aware_cuts_peak_return_temp_under_heat_wave(system):
+    """Acceptance: thermal_aware defers heat-dense jobs inside the soft
+    band and lowers the peak tower return temperature vs FCFS under a
+    heat-wave trace, without the admission gate doing the work.
+
+    A heat-dense hog and a stream of light jobs are submitted together as
+    the wave peaks; together they oversubscribe the machine, so the queue
+    ORDER decides whose heat lands in the hottest hours (the same
+    contention pattern as the carbon_aware test in test_grid)."""
+    from repro.datasets.base import JobSet
+    sysc = dataclasses.replace(
+        system, cooling=dataclasses.replace(
+            system.cooling, t_return_limit_c=35.0, thermal_margin_c=4.0,
+            t_supply_margin_c=25.0))   # gate effectively off: policy only
+    n_steps = int(T1 / sysc.dt)
+    base = wx.constant_weather(n_steps, sysc.cooling.t_wetbulb_c)
+    wave = wx.heat_wave(base, sysc.dt, start_s=1800.0, duration_s=10800.0,
+                        peak_amp_c=14.0)
+    # submitted well inside the wave so ambient alone has already pushed
+    # the loop into the soft band (the basin lags the wet-bulb through the
+    # passive-coupling time constant)
+    n_light = 12
+    submit = np.array([9000.0] + [9000.0] * n_light)
+    nodes = np.array([48] + [4] * n_light, np.int64)
+    wall = np.array([3600.0] + [900.0] * n_light)
+    prof = np.array([[2200.0]] + [[400.0]] * n_light, np.float32)
+    J = len(submit)
+    js = JobSet(submit=submit, limit=wall * 1.2, wall=wall, nodes=nodes,
+                priority=np.zeros(J), account=np.zeros(J, np.int64),
+                rec_start=submit, power_prof=prof,
+                util_prof=np.full((J, 1), 0.9, np.float32))
+    table = js.to_table(16)
+    scens = [T.Scenario.make("fcfs", "first-fit"),
+             T.Scenario.make("thermal_aware", "first-fit",
+                             thermal_weight=50.0)]
+    finals, hists = eng.simulate_sweep(sysc, table, scens, 0.0, T1,
+                                       num_accounts=8, weather=wave)
+    t_ret = np.asarray(hists.t_tower_return)
+    start = np.asarray(finals.start)
+    assert start[1, 0] > start[0, 0] + sysc.dt   # hog deferred
+    assert t_ret[1].max() < t_ret[0].max() - 0.1
+    # weight 0 == FCFS (sanity for the sweepable knob)
+    scens0 = [T.Scenario.make("fcfs", "first-fit"),
+              T.Scenario.make("thermal_aware", "first-fit",
+                              thermal_weight=0.0)]
+    _, h0 = eng.simulate_sweep(sysc, table, scens0, 0.0, T1,
+                               num_accounts=8, weather=wave)
+    np.testing.assert_allclose(np.asarray(h0.power_it)[0],
+                               np.asarray(h0.power_it)[1], rtol=1e-6)
+
+
+def test_supply_overheat_gates_admission(system):
+    """When the wave pushes supply past setpoint + margin, non-replay
+    admission halts (thermal_throttled telemetry goes high) and resumes
+    after the wave passes."""
+    sysc = dataclasses.replace(
+        system, cooling=dataclasses.replace(system.cooling,
+                                            t_supply_margin_c=3.0))
+    table = make_table(sysc, 3)
+    n_steps = int(T1 / sysc.dt)
+    base = wx.constant_weather(n_steps, sysc.cooling.t_wetbulb_c)
+    wave = wx.heat_wave(base, sysc.dt, start_s=3600.0, duration_s=5400.0,
+                        peak_amp_c=14.0)
+    scen = T.Scenario.make("fcfs", "first-fit")
+    _, hist = eng.simulate(sysc, table, scen, 0.0, T1, num_accounts=8,
+                           weather=wave)
+    gated = np.asarray(hist.thermal_throttled)
+    assert gated.max() == 1.0          # gate engaged during the wave
+    assert gated[-10:].max() == 0.0    # and released afterwards
+    assert gated.sum() < len(gated)    # never permanently stuck
+
+
+def test_per_scenario_weather_sweep_matches_solo_runs(system):
+    """A stacked (scenario, weather) sweep row-for-row equals the same
+    scenario run alone with its own trace."""
+    table = make_table(system, 4)
+    n_steps = int(T1 / system.dt)
+    base = wx.synthetic_weather(n_steps, system.dt, seed=4)
+    wave = wx.heat_wave(base, system.dt, start_s=3600.0, duration_s=7200.0,
+                        peak_amp_c=8.0)
+    scens = [T.Scenario.make("fcfs", "first-fit"),
+             T.Scenario.make("fcfs", "first-fit")]
+    finals, hists = eng.simulate_sweep(system, table, scens, 0.0, T1,
+                                       num_accounts=8, weather=[base, wave])
+    _, h_solo = eng.simulate(system, table, scens[1], 0.0, T1,
+                             num_accounts=8, weather=wave)
+    np.testing.assert_allclose(np.asarray(hists.t_tower_return)[1],
+                               np.asarray(h_solo.t_tower_return), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hists.power_it)[1],
+                               np.asarray(h_solo.power_it), rtol=1e-5)
+
+
+def test_setpoint_delta_sweep_shifts_supply(system):
+    """Scenario.setpoint_delta_c raises the effective supply setpoint in a
+    vmapped sweep: warmer supply water, same schedule physics otherwise."""
+    table = make_table(system, 5)
+    scens = [T.Scenario.make("fcfs", "first-fit"),
+             T.Scenario.make("fcfs", "first-fit", setpoint_delta_c=4.0)]
+    finals, hists = eng.simulate_sweep(system, table, scens, 0.0, T1,
+                                       num_accounts=8)
+    ts = np.asarray(hists.t_supply_max)
+    assert ts[1].mean() > ts[0].mean() + 2.0

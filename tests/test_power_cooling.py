@@ -68,15 +68,17 @@ def test_cooling_steady_state_tracks_load():
     lo = jnp.full((cfg.n_groups,), 2e4)
     hi = jnp.full((cfg.n_groups,), 2e5)
     for _ in range(500):
-        state, pw_lo, tret_lo = cooling.step(cfg, state, lo, 30.0)
+        state, out_lo = cooling.step(cfg, state, lo, 30.0)
     state_hi = cooling.init_state(cfg)
     for _ in range(500):
-        state_hi, pw_hi, tret_hi = cooling.step(cfg, state_hi, hi, 30.0)
-    assert float(tret_hi) > float(tret_lo)       # hotter water under load
-    assert float(pw_hi) > float(pw_lo)           # more fan power under load
-    assert float(state_hi.t_tower) > float(state.t_tower)
+        state_hi, out_hi = cooling.step(cfg, state_hi, hi, 30.0)
+    # hotter water under load
+    assert float(out_hi.t_tower_return) > float(out_lo.t_tower_return)
+    # more fan power under load
+    assert float(out_hi.p_cooling) > float(out_lo.p_cooling)
+    assert float(state_hi.t_basin) > float(state.t_basin)
     # return temperature always above wet bulb
-    assert float(tret_lo) > cfg.t_wetbulb_c
+    assert float(out_lo.t_tower_return) > cfg.t_wetbulb_c
 
 
 def test_pue_above_one_and_reasonable():

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Docs checker: every intra-repo markdown link must resolve.
+
+Scans the repo's *.md files (root + docs/) for inline links and images
+``[text](target)`` and verifies that non-URL targets exist relative to the
+file that references them (anchors are stripped; pure-anchor and mailto /
+http(s) links are skipped). Exit code 1 lists every broken link.
+
+CI runs this plus ``python -m doctest docs/*.md`` (the fenced examples in
+the docs are real doctests) — see .github/workflows/ci.yml.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files() -> list[pathlib.Path]:
+    files = sorted(ROOT.glob("*.md"))
+    docs = ROOT / "docs"
+    if docs.is_dir():
+        files += sorted(docs.rglob("*.md"))
+    return files
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    # ignore links inside fenced code blocks (examples, not navigation)
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in md_files():
+        errors += check_file(path)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken markdown link(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(md_files())} markdown files: all intra-repo "
+          f"links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
