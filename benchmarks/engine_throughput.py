@@ -77,32 +77,74 @@ def run(quick: bool = False):
     return rows
 
 
-def smoke(n_steps: int = 50):
-    """CI perf canary: a tiny 2-scenario sweep (grid signals active) for
-    ``n_steps`` engine steps. Fails loudly on compile errors and emits one
-    CSV row so perf regressions surface in PR logs."""
+def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
+    """CI perf canary: a tiny 2-scenario sweep (grid signals active) plus a
+    flat-vs-multi-hall topology comparison at the same scaled config, for
+    ``n_steps`` engine steps each. Fails loudly on compile errors, emits
+    CSV rows so perf regressions surface in PR logs, and writes
+    ``BENCH_engine.json`` (steps/s per variant) — the artifact the CI
+    workflow uploads so the perf trajectory is tracked across PRs."""
+    import dataclasses
+    import json
+
+    from repro.grid import signals as gsig
+    from repro.systems.config import FacilityTopology
+
     sys_ = get_system("marconi100").scaled(64)
     js = generate(sys_, WorkloadSpec(n_jobs=64, duration_s=n_steps * sys_.dt,
                                      load=1.2, trace_len=8, seed=1))
     table = js.to_table()
     t1 = n_steps * sys_.dt
-    from repro.grid import signals as gsig
     sig = gsig.synthetic_signals(
         sys_.grid, n_steps, sys_.dt, seed=1,
         cap_base_w=0.5 * sys_.n_nodes * sys_.power.peak_node_w)
     scens = [T.Scenario.make("fcfs", "easy"),
              T.Scenario.make("carbon_aware", "easy", carbon_weight=4.0)]
-    eng.simulate_sweep(sys_, table, scens, 0.0, t1, signals=sig)  # compile
-    t0 = time.perf_counter()
-    final, _ = eng.simulate_sweep(sys_, table, scens, 0.0, t1, signals=sig)
-    jax.block_until_ready(final.t)
-    wall = time.perf_counter() - t0
-    row = {"name": "engine/smoke", "us_per_call": wall / n_steps * 1e6,
-           "wall_s": wall, "steps": n_steps, "scenarios": len(scens),
-           "jobs_done": float(np.asarray(final.completed).sum())}
-    print(f"{row['name']},{row['us_per_call']:.1f},"
-          f"steps={n_steps};scenarios={len(scens)};wall_s={wall:.3f}")
-    return [row]
+
+    def timed_sweep(name, system, **kw):
+        eng.simulate_sweep(system, table, scens, 0.0, t1, **kw)  # compile
+        t0 = time.perf_counter()
+        final, _ = eng.simulate_sweep(system, table, scens, 0.0, t1, **kw)
+        jax.block_until_ready(final.t)
+        wall = time.perf_counter() - t0
+        return {"name": name, "us_per_call": wall / n_steps * 1e6,
+                "wall_s": wall, "steps": n_steps, "scenarios": len(scens),
+                "steps_per_s": n_steps * len(scens) / wall,
+                "jobs_done": float(np.asarray(final.completed).sum())}
+
+    rows = [timed_sweep("engine/smoke", sys_, signals=sig)]
+    # flat vs multi-hall: ONE re-rated plant (4 groups, 4 cells, total
+    # capacity/flow/conductance preserved), run with 1-hall vs 4-hall
+    # topology and otherwise identical settings — the delta between these
+    # two rows isolates the hierarchy's cost (hall segment sums, per-hall
+    # basins, hall-aware placement ordering), which is what the canary
+    # tracks; the grid-signal row above stays the legacy baseline
+    c = sys_.cooling
+    base_cool = dataclasses.replace(
+        c, n_groups=4, mdot_kg_s=c.mdot_kg_s * c.n_groups / 4,
+        ua_w_k=c.ua_w_k * c.n_groups / 4,
+        pump_w_per_group=c.pump_w_per_group * c.n_groups / 4,
+        n_tower_cells=4,
+        cell_rated_heat_w=c.cell_rated_heat_w * c.n_tower_cells / 4,
+        fan_rated_w=c.fan_rated_w * c.n_tower_cells / 4)
+    for name, halls in [("engine/smoke-flat", 1), ("engine/smoke-4hall", 4)]:
+        sys_h = dataclasses.replace(
+            sys_, cooling=dataclasses.replace(
+                base_cool, topology=FacilityTopology(n_halls=halls)))
+        rows.append(timed_sweep(name, sys_h))
+    for row in rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+    if bench_json:
+        payload = {r["name"]: {"steps_per_s": r["steps_per_s"],
+                               "wall_s": r["wall_s"],
+                               "scenarios": r["scenarios"],
+                               "steps": r["steps"]} for r in rows}
+        with open(bench_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {bench_json}")
+    return rows
 
 
 if __name__ == "__main__":
@@ -111,10 +153,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="50-step CI canary instead of the full benchmark")
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--bench-json", default="BENCH_engine.json")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.smoke:
-        smoke(args.steps)
+        smoke(args.steps, args.bench_json)
     else:
         from benchmarks.common import emit_csv
         emit_csv(run(quick=args.quick))

@@ -3,13 +3,15 @@
 ``weather`` -- per-step ambient wet-bulb/dry-bulb traces + in-scan indexing
                (synthetic diurnal+seasonal generators, heat-wave overlay,
                measured-trace loader hook).
-``model``   -- the transient loop: per-CDU valve/pump dynamics, facility HX,
-               tower fan staging with cube-law power, basin thermal mass and
+``model``   -- the transient plant, hierarchical (halls -> CDU groups ->
+               nodes, ``FacilityTopology``): per-CDU valve/pump dynamics,
+               facility HX, per-hall tower fan staging with cube-law power,
+               per-hall basin thermal mass, maintenance (cells offline) and
                a heat-reuse/export side stream.
 """
 from repro.cooling.weather import (  # noqa: F401
     WeatherNow, WeatherSignals, at_step, constant_weather, from_arrays,
-    heat_wave, stack_weather, synthetic_weather)
+    heat_wave, stack_halls, stack_weather, synthetic_weather)
 from repro.cooling.model import (  # noqa: F401
-    CoolingOut, ThermalNow, init_state, pue, step, step_from_node_power,
-    thermal_neutral, thermal_now)
+    CoolingOut, ThermalNow, halls, init_state, pue, step,
+    step_from_node_power, thermal_neutral, thermal_now)

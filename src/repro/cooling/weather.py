@@ -28,7 +28,12 @@ from repro.core.types import _register
 @_register
 @dataclass
 class WeatherSignals:
-    """Per-step ambient conditions. Shapes: f32[S] (S = engine steps)."""
+    """Per-step ambient conditions. Shapes: f32[S] (S = engine steps) for a
+    site-wide trace, or f32[S, H] for one trace per hall
+    (``stack_halls``) — machine halls a few hundred meters apart share
+    weather, but per-hall traces express microclimate what-ifs (a hall
+    whose towers sit on the sun-side roof) and, more importantly, give
+    each hall's evaporative floor its own knob in maintenance studies."""
     t_wetbulb_c: jnp.ndarray   # ambient wet-bulb temperature (°C)
     t_drybulb_c: jnp.ndarray   # ambient dry-bulb temperature (°C)
 
@@ -38,9 +43,10 @@ class WeatherSignals:
 
 
 class WeatherNow(NamedTuple):
-    """The ambient conditions active at one engine step (traced scalars)."""
-    t_wetbulb_c: jnp.ndarray   # f32[] °C
-    t_drybulb_c: jnp.ndarray   # f32[] °C
+    """The ambient conditions active at one engine step (traced): scalars
+    for a site-wide trace, f32[H] when the trace is stacked per hall."""
+    t_wetbulb_c: jnp.ndarray   # f32[] / f32[H] °C
+    t_drybulb_c: jnp.ndarray   # f32[] / f32[H] °C
 
 
 def at_step(weather: WeatherSignals, step: jnp.ndarray) -> WeatherNow:
@@ -157,3 +163,17 @@ def stack_weather(traces: Sequence[WeatherSignals]) -> WeatherSignals:
     """Stack weather scenarios on a leading batch axis for vmapped sweeps
     (each scenario row then sees its own trace; see engine.simulate_sweep)."""
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *traces)
+
+
+def stack_halls(traces: Sequence[WeatherSignals]) -> WeatherSignals:
+    """Stack one trace per *hall* on a trailing axis: f32[S] -> f32[S, H].
+
+    The engine's per-step gather (``at_step``) then yields f32[H] rows
+    that broadcast against the per-hall basin state — each hall's tower
+    sees its own wet-bulb. Composes with ``stack_weather``: build the
+    per-hall set for each scenario first, then stack scenarios on the
+    leading (vmap) axis, e.g.
+    ``simulate_sweep(weather=[stack_halls(ws) for ws in per_scenario])``.
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=-1),
+                                  *traces)

@@ -13,8 +13,9 @@ Main loop per step (paper's four well-defined steps):
 
 The engine is pure: ``simulate`` compiles once per (system, job-table shape)
 and a *batch of scenarios* (policy x backfill x incentive weights) runs under
-``vmap`` — see ``simulate_sweep``. On multi-host/TPU deployments the scenario
-axis is sharded (see repro.launch.simulate / EXPERIMENTS.md).
+``vmap`` — see ``simulate_sweep``. With more than one device the scenario
+axis shards across them as one ``shard_map`` program
+(``simulate_sweep_sharded``; the CLI and examples call it by default).
 
 Per-step environment inputs follow one pattern: host-precomputed arrays
 (``repro.grid.signals.GridSignals``, ``repro.cooling.weather
@@ -125,7 +126,8 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
           grid: gsig.GridNow | None, cap_active: jnp.ndarray | None,
           wx: wsig.WeatherNow | None = None,
           setpoint_delta_c=0.0,
-          thermal: cooling.ThermalNow | None = None
+          thermal: cooling.ThermalNow | None = None,
+          cells_offline=0.0
           ) -> Tuple[T.SimState, T.StepRecord]:
     """Phase (4): cap enforcement + physics + accounting + telemetry.
 
@@ -138,10 +140,11 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
     loop update (repro.kernels.power_topo.fused_cooling) — the seed
     engine's exact cost.
 
-    ``wx`` carries the ambient conditions for this step (°C); ``None`` is
-    compile-time "no weather trace" and the static ``CoolingConfig``
-    wet-bulb applies. ``setpoint_delta_c`` is the traced setpoint-sweep
-    knob (``Scenario.setpoint_delta_c``).
+    ``wx`` carries the ambient conditions for this step (°C, scalar or
+    per-hall f32[H]); ``None`` is compile-time "no weather trace" and the
+    static ``CoolingConfig`` wet-bulb applies. ``setpoint_delta_c`` and
+    ``cells_offline`` are the traced sweep knobs
+    (``Scenario.setpoint_delta_c`` / ``Scenario.cells_offline``).
     """
     dt = system.dt
     t = st.t
@@ -165,14 +168,16 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         throttle = 1.0 - cap.c
         cool_state, cool = cooling.step(system.cooling, st.cooling,
                                         cap.group_heat, dt, t_wb,
-                                        setpoint_delta_c)
+                                        setpoint_delta_c, cells_offline)
     else:
         cap_active = T.INF
         throttle = jnp.float32(0.0)
-        # fused path: segment reduce + CDU loop update in one pass; total
-        # IT power falls out of the group sums
+        # fused path: hierarchical (node -> CDU -> hall) segment reduce +
+        # CDU loop update in one pass; total IT power falls out of the
+        # hall sums
         cool_state, cool, p_it = cooling.step_from_node_power(
-            system.cooling, st.cooling, node_pw, dt, t_wb, setpoint_delta_c)
+            system.cooling, st.cooling, node_pw, dt, t_wb, setpoint_delta_c,
+            cells_offline)
     n_racks = max(system.n_nodes // system.power.nodes_per_rack, 1)
     p_in, p_loss = plosses.conversion(system.power, p_it, float(n_racks))
     p_cool = cool.p_cooling
@@ -217,9 +222,14 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         q_reuse_w=cool.q_reuse_w, t_basin=cool.t_basin,
         t_supply_max=cool.t_supply_max,
         t_wetbulb=(jnp.float32(system.cooling.t_wetbulb_c) if wx is None
-                   else wx.t_wetbulb_c),
+                   else jnp.mean(wx.t_wetbulb_c)),
         thermal_throttled=(jnp.float32(0.0) if thermal is None else
-                           thermal.overheat.astype(jnp.float32)))
+                           thermal.overheat.astype(jnp.float32)),
+        # per-hall telemetry: the hall heat sums ARE the per-hall IT power
+        # (the cooling plant is fed the (throttled) IT draw per group)
+        power_it_hall=cool.q_hall_w, t_basin_hall=cool.t_basin_hall,
+        t_supply_max_hall=cool.t_supply_max_hall,
+        t_wetbulb_hall=cool.t_wetbulb_hall, cells_online=cool.cells_online)
 
     new = dataclasses.replace(
         st, t=t + dt, step=st.step + 1, end=end, progress=progress,
@@ -250,7 +260,7 @@ def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
         # no grid layer: skip the admission power pass and cap machinery
         st = sched.schedule_step(system, table, st, scen, thermal=thermal)
         return _tick(system, table, st, None, None, wx,
-                     scen.setpoint_delta_c, thermal)
+                     scen.setpoint_delta_c, thermal, scen.cells_offline)
     grid = gsig.at_step(signals, st.step)
     cap_active = grid.cap_w * scen.cap_scale
     # raw IT draw after completions: the cap-aware admission baseline
@@ -261,7 +271,7 @@ def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                              proj_pw=pmodel.system_it_power(node_pw),
                              thermal=thermal)
     return _tick(system, table, st, grid, cap_active, wx,
-                 scen.setpoint_delta_c, thermal)
+                 scen.setpoint_delta_c, thermal, scen.cells_offline)
 
 
 # ---------------------------------------------------------------------------
@@ -271,7 +281,8 @@ def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
 def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                   place_ids: jnp.ndarray,
                   signals: gsig.GridSignals | None = None,
-                  weather: wsig.WeatherSignals | None = None
+                  weather: wsig.WeatherSignals | None = None,
+                  scen: T.Scenario | None = None
                   ) -> Tuple[T.SimState, T.StepRecord]:
     """One engine step where placement decisions come from outside.
 
@@ -281,37 +292,61 @@ def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     The cap schedule (when ``signals`` is given) and the thermal admission
     gate still apply — an external scheduler cannot opt out of facility
     power or thermal management.
+
+    ``scen`` routes the facility what-if knobs the external scheduler has
+    no say over — ``cap_scale`` (scales the cap schedule),
+    ``setpoint_delta_c`` (shifts the supply setpoint the overheat gate
+    measures against) and ``cells_offline`` (tower maintenance); ``None``
+    keeps every knob neutral. Policy/backfill fields are ignored: the
+    external peer IS the policy.
     """
     grid = None if signals is None else gsig.at_step(signals, st.step)
     wx = None if weather is None else wsig.at_step(weather, st.step)
+    setpoint_delta = 0.0 if scen is None else scen.setpoint_delta_c
+    cells_offline = 0.0 if scen is None else scen.cells_offline
+    cap_scale = 1.0 if scen is None else scen.cap_scale
     st = _prepare_and_arrivals(system, table, st)
-    thermal = cooling.thermal_now(system.cooling, st.cooling)
+    thermal = cooling.thermal_now(system.cooling, st.cooling, setpoint_delta)
     thermal_ok = ~thermal.overheat
+    hall_aware = system.cooling.n_halls > 1
+    if hall_aware:
+        order_nodes, node_ok, free_ok0 = sched.hall_placement_plan(
+            system, st, thermal, is_replay=False)
+    else:
+        free_ok0 = st.free_count
 
     def body(i, carry):
-        node_job, jstate, start, end, free_count = carry
+        node_job, jstate, start, end, free_count, free_ok = carry
         j = place_ids[i]
         ok = j >= 0
         jj = jnp.maximum(j, 0)
         need = table.nodes[jj]
-        can = ok & (jstate[jj] == T.QUEUED) & (need <= free_count) & \
-            thermal_ok
-        sel = rm.firstfree_mask(node_job, need)
+        th_ok = (need <= free_ok) if hall_aware else thermal_ok
+        can = ok & (jstate[jj] == T.QUEUED) & (need <= free_count) & th_ok
+        if hall_aware:
+            sel = rm.firstfree_mask_ordered(node_job, need, order_nodes)
+        else:
+            sel = rm.firstfree_mask(node_job, need)
         node_job = rm.place(node_job, sel, jj, can)
         free_count = free_count - jnp.where(can, need, 0)
+        if hall_aware:
+            free_ok = free_ok - jnp.where(
+                can, jnp.sum((sel & node_ok).astype(jnp.int32)), 0)
+        # (inert carry on a flat plant — the global gate never reads it)
         jstate = jstate.at[jj].set(jnp.where(can, T.RUNNING, jstate[jj]))
         start = start.at[jj].set(jnp.where(can, st.t, start[jj]))
         end = end.at[jj].set(jnp.where(can, st.t + table.wall[jj], end[jj]))
-        return node_job, jstate, start, end, free_count
+        return node_job, jstate, start, end, free_count, free_ok
 
-    carry = (st.node_job, st.jstate, st.start, st.end, st.free_count)
-    node_job, jstate, start, end, free_count = jax.lax.fori_loop(
+    carry = (st.node_job, st.jstate, st.start, st.end, st.free_count,
+             jnp.int32(free_ok0))
+    node_job, jstate, start, end, free_count, _ = jax.lax.fori_loop(
         0, place_ids.shape[0], body, carry)
     st = dataclasses.replace(st, jstate=jstate, start=start, end=end,
                              node_job=node_job, free_count=free_count)
     return _tick(system, table, st, grid,
-                 None if grid is None else grid.cap_w, wx,
-                 thermal=thermal)
+                 None if grid is None else grid.cap_w * cap_scale, wx,
+                 setpoint_delta, thermal, cells_offline)
 
 
 # ---------------------------------------------------------------------------
@@ -373,9 +408,11 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
     skip the reservation machinery entirely, and all policy selects fold
     away (EXPERIMENTS.md §Perf-twin iter T1)."""
     n_steps = int(round((t1 - t0) / system.dt))
-    scen = T.Scenario(T.POLICY_NAMES[policy], T.BACKFILL_NAMES[backfill],
-                      1.0, 1.0, 1.0, 1.0, 1.0,
-                      0.0)  # raw Python values -> static in the closure
+    # keyword/default construction with raw Python values (-> static in
+    # the closure): every knob past policy/backfill takes its declared
+    # neutral default, so growing Scenario can never silently shift knobs
+    scen = T.Scenario(policy=T.POLICY_NAMES[policy],
+                      backfill=T.BACKFILL_NAMES[backfill])
     key = (system, policy, backfill, n_steps, table.num_jobs,
            table.prof_len, num_accounts, signals is None, weather is None)
     fn = _STATIC_CACHE.get(key)
@@ -431,3 +468,71 @@ def simulate_sweep(system: SystemConfig, table: T.JobTable,
         return jax.vmap(one, in_axes=(0, w_axis))(scen_, weather_)
 
     return run(system, table, st0, batched, signals, weather_b, n_steps)
+
+
+def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
+                           scens: list[T.Scenario], t0: float, t1: float,
+                           accounts: T.AccountStats | None = None,
+                           num_accounts: int = 64,
+                           signals: gsig.GridSignals | None = None,
+                           weather=None,
+                           ) -> Tuple[T.SimState, T.StepRecord]:
+    """``simulate_sweep`` with the scenario axis sharded across devices.
+
+    One ``shard_map`` over a 1-D ``("scenario",)`` mesh
+    (repro.parallel.sharding.sweep_mesh): each device scans its slice of
+    the scenario batch with the job table, initial state and grid signals
+    replicated — scenario rows never communicate, so the program contains
+    no collectives and scales linearly across hosts. Per-scenario weather
+    (a list, possibly hall-stacked — see ``cooling.weather.stack_halls``)
+    is sharded with the scenarios. The batch is padded to the device
+    count by replicating the last scenario; padded rows are sliced off
+    the result. With a single device this degenerates to exactly
+    ``simulate_sweep`` (one vmapped program, no sharding machinery).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.parallel import sharding as psh
+
+    n_dev = len(jax.devices())
+    if n_dev <= 1:
+        return simulate_sweep(system, table, scens, t0, t1, accounts,
+                              num_accounts, signals, weather)
+    n_steps = int(round((t1 - t0) / system.dt))
+    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    batched = T.stack_scenarios(scens)
+    if isinstance(weather, (list, tuple)):
+        if len(weather) != len(scens):
+            raise ValueError(f"need one weather trace per scenario: "
+                             f"{len(weather)} != {len(scens)}")
+        weather_b, w_axis = wsig.stack_weather(weather), 0
+    else:
+        weather_b, w_axis = weather, None
+
+    S = len(scens)
+    batched, _ = psh.pad_leading_axis(batched, n_dev)
+    if w_axis == 0:
+        weather_b, _ = psh.pad_leading_axis(weather_b, n_dev)
+    mesh = psh.sweep_mesh()
+    scen_spec = psh.scenario_spec()
+    w_spec = scen_spec if w_axis == 0 else jax.sharding.PartitionSpec()
+    rep = jax.sharding.PartitionSpec()
+
+    @jax.jit
+    def run(table_, st0_, scen_, signals_, weather_):
+        def shard(table_s, st0_s, scen_s, signals_s, weather_s):
+            def one(scen1, weather1):
+                def body(st, _):
+                    return engine_step(system, table_s, st, scen1,
+                                       signals_s, weather1)
+                return jax.lax.scan(body, st0_s, None, length=n_steps)
+            return jax.vmap(one, in_axes=(0, w_axis))(scen_s, weather_s)
+        return shard_map(shard, mesh=mesh,
+                         in_specs=(rep, rep, scen_spec, rep, w_spec),
+                         out_specs=scen_spec)(
+            table_, st0_, scen_, signals_, weather_)
+
+    final, hist = run(table, st0, batched, signals, weather_b)
+    trim = lambda x: x[:S]
+    return (jax.tree_util.tree_map(trim, final),
+            jax.tree_util.tree_map(trim, hist))

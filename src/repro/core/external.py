@@ -16,11 +16,27 @@ Two coupling modes, exactly as the paper describes for ScheduleFlow/FastSim:
 processing); ``ScheduleFlowLike`` mimics an on-the-fly scheduler that
 recomputes its plan on every triggered event (slow but faithful to the
 paper's observation about frequent recalculation overhead).
+
+Wire protocol (bridge hardening)
+--------------------------------
+The original coupling assumed a well-behaved in-process peer. The bridge
+now speaks a *versioned* wire format: each poll answer is an envelope
+``{"version": WIRE_VERSION, "kind": "running_set", "job_ids": [...]}``
+(``encode_running`` / ``decode_running``), validated before it touches
+engine state — version mismatches, non-integer ids, out-of-range ids and
+duplicates all raise ``ProtocolError`` instead of corrupting the node
+map. ``SchedulerBridge`` adds the per-call timeout/reconnect story: a
+poll that exceeds ``BridgeConfig.timeout_s`` (measured wall time — an
+in-process peer cannot be preempted, so the over-budget answer is
+*discarded*) or raises a transport-ish error triggers a reconnect
+(``peer.reset`` replay) and a bounded retry; persistent failure raises
+``BridgeTimeout``. Legacy peers exposing only ``running_at`` are wrapped
+transparently; peers exposing ``poll_wire`` are validated end-to-end.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field, replace
 from typing import Iterable, Protocol
 
 import numpy as np
@@ -31,6 +47,17 @@ from repro.core import types as T
 from repro.datasets.base import JobSet
 from repro.datasets.synthetic import event_schedule
 from repro.systems.config import SystemConfig
+
+WIRE_VERSION = 1
+WIRE_KIND_RUNNING = "running_set"
+
+
+class ProtocolError(RuntimeError):
+    """The peer answered with a malformed / wrong-version wire message."""
+
+
+class BridgeTimeout(RuntimeError):
+    """The peer kept exceeding the per-call budget after reconnects."""
 
 
 class ExternalScheduler(Protocol):
@@ -43,6 +70,127 @@ class ExternalScheduler(Protocol):
         running (FastSim plugin-mode contract: 'responds with a list of
         running jobs indexed by job ID')."""
         ...
+
+
+# ---------------------------------------------------------------------------
+# Wire format + bridge.
+# ---------------------------------------------------------------------------
+def encode_running(job_ids: Iterable[int]) -> dict:
+    """Wrap a running-set answer in the versioned wire envelope."""
+    return {"version": WIRE_VERSION, "kind": WIRE_KIND_RUNNING,
+            "job_ids": [int(j) for j in job_ids]}
+
+
+def decode_running(msg, n_jobs: int) -> np.ndarray:
+    """Validate a wire envelope and return the running-set ids (i64[K]).
+
+    Raises ``ProtocolError`` on anything a confused or wrong-version peer
+    could send: not a dict, missing/mismatched version, wrong kind,
+    non-integer ids, ids outside ``[0, n_jobs)``, duplicates.
+    """
+    if not isinstance(msg, dict):
+        raise ProtocolError(f"wire message must be a dict envelope, "
+                            f"got {type(msg).__name__}")
+    ver = msg.get("version")
+    if ver != WIRE_VERSION:
+        raise ProtocolError(f"wire version mismatch: peer speaks {ver!r}, "
+                            f"bridge speaks {WIRE_VERSION}")
+    if msg.get("kind") != WIRE_KIND_RUNNING:
+        raise ProtocolError(f"unexpected message kind {msg.get('kind')!r}")
+    ids = msg.get("job_ids")
+    try:
+        arr = np.asarray(ids)
+    except Exception as e:  # ragged / object payloads
+        raise ProtocolError(f"job_ids not array-like: {e}") from e
+    if arr.size == 0:
+        return np.zeros((0,), np.int64)
+    if arr.ndim != 1 or not np.issubdtype(arr.dtype, np.integer):
+        raise ProtocolError(f"job_ids must be a flat integer list, got "
+                            f"ndim={arr.ndim} dtype={arr.dtype}")
+    arr = arr.astype(np.int64)
+    if arr.min() < 0 or arr.max() >= n_jobs:
+        raise ProtocolError(f"job id out of range [0, {n_jobs}): "
+                            f"[{arr.min()}, {arr.max()}]")
+    if np.unique(arr).size != arr.size:
+        raise ProtocolError("duplicate job ids in running set")
+    return arr
+
+
+# transport-style failures the bridge may heal by reconnecting; anything
+# else raised by a peer is a peer bug and must surface with its own
+# traceback (a reconnect would mask it and replay side effects)
+TRANSPORT_ERRORS = (ConnectionError, OSError, TimeoutError)
+
+
+@dataclass(frozen=True)
+class BridgeConfig:
+    """Per-call budget + retry policy for the external coupling.
+
+    The default budget is deliberately generous: in-process peers cannot
+    be preempted (the budget is enforced post-hoc) and a slow-but-correct
+    peer — ScheduleFlowLike recomputes its whole plan per poll — must
+    complete, not flap through reset/retry cycles. Tighten it for real
+    out-of-process transports."""
+    timeout_s: float = 30.0  # wall budget per poll (post-hoc for in-process)
+    max_retries: int = 1     # reconnect+retry attempts after a failure
+
+
+@dataclass
+class SchedulerBridge:
+    """Hardened coupling to an external scheduler.
+
+    Validates every answer against the versioned wire format and owns the
+    timeout/reconnect path: a poll that raises (transport-style failure)
+    or blows its wall budget is discarded, the peer is *reconnected* — a
+    fresh ``reset`` replaying (system, jobs, t0), the only resync an
+    event-based peer supports — and the poll retried up to
+    ``BridgeConfig.max_retries`` times; persistent failure raises
+    ``BridgeTimeout``. ``ProtocolError`` is never retried: a peer that
+    speaks the wrong dialect will keep speaking it.
+    """
+    peer: "ExternalScheduler"
+    config: BridgeConfig = field(default_factory=BridgeConfig)
+    reconnects: int = 0
+    _args: tuple | None = None
+
+    def reset(self, system: SystemConfig, jobs: JobSet, t0: float) -> None:
+        self._args = (system, jobs, t0)
+        self.peer.reset(system, jobs, t0)
+
+    def _reconnect(self) -> None:
+        if self._args is None:
+            raise BridgeTimeout("cannot reconnect before reset()")
+        self.reconnects += 1
+        self.peer.reset(*self._args)
+
+    def poll(self, t: float) -> np.ndarray:
+        """Running-set ids at ``t``, validated; reconnects on failure."""
+        n_jobs = len(self._args[1]) if self._args else 1 << 31
+        last = "never polled"
+        for _ in range(self.config.max_retries + 1):
+            t_call = time.perf_counter()
+            try:
+                if hasattr(self.peer, "poll_wire"):
+                    ids = decode_running(self.peer.poll_wire(t), n_jobs)
+                else:  # legacy peer: bare array, validated the same way
+                    ids = decode_running(
+                        encode_running(self.peer.running_at(t)), n_jobs)
+            except ProtocolError:
+                raise                       # malformed speech: not retryable
+            except TRANSPORT_ERRORS as e:   # connection-style failure
+                last = f"poll raised {e!r}"
+                self._reconnect()
+                continue
+            took = time.perf_counter() - t_call
+            if took > self.config.timeout_s:
+                # in-process peers cannot be preempted: the budget is
+                # enforced post-hoc and the stale answer discarded
+                last = f"poll took {took:.3f}s > {self.config.timeout_s}s"
+                self._reconnect()
+                continue
+            return ids
+        raise BridgeTimeout(f"peer unusable after "
+                            f"{self.config.max_retries + 1} attempts: {last}")
 
 
 # ---------------------------------------------------------------------------
@@ -70,6 +218,10 @@ class FastSimLike:
     def running_at(self, t: float) -> np.ndarray:
         s = self.start
         return np.nonzero((s <= t) & (s + self._jobs.wall > t))[0]
+
+    def poll_wire(self, t: float) -> dict:
+        """Versioned wire endpoint (bridge conformance)."""
+        return encode_running(self.running_at(t))
 
 
 @dataclass
@@ -122,14 +274,23 @@ class ScheduleFlowLike:
 # ---------------------------------------------------------------------------
 def run_plugin_mode(system: SystemConfig, jobs: JobSet,
                     scheduler: ExternalScheduler, t0: float, t1: float,
-                    pad_to: int | None = None, max_place: int = 64):
+                    pad_to: int | None = None, max_place: int = 64,
+                    bridge_config: BridgeConfig | None = None,
+                    scen: T.Scenario | None = None):
     """Plugin mode: poll the external scheduler between compiled steps.
+
+    The peer is wrapped in a ``SchedulerBridge`` (versioned wire format,
+    per-call timeout/reconnect) unless it already is one. ``scen`` routes
+    the facility what-if knobs (cap scale, setpoint offset, cells
+    offline) the external peer has no say over.
 
     Returns (final_state, history dict of numpy arrays, wall_seconds).
     """
     table = jobs.to_table(pad_to)
     st = eng.init_state(system, table, t0, t1)
-    scheduler.reset(system, jobs, t0)
+    bridge = scheduler if isinstance(scheduler, SchedulerBridge) else \
+        SchedulerBridge(scheduler, bridge_config or BridgeConfig())
+    bridge.reset(system, jobs, t0)
     n_steps = int(round((t1 - t0) / system.dt))
     rows = []
     wall0 = time.perf_counter()
@@ -137,11 +298,12 @@ def run_plugin_mode(system: SystemConfig, jobs: JobSet,
         np.asarray(st.jstate) == T.RUNNING)[0].tolist())
     for i in range(n_steps):
         t = t0 + i * system.dt
-        want = set(scheduler.running_at(t).tolist())
+        want = set(bridge.poll(t).tolist())
         new = sorted(want - running_prev)[:max_place]
         place = np.full((max_place,), -1, np.int32)
         place[:len(new)] = new
-        st, rec = eng.external_step(system, table, st, jnp.asarray(place))
+        st, rec = eng.external_step(system, table, st, jnp.asarray(place),
+                                    scen=scen)
         # S-RAPS keeps its own copy of the system state (paper §4.2.2)
         running_prev = set(np.nonzero(
             np.asarray(st.jstate) == T.RUNNING)[0].tolist())
@@ -154,8 +316,14 @@ def run_plugin_mode(system: SystemConfig, jobs: JobSet,
 
 def run_sequential_mode(system: SystemConfig, jobs: JobSet,
                         scheduler: ExternalScheduler, t0: float, t1: float,
-                        pad_to: int | None = None):
-    """Sequential mode: external scheduler first, compiled replay second."""
+                        pad_to: int | None = None,
+                        scen: T.Scenario | None = None):
+    """Sequential mode: external scheduler first, compiled replay second.
+
+    ``scen`` routes the facility what-if knobs (cap scale, setpoint
+    offset, cells offline) into the replay, exactly as in plugin mode;
+    its policy/backfill fields are overridden to replay — the external
+    schedule is the policy."""
     scheduler.reset(system, jobs, t0)
     sched_start = np.asarray(scheduler.start, dtype=np.float64)
     rescheduled = JobSet(
@@ -166,5 +334,7 @@ def run_sequential_mode(system: SystemConfig, jobs: JobSet,
         first_node=jobs.first_node, score=jobs.score,
         name=jobs.name + "+external")
     table = rescheduled.to_table(pad_to)
-    scen = T.Scenario.make("replay")
+    scen = T.Scenario.make("replay") if scen is None else replace(
+        scen, policy=jnp.int32(T.POLICY_REPLAY),
+        backfill=jnp.int32(T.BF_NONE))
     return eng.simulate(system, table, scen, t0, t1)

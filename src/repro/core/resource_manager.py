@@ -5,6 +5,10 @@ Node state is a single int32 array ``node_job[N]`` (occupying job id, -1 when
 free). Placement is vectorized:
 
 * reschedule mode: first-free placement by prefix-sum rank over the free mask;
+* hall-aware mode: the same prefix-sum rank, taken in a caller-supplied
+  node *preference order* (``firstfree_mask_ordered``) — the scheduler
+  orders nodes by their hall's cooling pressure so placement drains into
+  the coolest hall first (repro.systems.config.FacilityTopology);
 * replay mode: the exact recorded contiguous span ``[first_node,
   first_node+need)`` (paper §3.2.3: "the exact node placement as specified in
   the telemetry is used in replay mode").
@@ -29,6 +33,18 @@ def firstfree_mask(node_job: jnp.ndarray, need: jnp.ndarray) -> jnp.ndarray:
     free = node_job < 0
     rank = jnp.cumsum(free.astype(jnp.int32))
     return free & (rank <= need)
+
+
+def firstfree_mask_ordered(node_job: jnp.ndarray, need: jnp.ndarray,
+                           order: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask selecting the first ``need`` free nodes *in preference
+    order* (``order``: i32[N] permutation of node indices; identity order
+    reproduces ``firstfree_mask`` exactly)."""
+    free = node_job < 0
+    free_o = free[order]
+    rank = jnp.cumsum(free_o.astype(jnp.int32))
+    sel_o = free_o & (rank <= need)
+    return jnp.zeros_like(free).at[order].set(sel_o)
 
 
 def contiguous_mask(n_nodes: int, first: jnp.ndarray,

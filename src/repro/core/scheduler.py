@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -31,6 +33,7 @@ from repro.cooling import model as cmodel
 from repro.core import resource_manager as rm
 from repro.core import types as T
 from repro.grid import signals as gsig
+from repro.kernels.power_topo.ref import group_ids
 from repro.systems.config import SystemConfig
 
 
@@ -165,6 +168,66 @@ def shadow_for(end_sorted: jnp.ndarray, cum_nodes: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Hall-aware placement (repro.systems.config.FacilityTopology).
+# ---------------------------------------------------------------------------
+def _hall_spans(system: SystemConfig):
+    """Static (node_hall i32[N], sizes i32[H], first-node i32[H]) of the
+    contiguous per-hall node spans (host-side numpy; trace-time
+    constants)."""
+    n_nodes, n_groups = system.n_nodes, system.cooling.n_groups
+    gid = np.asarray(group_ids(n_nodes, n_groups))  # the single source of
+    #                          the node->CDU rule (kernels/power_topo/ref)
+    node_hall = np.asarray(system.cooling.hall_of_group(),
+                           np.int32)[gid]
+    sizes = np.bincount(node_hall, minlength=system.cooling.n_halls)
+    first = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return node_hall, sizes.astype(np.int32), first.astype(np.int32)
+
+
+def hall_placement_plan(system: SystemConfig, st: T.SimState,
+                        thermal: cmodel.ThermalNow, is_replay):
+    """Node preference order + per-hall admission inputs for one pass.
+
+    Nodes are ordered by their hall's cooling pressure (soft-band
+    ``excess_hall``, with overheated halls pushed last), index-stable
+    within a hall — so first-free placement drains into the coolest hall
+    first and an overheating hall stops receiving work while any other
+    hall has room. Replay keeps the identity order (the recorded
+    placement is ground truth).
+
+    Halls are contiguous node spans, so the permutation is built from an
+    H-element sort plus an O(N) scatter — no per-step N·log N sort inside
+    the scan (H is tens, N up to ~160k).
+
+    Returns (order i32[N], node_ok bool[N], free_ok i32[]): the
+    preference permutation, which nodes sit in a non-overheated hall, and
+    how many of those are currently free (the per-job admission budget —
+    a job may start iff it fits inside ``free_ok``).
+    """
+    node_hall_np, sizes_np, first_np = _hall_spans(system)
+    node_hall = jnp.asarray(node_hall_np)
+    sizes = jnp.asarray(sizes_np)
+    first = jnp.asarray(first_np)
+    H = system.cooling.n_halls
+    node_ok = ~thermal.overheat_hall[node_hall]
+    penalty_h = thermal.excess_hall + \
+        1e3 * thermal.overheat_hall.astype(jnp.float32)
+    penalty_h = penalty_h * jnp.where(is_replay, 0.0, 1.0)
+    # stable H-sort of halls by pressure, then concatenate their spans:
+    # out_start[h] = where hall h's span begins in the preference order
+    hall_order = jnp.lexsort((jnp.arange(H), penalty_h))
+    sz_sorted = sizes[hall_order]
+    starts_sorted = jnp.cumsum(sz_sorted) - sz_sorted     # exclusive cumsum
+    out_start = jnp.zeros((H,), jnp.int32).at[hall_order].set(
+        starts_sorted.astype(jnp.int32))
+    idx = jnp.arange(system.n_nodes, dtype=jnp.int32)
+    pos = out_start[node_hall] + (idx - first[node_hall])
+    order = jnp.zeros_like(idx).at[pos].set(idx)
+    free_ok = jnp.sum(((st.node_job < 0) & node_ok).astype(jnp.int32))
+    return order, node_ok, free_ok
+
+
+# ---------------------------------------------------------------------------
 # The scheduling pass.
 # ---------------------------------------------------------------------------
 def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
@@ -185,14 +248,27 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     ``grid is None`` (no signals) is compile-time: the cap machinery folds
     away entirely.
 
-    Thermal admission throttling: when the cooling loop has lost the supply
-    setpoint by more than ``CoolingConfig.t_supply_margin_c``
-    (``thermal.overheat``, see repro.cooling.model.thermal_now), every
-    non-replay admission is deferred for this step — starting more work
-    while the CDUs cannot hold their setpoint only pushes the loop further
-    from it. Replay is exempt (the recorded schedule is ground truth), and
-    running jobs are untouched (heat relief comes from completions)."""
+    Thermal admission throttling: when a hall's cooling loop has lost the
+    supply setpoint by more than ``CoolingConfig.t_supply_margin_c``
+    (``thermal.overheat_hall``, see repro.cooling.model.thermal_now),
+    admission into *that hall* is deferred for this step — starting more
+    work while its CDUs cannot hold setpoint only pushes the loop further
+    from it. On a multi-hall topology, placement is hall-aware
+    (``hall_placement_plan``): nodes are drained coolest-hall-first and a
+    job is admitted only if it fits inside the non-overheated halls; a
+    flat (1-hall) plant keeps the original all-or-nothing gate and
+    identity placement order bit-for-bit. Replay is exempt (the recorded
+    schedule is ground truth), and running jobs are untouched (heat
+    relief comes from completions)."""
     has_grid = grid is not None
+    is_replay = scen.policy == T.POLICY_REPLAY
+    hall_aware = thermal is not None and system.cooling.n_halls > 1
+    if hall_aware:
+        order_nodes, node_ok, free_ok0 = hall_placement_plan(
+            system, st, thermal, is_replay)
+    else:
+        order_nodes = node_ok = None
+        free_ok0 = st.free_count
     thermal_ok = jnp.bool_(True) if thermal is None else ~thermal.overheat
     if has_grid:
         cap_active = grid.cap_w * scen.cap_scale
@@ -213,10 +289,9 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
         end_sorted, cum_nodes = release_profile(table, st)
     n_nodes = system.n_nodes
     t = st.t
-    is_replay = scen.policy == T.POLICY_REPLAY
 
     def body(i, carry):
-        (node_job, jstate, start, end, free_count, proj,
+        (node_job, jstate, start, end, free_count, free_ok, proj,
          blocked_any, head_blocked, head_capped,
          shadow_t, shadow_extra) = carry
         j = order[i]
@@ -229,8 +304,14 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
         # --- does it fit right now? ---
         # Placement is deterministic first-free (lowest-index free nodes);
         # the dataset generators use the same rule, so replay reproduces the
-        # recorded occupancy without storing per-node assignments.
-        sel = rm.firstfree_mask(node_job, need)
+        # recorded occupancy without storing per-node assignments. On a
+        # multi-hall plant the scan order is the hall-preference
+        # permutation instead (coolest hall first, index-stable within a
+        # hall; identity under replay and when every hall is equally cool).
+        if hall_aware:
+            sel = rm.firstfree_mask_ordered(node_job, need, order_nodes)
+        else:
+            sel = rm.firstfree_mask(node_job, need)
         fits = need <= free_count
 
         # --- EASY reservation for the first blocked (head) job ---
@@ -264,33 +345,46 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
             cap_ok = proj + est_add_pw[j] <= cap_active
         else:
             cap_ok = jnp.bool_(True)
+        # thermal admission: flat plant -> all-or-nothing gate; multi-hall
+        # -> the job must fit inside the halls still holding setpoint
+        # (preference ordering guarantees the selection stays there).
+        # Like the cap, thermal is a non-node resource: a head blocked by
+        # it feeds blocked_any/head_capped below so BF_NONE keeps FIFO
+        # order and EASY halts instead of reserving a node-shadow.
+        th_ok = (need <= free_ok) if hall_aware else thermal_ok
         # replay ignores backfill, the cap and the thermal gate: recorded
         # schedule is truth
         place = valid & fits & jnp.where(is_replay, True,
-                                         can_bf & cap_ok & thermal_ok)
+                                         can_bf & cap_ok & th_ok)
 
         # --- commit ---
         node_job = rm.place(node_job, sel, j, place)
         free_count = free_count - jnp.where(place, need, 0)
+        if hall_aware:
+            free_ok = free_ok - jnp.where(
+                place, jnp.sum((sel & node_ok).astype(jnp.int32)), 0)
+        # (on a flat plant free_ok is inert carry: the all-or-nothing gate
+        # never reads it)
         if has_grid:
             proj = proj + jnp.where(place, est_add_pw[j], 0.0)
         jstate = jstate.at[j].set(jnp.where(place, T.RUNNING, jstate[j]))
         start = start.at[j].set(jnp.where(place, t, start[j]))
         end = end.at[j].set(jnp.where(place, t + table.wall[j], end[j]))
 
-        blocked_any |= valid & (~fits | ~cap_ok)
+        blocked_any |= valid & (~fits | ~cap_ok | ~th_ok)
         head_blocked |= valid & ~fits
-        head_capped |= valid & fits & ~cap_ok
-        return (node_job, jstate, start, end, free_count, proj,
+        head_capped |= valid & fits & (~cap_ok | ~th_ok)
+        return (node_job, jstate, start, end, free_count, free_ok, proj,
                 blocked_any, head_blocked, head_capped,
                 shadow_t, shadow_extra)
 
     carry = (st.node_job, st.jstate, st.start, st.end, st.free_count,
+             jnp.int32(free_ok0),
              jnp.float32(proj_pw), jnp.bool_(False), jnp.bool_(False),
              jnp.bool_(False), jnp.float32(jnp.inf), jnp.int32(0))
     K = min(system.sched_budget, table.num_jobs)
-    (node_job, jstate, start, end, free_count, *_rest) = jax.lax.fori_loop(
-        0, K, body, carry)
+    (node_job, jstate, start, end, free_count,
+     *_rest) = jax.lax.fori_loop(0, K, body, carry)
 
     return dataclasses.replace(st, jstate=jstate, start=start, end=end,
                                node_job=node_job, free_count=free_count)

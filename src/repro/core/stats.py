@@ -64,7 +64,7 @@ def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
     p = np.asarray(hist.power_total, np.float64)
     it = np.asarray(hist.power_it, np.float64)
     sim_seconds = float(p.shape[-1] * system.dt)
-    return {
+    out = {
         "jobs_completed": float(done.sum()),
         "throughput_per_hour": float(done.sum()) / (sim_seconds / 3600.0),
         "avg_wait_s": float(wait[done].mean()) if done.any() else 0.0,
@@ -116,6 +116,17 @@ def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
         "thermal_throttled_steps": float(
             (np.asarray(hist.thermal_throttled, np.float64) > 0.5).sum()),
     }
+    # per-hall rows (FacilityTopology): IT-load share, basin peak, cells.
+    # A flat plant contributes one hall with share 1.0.
+    p_hall = np.asarray(hist.power_it_hall, np.float64)
+    tb_hall = np.asarray(hist.t_basin_hall, np.float64)
+    cells = np.asarray(hist.cells_online, np.float64)
+    total = max(p_hall.sum(), 1.0)
+    for h in range(p_hall.shape[-1]):
+        out[f"hall{h}_it_share"] = float(p_hall[..., h].sum() / total)
+        out[f"hall{h}_basin_max_c"] = float(tb_hall[..., h].max())
+        out[f"hall{h}_cells_online_min"] = float(cells[..., h].min())
+    return out
 
 
 def format_stats(stats: Dict[str, float]) -> str:

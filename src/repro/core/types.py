@@ -140,16 +140,21 @@ class AccountStats:
 @_register
 @dataclass
 class CoolingState:
-    """Transient thermo-fluid state of the cooling loop (repro.cooling.model).
+    """Transient thermo-fluid state of the cooling plant (repro.cooling
+    .model), hierarchical: halls -> CDU groups -> nodes.
 
-    G = number of CDU groups. All temperatures in °C, flow in kg/s, fan
-    staging in "active cells" (continuous in [0, n_tower_cells]).
+    G = number of CDU groups, H = number of halls
+    (``CoolingConfig.topology``); each hall owns a tower loop (basin +
+    fan cells) serving its contiguous span of CDU groups. All
+    temperatures in °C, flow in kg/s, fan staging in "active cells"
+    (continuous in [0, cells installed in that hall]). A flat plant is
+    H = 1.
     """
     t_supply: jnp.ndarray    # f32[G] CDU supply water temperature (°C)
     t_return: jnp.ndarray    # f32[G] CDU return water temperature (°C)
     mdot: jnp.ndarray        # f32[G] CDU water mass flow (kg/s, valve state)
-    t_basin: jnp.ndarray     # f32[]  cooling-tower basin temperature (°C)
-    fan_stages: jnp.ndarray  # f32[]  active tower cells (continuous staging)
+    t_basin: jnp.ndarray     # f32[H] per-hall tower basin temperature (°C)
+    fan_stages: jnp.ndarray  # f32[H] active tower cells per hall
 
 
 @_register
@@ -205,6 +210,14 @@ class StepRecord:
     t_supply_max: jnp.ndarray   # f32[] hottest CDU supply temperature (°C)
     t_wetbulb: jnp.ndarray      # f32[] ambient wet-bulb driving the tower (°C)
     thermal_throttled: jnp.ndarray  # f32[] 1 when supply-temp admission gate on
+    # per-hall telemetry (repro.systems.config.FacilityTopology; H = halls).
+    # The scalar rows above stay facility aggregates — max / flow-weighted
+    # mix over halls — so flat-plant (H = 1) series are unchanged.
+    power_it_hall: jnp.ndarray      # f32[H] IT power landing in each hall (W)
+    t_basin_hall: jnp.ndarray       # f32[H] per-hall basin temperature (°C)
+    t_supply_max_hall: jnp.ndarray  # f32[H] hottest CDU supply per hall (°C)
+    t_wetbulb_hall: jnp.ndarray     # f32[H] per-hall ambient wet-bulb (°C)
+    cells_online: jnp.ndarray       # f32[H] tower cells available per hall
 
 
 # ---------------------------------------------------------------------------
@@ -213,36 +226,59 @@ class StepRecord:
 @_register
 @dataclass
 class Scenario:
+    """Traced what-if knobs. Every knob after policy/backfill has a
+    *neutral default*, so call sites construct Scenarios by keyword and
+    adding a knob can never silently shift the meaning of an existing
+    positional argument. ``Scenario.make`` converts to traced jnp leaves;
+    raw-float construction (as used by ``engine.simulate_static``) keeps
+    the values compile-time static."""
     policy: jnp.ndarray       # i32[] POLICY_*
     backfill: jnp.ndarray     # i32[] BF_*
     # weight applied to the account-derived key when mixing with base priority
-    acct_weight: jnp.ndarray  # f32[]
+    acct_weight: jnp.ndarray = 1.0   # f32[]
     # grid-aware knobs (repro.grid): deferral weights for the carbon/price
     # policies, and a multiplier on the facility power-cap schedule so a
     # single vmapped sweep can scan cap levels against one shared signal set.
-    carbon_weight: jnp.ndarray  # f32[] POLICY_CARBON deferral strength
-    price_weight: jnp.ndarray   # f32[] POLICY_PRICE deferral strength
-    cap_scale: jnp.ndarray      # f32[] scales GridSignals.cap_w
+    carbon_weight: jnp.ndarray = 1.0  # f32[] POLICY_CARBON deferral strength
+    price_weight: jnp.ndarray = 1.0   # f32[] POLICY_PRICE deferral strength
+    cap_scale: jnp.ndarray = 1.0      # f32[] scales GridSignals.cap_w
     # cooling-aware knobs (repro.cooling): deferral weight for the
     # thermal_aware policy, and an offset on the CDU supply setpoint so a
     # single vmapped sweep can scan setpoints against one compiled program.
-    thermal_weight: jnp.ndarray    # f32[] POLICY_THERMAL deferral strength
-    setpoint_delta_c: jnp.ndarray  # f32[] offset on t_supply_setpoint_c (°C)
+    thermal_weight: jnp.ndarray = 1.0    # f32[] POLICY_THERMAL strength
+    setpoint_delta_c: jnp.ndarray = 0.0  # f32[] offset on setpoint (°C)
+    # maintenance what-if (repro.cooling + FacilityTopology): tower cells
+    # taken offline. A scalar applies to every hall; a length-H vector
+    # degrades halls individually (all scenarios in one sweep must agree
+    # on the shape so the leaves stack).
+    cells_offline: jnp.ndarray = 0.0     # f32[] or f32[H] cells offline
 
     @staticmethod
     def make(policy: str | int, backfill: str | int = "none",
              acct_weight: float = 1.0, carbon_weight: float = 1.0,
              price_weight: float = 1.0, cap_scale: float = 1.0,
              thermal_weight: float = 1.0,
-             setpoint_delta_c: float = 0.0) -> "Scenario":
+             setpoint_delta_c: float = 0.0,
+             cells_offline=0.0) -> "Scenario":
         p = POLICY_NAMES[policy] if isinstance(policy, str) else policy
         b = BACKFILL_NAMES[backfill] if isinstance(backfill, str) else backfill
-        return Scenario(jnp.int32(p), jnp.int32(b), jnp.float32(acct_weight),
-                        jnp.float32(carbon_weight), jnp.float32(price_weight),
-                        jnp.float32(cap_scale), jnp.float32(thermal_weight),
-                        jnp.float32(setpoint_delta_c))
+        return Scenario(
+            policy=jnp.int32(p), backfill=jnp.int32(b),
+            acct_weight=jnp.float32(acct_weight),
+            carbon_weight=jnp.float32(carbon_weight),
+            price_weight=jnp.float32(price_weight),
+            cap_scale=jnp.float32(cap_scale),
+            thermal_weight=jnp.float32(thermal_weight),
+            setpoint_delta_c=jnp.float32(setpoint_delta_c),
+            cells_offline=jnp.asarray(cells_offline, jnp.float32))
 
 
 def stack_scenarios(scens: list) -> "Scenario":
-    """Stack a list of Scenario leaves for vmapped sweeps."""
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scens)
+    """Stack a list of Scenario leaves for vmapped sweeps. Leaves are
+    broadcast to a common shape first, so scenarios that keep a vector
+    knob at its scalar default (e.g. ``cells_offline=0.0``) stack against
+    scenarios that set it per hall."""
+    def stack(*xs):
+        shape = jnp.broadcast_shapes(*(jnp.shape(x) for x in xs))
+        return jnp.stack([jnp.broadcast_to(x, shape) for x in xs])
+    return jax.tree_util.tree_map(stack, *scens)

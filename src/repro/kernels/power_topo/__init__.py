@@ -1,3 +1,5 @@
-from repro.kernels.power_topo.ops import fused_cooling, group_power  # noqa: F401
+from repro.kernels.power_topo.ops import (  # noqa: F401
+    fused_cooling, fused_cooling_hier, group_power, hall_power)
 from repro.kernels.power_topo.ref import (  # noqa: F401
-    CduParams, cdu_update_ref, fused_cooling_ref, group_power_ref)
+    CduParams, cdu_update_ref, fused_cooling_hier_ref, fused_cooling_ref,
+    group_power_ref, hall_matrix, hall_max_ref, hall_power_ref)

@@ -13,7 +13,9 @@ import jax.numpy as jnp
 from repro.kernels.power_topo.power_topo import (fused_cooling_pallas,
                                                  group_power_pallas)
 from repro.kernels.power_topo.ref import (CduParams, cdu_update_ref,
-                                          fused_cooling_ref, group_power_ref)
+                                          fused_cooling_hier_ref,
+                                          fused_cooling_ref, group_power_ref,
+                                          hall_power_ref)
 
 _LANE = 128
 
@@ -71,7 +73,10 @@ def fused_cooling(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
     Args:
       node_pw: f32[N] or f32[S, N] per-node power (W).
       t_supply, mdot: f32[G] / f32[S, G] CDU supply temps (°C), flows (kg/s).
-      t_basin, t_set: f32[] / f32[S] basin temp and effective setpoint (°C).
+      t_basin, t_set: basin temp and effective setpoint (°C) — f32[] /
+        f32[S] (flat plant: one basin shared by every group) or f32[G] /
+        f32[S, G] (hierarchical plant: each group sees its hall's basin,
+        see ``fused_cooling_hier``).
       n_groups: number of CDU groups G.
       params: static CduParams scalars.
     Returns:
@@ -85,7 +90,12 @@ def fused_cooling(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
     x = node_pw[None, :] if squeeze else node_pw
     up = lambda a: a[None, ...] if squeeze else a
     ts, md = up(t_supply), up(mdot)
-    tb, tset = up(t_basin)[:, None], up(t_set)[:, None]
+    # basin/setpoint go to the kernel as per-group columns: broadcast the
+    # flat-plant scalar-per-batch form across G
+    S0 = x.shape[0]
+    col = lambda a: jnp.broadcast_to(
+        up(a)[:, None] if up(a).ndim == 1 else up(a), (S0, n_groups))
+    tb, tset = col(t_basin), col(t_set)
     S = x.shape[0]
     x = _group_layout(x, n_groups)
     # pad the batch axis to the sublane width; state pads replicate row 0 so
@@ -99,3 +109,45 @@ def fused_cooling(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
                                 interpret=interpret)
     outs = tuple(o[:S] for o in outs)
     return tuple(o[0] for o in outs) if squeeze else outs
+
+
+def hall_power(group_q: jnp.ndarray, hall_of_group,
+               n_halls: int) -> jnp.ndarray:
+    """f32[..., G] -> f32[..., H]: the hall level of the node -> CDU ->
+    hall segment-reduction hierarchy. G and H are both tiny (tens), so
+    this level always runs as the XLA one-hot matmul — only the node ->
+    CDU level is worth a kernel."""
+    return hall_power_ref(group_q, hall_of_group, n_halls)
+
+
+def fused_cooling_hier(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
+                       mdot: jnp.ndarray, t_basin_hall: jnp.ndarray,
+                       t_set, hall_of_group, n_groups: int,
+                       params: CduParams, use_pallas: bool = False,
+                       interpret: bool = True):
+    """Hierarchical fused cooling update: node -> CDU -> hall reduction +
+    per-CDU loop update against each group's hall basin.
+
+    Args:
+      node_pw: f32[N] or f32[S, N] per-node power (W).
+      t_supply, mdot: f32[G] / f32[S, G] CDU loop state.
+      t_basin_hall: f32[H] / f32[S, H] per-hall basin temperatures (°C).
+      t_set: f32[] / f32[S] effective supply setpoint (°C).
+      hall_of_group: static i32[G]-like hall index per CDU group.
+    Returns:
+      (q, t_return, t_supply_new, mdot_new, q_hall): per-group pieces plus
+      per-hall heat sums f32[H] / f32[S, H]. Matches
+      ``ref.fused_cooling_hier_ref`` to <= 1e-4 on the Pallas path.
+    """
+    if not use_pallas:
+        return fused_cooling_hier_ref(node_pw, t_supply, mdot, t_basin_hall,
+                                      t_set, hall_of_group, n_groups, params)
+    hog = jnp.asarray(hall_of_group, jnp.int32)
+    t_basin_g = t_basin_hall[..., hog]          # gather: group -> its hall
+    tset_g = jnp.broadcast_to(jnp.asarray(t_set, node_pw.dtype)[..., None],
+                              t_basin_g.shape)
+    q, t_ret, t_sup, md = fused_cooling(node_pw, t_supply, mdot, t_basin_g,
+                                        tset_g, n_groups, params,
+                                        use_pallas=True, interpret=interpret)
+    return q, t_ret, t_sup, md, hall_power_ref(q, hog,
+                                               t_basin_hall.shape[-1])

@@ -17,6 +17,13 @@ supply-loop relaxation, see ``ref.cdu_update_ref``): the per-group heat
 never round-trips to HBM between the reduce and the loop update — one
 grid program produces the group heat AND the new CDU temperatures/flows
 for its (S_block x group) tile while it is resident in VMEM.
+
+Hierarchical (multi-hall) plants reuse the same kernel: the basin and
+setpoint operands are *per-group* columns (the wrapper gathers each
+group's hall basin, ``t_basin_hall[..., hall_of_group]``), so each grid
+program reads the (S_block, 1) slice for its own group — a flat plant is
+just the special case where every column is identical. The CDU -> hall
+heat reduction (G -> H, both tiny) stays outside the kernel in XLA.
 """
 from __future__ import annotations
 
@@ -60,8 +67,10 @@ def _fused_kernel(p: CduParams, x_ref, ts_ref, md_ref, tb_ref, tset_ref,
                   q_ref, tr_ref, tso_ref, mdo_ref):
     """One (S_block x group) tile: segment-reduce + CDU loop update.
 
-    Refs: x (S_block, span); all others (S_block, 1). The math must mirror
-    ``ref.cdu_update_ref`` exactly (the parity test holds it to 1e-4).
+    Refs: x (S_block, span); all others (S_block, 1) — including the
+    basin/setpoint columns, which carry this group's *hall* values on the
+    hierarchical path. The math must mirror ``ref.cdu_update_ref``
+    exactly (the parity test holds it to 1e-4).
     """
     q = jnp.sum(x_ref[...], axis=1, keepdims=True)
     ts = ts_ref[...]
@@ -90,7 +99,9 @@ def fused_cooling_pallas(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
       node_pw: f32[S, N] per-node power; N divisible by ``n_groups``
         (the wrapper in ops.py owns padding).
       t_supply, mdot: f32[S, G] current CDU loop state.
-      t_basin, t_set: f32[S, 1] basin temperature / effective setpoint.
+      t_basin, t_set: f32[S, G] basin temperature / effective setpoint
+        seen by each group (per-group columns; a flat plant broadcasts
+        its single basin across G — the wrapper owns that).
       params: static CduParams scalars (baked into the kernel).
     Returns:
       (q, t_return, t_supply_new, mdot_new), each f32[S, G].
@@ -99,16 +110,17 @@ def fused_cooling_pallas(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
     assert N % n_groups == 0, "pad N to a multiple of n_groups first"
     span = N // n_groups
     assert S % s_block == 0, "pad S to a multiple of s_block first"
+    assert t_basin.shape == (S, n_groups) and t_set.shape == (S, n_groups), \
+        "basin/setpoint must be per-group columns (wrapper broadcasts)"
 
     grid = (n_groups, S // s_block)
     col = pl.BlockSpec((s_block, 1), lambda g, s: (s, g))
-    shared = pl.BlockSpec((s_block, 1), lambda g, s: (s, 0))
     gshape = jax.ShapeDtypeStruct((S, n_groups), node_pw.dtype)
     return pl.pallas_call(
         functools.partial(_fused_kernel, params),
         grid=grid,
         in_specs=[pl.BlockSpec((s_block, span), lambda g, s: (s, g)),
-                  col, col, shared, shared],
+                  col, col, col, col],
         out_specs=(col, col, col, col),
         out_shape=(gshape, gshape, gshape, gshape),
         interpret=interpret,

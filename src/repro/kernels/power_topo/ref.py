@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import numpy as np
 import jax.numpy as jnp
 
 
@@ -37,10 +38,14 @@ class CduParams(NamedTuple):
     mdot_max_kg_s: float  # full-open flow (kg/s)
 
 
-def group_ids(n_nodes: int, n_groups: int) -> jnp.ndarray:
+def group_ids(n_nodes: int, n_groups: int) -> np.ndarray:
+    """i32[N] CDU group of each node, as *host* numpy: the assignment is
+    static, so keeping it concrete lets jnp consumers fold it as a
+    constant while host-side planners (the scheduler's hall spans) read
+    it without tripping over tracers."""
     span = -(-n_nodes // n_groups)  # ceil: groups are equal spans, last ragged
-    idx = jnp.arange(n_nodes, dtype=jnp.int32)
-    return jnp.minimum(idx // span, n_groups - 1)
+    idx = np.arange(n_nodes, dtype=np.int32)
+    return np.minimum(idx // span, n_groups - 1)
 
 
 def group_power_ref(node_pw: jnp.ndarray, n_groups: int) -> jnp.ndarray:
@@ -52,6 +57,38 @@ def group_power_ref(node_pw: jnp.ndarray, n_groups: int) -> jnp.ndarray:
     return node_pw @ one_hot
 
 
+def hall_matrix(hall_of_group, n_halls: int,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """One-hot group->hall matrix f32[G, H] for the second reduction level
+    of the node -> CDU -> hall hierarchy. ``x @ hall_matrix(...)`` is the
+    per-hall segment sum of a per-group quantity."""
+    hog = jnp.asarray(hall_of_group, jnp.int32)
+    return (hog[:, None] == jnp.arange(n_halls)[None, :]).astype(dtype)
+
+
+def hall_power_ref(group_q: jnp.ndarray, hall_of_group,
+                   n_halls: int) -> jnp.ndarray:
+    """f32[..., G] -> f32[..., H] segment sum of per-group heat per hall."""
+    return group_q @ hall_matrix(hall_of_group, n_halls, group_q.dtype)
+
+
+def hall_max_ref(group_x: jnp.ndarray, hall_of_group,
+                 n_halls: int) -> jnp.ndarray:
+    """f32[..., G] -> f32[..., H] per-hall max of a per-group quantity
+    (e.g. the hottest CDU return temperature in each hall)."""
+    mask = hall_matrix(hall_of_group, n_halls, jnp.bool_)
+    masked = jnp.where(mask, group_x[..., :, None], -jnp.inf)
+    return jnp.max(masked, axis=-2)
+
+
+def _per_group(x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Align a basin/setpoint operand with the per-group heat array ``q``:
+    already per-group (same rank as q) -> as is; one rank lower (the flat
+    plant's scalar-per-batch form) -> broadcast over the trailing G axis."""
+    x = jnp.asarray(x, q.dtype)
+    return x if x.ndim == q.ndim else x[..., None]
+
+
 def cdu_update_ref(q: jnp.ndarray, t_supply: jnp.ndarray, mdot: jnp.ndarray,
                    t_basin: jnp.ndarray, t_set: jnp.ndarray,
                    p: CduParams):
@@ -61,8 +98,11 @@ def cdu_update_ref(q: jnp.ndarray, t_supply: jnp.ndarray, mdot: jnp.ndarray,
       q: f32[..., G] heat load per CDU group (W).
       t_supply: f32[..., G] current supply water temperature (°C).
       mdot: f32[..., G] current water mass flow (kg/s).
-      t_basin: f32[...] tower basin temperature (°C), broadcast over G.
-      t_set: f32[...] effective supply setpoint (°C), broadcast over G.
+      t_basin: basin temperature feeding each CDU (°C): f32[...] (one
+        basin for the whole plant, broadcast over G) or f32[..., G]
+        (hierarchical plant — each group sees its *hall's* basin, gathered
+        by the caller, e.g. ``t_basin_hall[..., hall_of_group]``).
+      t_set: effective supply setpoint (°C), f32[...] or f32[..., G].
       p: static scalars (CduParams).
     Returns:
       (q, t_return, t_supply_new, mdot_new), each f32[..., G]:
@@ -82,7 +122,8 @@ def cdu_update_ref(q: jnp.ndarray, t_supply: jnp.ndarray, mdot: jnp.ndarray,
     t_return = t_supply + q / (mdot_new * p.cp_j_kg_k)
     # supply relaxes toward what the facility HX can deliver: never below
     # basin temperature + HX penalty, never below the setpoint
-    tgt = jnp.maximum(t_set[..., None], t_basin[..., None] + q / p.ua_w_k)
+    tgt = jnp.maximum(_per_group(t_set, q), _per_group(t_basin, q)
+                      + q / p.ua_w_k)
     t_supply_new = t_supply + (tgt - t_supply) * a_hx
     return q, t_return, t_supply_new, mdot_new
 
@@ -97,3 +138,32 @@ def fused_cooling_ref(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
     """
     q = group_power_ref(node_pw, n_groups)
     return cdu_update_ref(q, t_supply, mdot, t_basin, t_set, p)
+
+
+def fused_cooling_hier_ref(node_pw: jnp.ndarray, t_supply: jnp.ndarray,
+                           mdot: jnp.ndarray, t_basin_hall: jnp.ndarray,
+                           t_set: jnp.ndarray, hall_of_group,
+                           n_groups: int, p: CduParams):
+    """Hierarchical fused update: node -> CDU -> hall segment reduction +
+    per-CDU loop update against each group's *hall* basin, one logical pass.
+
+    Args:
+      node_pw: f32[..., N] per-node power (W).
+      t_supply, mdot: f32[..., G] CDU loop state.
+      t_basin_hall: f32[..., H] per-hall basin temperatures (°C).
+      t_set: f32[...] effective supply setpoint (°C, shared across halls).
+      hall_of_group: static i32[G]-like hall index of each CDU group.
+      n_groups: number of CDU groups G.
+      p: static CduParams scalars.
+    Returns:
+      (q, t_return, t_supply_new, mdot_new, q_hall): the per-group pieces
+      f32[..., G] plus the per-hall heat sums f32[..., H]. Oracle for the
+      hierarchical Pallas path (``ops.fused_cooling`` with per-group
+      basin operands).
+    """
+    hog = jnp.asarray(hall_of_group, jnp.int32)
+    n_halls = t_basin_hall.shape[-1]
+    t_basin_g = t_basin_hall[..., hog]           # gather: group -> its hall
+    q, t_ret, t_sup, md = fused_cooling_ref(node_pw, t_supply, mdot,
+                                            t_basin_g, t_set, n_groups, p)
+    return q, t_ret, t_sup, md, hall_power_ref(q, hog, n_halls)

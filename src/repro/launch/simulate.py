@@ -19,6 +19,8 @@ import time
 
 import numpy as np
 
+import dataclasses
+
 from repro.core import accounts as acct_mod
 from repro.core import engine as eng
 from repro.core import external as ext
@@ -26,7 +28,7 @@ from repro.core import stats as stats_mod
 from repro.core import types as T
 from repro.datasets import loaders
 from repro.ml.pipeline import MLSchedulerModel, attach_scores
-from repro.systems.config import get_system
+from repro.systems.config import FacilityTopology, get_system
 
 
 def _parse_time(s: str) -> float:
@@ -54,6 +56,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=0,
                     help="scale the system to N nodes (CPU-friendly)")
+    ap.add_argument("--halls", type=int, default=0,
+                    help="split the cooling plant into N halls "
+                         "(FacilityTopology; per-hall towers/basins)")
+    ap.add_argument("--cells-offline", default=None,
+                    help="tower cells out for maintenance: a number "
+                         "(every hall) or comma list (per hall), e.g. "
+                         "'2,0,0,0'")
     ap.add_argument("--accounts", action="store_true")
     ap.add_argument("--accounts-json", default=None)
     ap.add_argument("--sweep", nargs="*", default=None,
@@ -65,6 +74,31 @@ def main(argv=None):
     sys_ = get_system(args.system)
     if args.scale:
         sys_ = sys_.scaled(args.scale)
+    if args.halls:
+        cool = sys_.cooling
+        # every hall needs >= 1 CDU group and >= 1 tower cell: re-rate the
+        # fleet capacity-preservingly (more, smaller cells/CDUs — total
+        # rated heat, flow, pump power and HX conductance unchanged) when
+        # a scaled config is too coarse for the requested hall count
+        cells = max(cool.n_tower_cells, args.halls)
+        groups = max(cool.n_groups, args.halls)
+        cell_k = cool.n_tower_cells / cells
+        group_k = cool.n_groups / groups
+        sys_ = dataclasses.replace(
+            sys_, cooling=dataclasses.replace(
+                cool,
+                n_groups=groups,
+                mdot_kg_s=cool.mdot_kg_s * group_k,
+                ua_w_k=cool.ua_w_k * group_k,
+                pump_w_per_group=cool.pump_w_per_group * group_k,
+                n_tower_cells=cells,
+                cell_rated_heat_w=cool.cell_rated_heat_w * cell_k,
+                fan_rated_w=cool.fan_rated_w * cell_k,
+                topology=FacilityTopology(n_halls=args.halls)))
+    cells_offline = 0.0
+    if args.cells_offline:
+        parts = [float(x) for x in args.cells_offline.split(",")]
+        cells_offline = parts[0] if len(parts) == 1 else tuple(parts)
     t0 = _parse_time(args.fastforward)
     t1 = t0 + _parse_time(args.time)
     days = args.days or max((t1 / 86400.0) * 1.25, 0.5)
@@ -85,9 +119,13 @@ def main(argv=None):
         sched = ext.FastSimLike(policy=args.policy if args.policy != "replay"
                                 else "fcfs") \
             if args.scheduler == "fastsim" else ext.ScheduleFlowLike()
-        final, hist = ext.run_sequential_mode(sys_, js, sched, t0, t1) \
+        ext_scen = T.Scenario.make("replay", cells_offline=cells_offline)
+        final, hist = \
+            ext.run_sequential_mode(sys_, js, sched, t0, t1,
+                                    scen=ext_scen) \
             if args.scheduler == "fastsim" else \
-            ext.run_plugin_mode(sys_, js, sched, t0, t1)[:2]
+            ext.run_plugin_mode(sys_, js, sched, t0, t1,
+                                scen=ext_scen)[:2]
         if isinstance(hist, dict):
             class H:  # plugin mode returns a dict of arrays
                 pass
@@ -101,14 +139,23 @@ def main(argv=None):
         for s in args.sweep:
             p, _, b = s.partition(":")
             specs.append((p, b or "none"))
-        scens = [T.Scenario.make(p, b) for p, b in specs]
-        finals, hists = eng.simulate_sweep(sys_, table, scens, t0, t1,
-                                           accounts)
+        scens = [T.Scenario.make(p, b, cells_offline=cells_offline)
+                 for p, b in specs]
+        # shards the scenario axis over the visible devices (shard_map);
+        # exactly simulate_sweep when only one device is present
+        finals, hists = eng.simulate_sweep_sharded(sys_, table, scens,
+                                                   t0, t1, accounts)
         import jax
         runs = [((p, b),
                  jax.tree_util.tree_map(lambda x, i=i: x[i], finals),
                  jax.tree_util.tree_map(lambda x, i=i: x[i], hists))
                 for i, (p, b) in enumerate(specs)]
+    elif args.cells_offline:
+        # maintenance knob is traced: run the traced-scenario engine
+        scen = T.Scenario.make(args.policy, args.backfill,
+                               cells_offline=cells_offline)
+        final, hist = eng.simulate(sys_, table, scen, t0, t1, accounts)
+        runs = [((args.policy, args.backfill), final, hist)]
     else:
         # single-policy runs take the static fast path (policy/backfill are
         # compile-time constants; EXPERIMENTS.md §Perf-twin)

@@ -28,6 +28,63 @@ class PowerConfig:
 
 
 @dataclass(frozen=True)
+class FacilityTopology:
+    """Hierarchical facility layout: halls -> CDU groups -> nodes.
+
+    A *hall* is one machine room served by its own tower loop (basin +
+    fan cells). CDU groups are assigned to halls by contiguous spans, and
+    nodes map to CDU groups by contiguous spans (``kernels.power_topo.ref
+    .group_ids``) — so the node->hall assignment is fully determined by
+    this static description. The default (one hall, even splits) is the
+    pre-hierarchy flat plant and reproduces its behavior exactly.
+
+    ``groups_per_hall`` / ``cells_per_hall`` may be ``None`` (even split
+    of ``CoolingConfig.n_groups`` / ``n_tower_cells``, first halls take
+    the remainder) or explicit per-hall tuples summing to the config
+    totals — ragged halls are allowed.
+    """
+    n_halls: int = 1
+    groups_per_hall: Tuple[int, ...] | None = None
+    cells_per_hall: Tuple[int, ...] | None = None
+
+    def _split(self, total: int, explicit: Tuple[int, ...] | None,
+               what: str) -> Tuple[int, ...]:
+        if self.n_halls < 1:
+            raise ValueError(f"n_halls must be >= 1, got {self.n_halls}")
+        if explicit is not None:
+            if len(explicit) != self.n_halls:
+                raise ValueError(f"{what}: {len(explicit)} entries for "
+                                 f"{self.n_halls} halls")
+            if sum(explicit) != total:
+                raise ValueError(f"{what}: sum {sum(explicit)} != {total}")
+            if min(explicit) < 1:
+                raise ValueError(f"{what}: every hall needs >= 1, "
+                                 f"got {explicit}")
+            return tuple(int(g) for g in explicit)
+        base, rem = divmod(total, self.n_halls)
+        if base < 1:
+            raise ValueError(f"{what}: {total} cannot cover "
+                             f"{self.n_halls} halls")
+        return tuple(base + (1 if h < rem else 0)
+                     for h in range(self.n_halls))
+
+    def resolve_groups(self, n_groups: int) -> Tuple[int, ...]:
+        """Per-hall CDU group counts (sums to ``n_groups``)."""
+        return self._split(n_groups, self.groups_per_hall, "groups_per_hall")
+
+    def resolve_cells(self, n_cells: int) -> Tuple[int, ...]:
+        """Per-hall installed tower-cell counts (sums to ``n_cells``)."""
+        return self._split(n_cells, self.cells_per_hall, "cells_per_hall")
+
+    def hall_of_group(self, n_groups: int) -> Tuple[int, ...]:
+        """Hall index of each CDU group (len ``n_groups``)."""
+        out = []
+        for h, g in enumerate(self.resolve_groups(n_groups)):
+            out.extend([h] * g)
+        return tuple(out)
+
+
+@dataclass(frozen=True)
 class CoolingConfig:
     """Transient CDU + cooling-tower loop parameters (repro.cooling.model).
 
@@ -74,6 +131,27 @@ class CoolingConfig:
     # brake, sized to trip only after the thermal_aware deferral band —
     # ambient alone can push supply a few °C over setpoint in a heat wave
     t_supply_margin_c: float = 10.0
+    # --- facility hierarchy (halls -> CDU groups -> nodes) ------------------
+    topology: FacilityTopology = field(default_factory=FacilityTopology)
+
+    @property
+    def n_halls(self) -> int:
+        return self.topology.n_halls
+
+    def groups_per_hall(self) -> Tuple[int, ...]:
+        return self.topology.resolve_groups(self.n_groups)
+
+    def cells_per_hall(self) -> Tuple[int, ...]:
+        return self.topology.resolve_cells(self.n_tower_cells)
+
+    def hall_of_group(self) -> Tuple[int, ...]:
+        return self.topology.hall_of_group(self.n_groups)
+
+    def hall_weights(self) -> Tuple[float, ...]:
+        """Fraction of the CDU fleet (and thus of the nominal heat load)
+        served by each hall; splits hall-agnostic capacity knobs such as
+        ``reuse_max_w``."""
+        return tuple(g / self.n_groups for g in self.groups_per_hall())
 
     def cell_ua(self) -> float:
         """Tower-cell conductance (W/K) at full fan speed; rated heat over a
@@ -82,10 +160,19 @@ class CoolingConfig:
             else self.cell_rated_heat_w / 6.0
 
     def basin_mcp(self) -> float:
-        """Basin thermal mass × cp (J/K): sized so the open-loop tower time
-        constant is ``tower_tau_s`` at full-fan conductance."""
+        """Facility-total basin thermal mass × cp (J/K): sized so the
+        open-loop tower time constant is ``tower_tau_s`` at full-fan
+        conductance."""
         return self.basin_mcp_j_k if self.basin_mcp_j_k is not None \
             else self.tower_tau_s * self.n_tower_cells * self.cell_ua()
+
+    def basin_mcp_per_hall(self) -> Tuple[float, ...]:
+        """Per-hall basin thermal mass × cp (J/K): each hall's basin scales
+        with its installed cell count, so the per-hall open-loop time
+        constant stays ``tower_tau_s``. Sums to ``basin_mcp()``."""
+        total = self.basin_mcp()
+        return tuple(total * c / self.n_tower_cells
+                     for c in self.cells_per_hall())
 
 
 @dataclass(frozen=True)
@@ -133,14 +220,20 @@ class SystemConfig:
         # heat-export cap follow so parasitic *fractions* stay realistic
         cells = max(int(round(self.cooling.n_tower_cells * ratio)), 1)
         cap = self.cooling.n_tower_cells * self.cooling.cell_rated_heat_w * ratio
+        groups = max(int(round(self.cooling.n_groups * ratio)), 2)
+        # explicit per-hall splits no longer sum to the scaled totals:
+        # keep the hall count, fall back to even splits (clamped so every
+        # hall keeps at least one group and one cell)
+        halls = min(self.cooling.n_halls, groups, cells)
         cool = replace(
             self.cooling,
-            n_groups=max(int(round(self.cooling.n_groups * ratio)), 2),
+            n_groups=groups,
             n_tower_cells=cells,
             cell_rated_heat_w=cap / cells,
             fan_rated_w=self.cooling.fan_rated_w *
             (cap / cells) / self.cooling.cell_rated_heat_w,
             reuse_max_w=self.cooling.reuse_max_w * ratio,
+            topology=FacilityTopology(n_halls=halls),
         )
         return replace(self, name=f"{self.name}-scaled{n_nodes}",
                        n_nodes=n_nodes, cooling=cool)

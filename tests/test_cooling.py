@@ -42,14 +42,14 @@ def test_basin_energy_balance_discrete_identity(system):
     dt = 30.0
     rng = np.random.default_rng(0)
     state = cooling.init_state(cfg)
-    t0 = float(state.t_basin)
+    t0 = float(state.t_basin[0])
     acc = 0.0
     for k in range(400):
         q = jnp.asarray(rng.uniform(1e4, 2e5, cfg.n_groups), jnp.float32)
         state, out = cooling.step(cfg, state, q, dt)
         q_tower = float(jnp.sum(q)) - float(out.q_reuse_w)
         acc += (q_tower - float(out.q_reject_w)) * dt
-    stored = cfg.basin_mcp() * (float(state.t_basin) - t0)
+    stored = cfg.basin_mcp() * (float(state.t_basin[0]) - t0)
     assert np.isclose(acc, stored, rtol=1e-3, atol=1e3)
 
 

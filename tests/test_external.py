@@ -1,5 +1,9 @@
-"""External-scheduler integration tests (paper §4.2): plugin + sequential."""
+"""External-scheduler integration tests (paper §4.2): plugin + sequential,
+plus the hardened bridge's wire-format / timeout / reconnect conformance."""
+import time
+
 import numpy as np
+import pytest
 
 from repro.core import external as ext
 from repro.core import types as T
@@ -59,3 +63,88 @@ def test_scheduleflow_like_recomputes_every_poll():
     # the paper's observed overhead: a full recompute per trigger
     assert sched.recompute_count == n_steps
     assert float(final.completed) >= 0
+
+
+# ---------------------------------------------------------------------------
+# Bridge hardening: versioned wire format, timeout/reconnect, conformance.
+# ---------------------------------------------------------------------------
+def test_wire_roundtrip_and_decode_validation():
+    msg = ext.encode_running([3, 1, 2])
+    assert msg["version"] == ext.WIRE_VERSION
+    ids = ext.decode_running(msg, n_jobs=10)
+    assert ids.tolist() == [3, 1, 2]
+    assert ext.decode_running(ext.encode_running([]), 10).size == 0
+
+
+def test_malformed_peer_conformance():
+    """A confused or wrong-version peer must raise ProtocolError before
+    anything touches engine state — and must NOT be retried."""
+    js = make_jobs(seed=9, n=10)
+
+    class MalformedPeer:
+        def __init__(self, answer):
+            self.answer = answer
+            self.polls = 0
+
+        def reset(self, system, jobs, t0):
+            pass
+
+        def poll_wire(self, t):
+            self.polls += 1
+            return self.answer
+
+    bad_answers = [
+        {"version": 99, "kind": "running_set", "job_ids": [0]},  # version
+        {"version": ext.WIRE_VERSION, "kind": "plan", "job_ids": [0]},
+        {"version": ext.WIRE_VERSION, "kind": "running_set",
+         "job_ids": [0.5]},                                     # floats
+        {"version": ext.WIRE_VERSION, "kind": "running_set",
+         "job_ids": [0, 0]},                                    # duplicates
+        {"version": ext.WIRE_VERSION, "kind": "running_set",
+         "job_ids": [len(js) + 5]},                             # range
+        [0, 1, 2],                                              # no envelope
+    ]
+    for answer in bad_answers:
+        peer = MalformedPeer(answer)
+        with pytest.raises(ext.ProtocolError):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 2 * SYS.dt)
+        assert peer.polls == 1          # malformed speech is not retried
+
+
+def test_slow_peer_triggers_reconnect_then_recovers():
+    """A peer that blows the per-call budget once is reconnected (reset
+    replay) and the poll retried; the run then completes normally."""
+    js = make_jobs(seed=11, n=10)
+
+    class SlowOncePeer(ext.FastSimLike):
+        slow_polls: int = 0
+
+        def poll_wire(self, t):
+            if self.slow_polls == 0:
+                self.slow_polls += 1
+                time.sleep(0.05)        # exceeds the 10 ms budget below
+            return super().poll_wire(t)
+
+    peer = SlowOncePeer(policy="fcfs", backfill="firstfit")
+    bridge = ext.SchedulerBridge(peer, ext.BridgeConfig(timeout_s=0.01,
+                                                        max_retries=2))
+    final, hist, wall = ext.run_plugin_mode(SYS, js, bridge, 0.0, 1800.0)
+    assert bridge.reconnects == 1
+    assert float(final.completed) >= 0
+    p = np.asarray(hist["power_it"])
+    assert (p > 0).all()
+
+
+def test_dead_peer_raises_bridge_timeout():
+    js = make_jobs(seed=13, n=10)
+
+    class DeadPeer:
+        def reset(self, system, jobs, t0):
+            pass
+
+        def running_at(self, t):
+            raise ConnectionError("peer went away")
+
+    with pytest.raises(ext.BridgeTimeout):
+        ext.run_plugin_mode(SYS, js, DeadPeer(), 0.0, 2 * SYS.dt)
+

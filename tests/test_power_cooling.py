@@ -76,7 +76,7 @@ def test_cooling_steady_state_tracks_load():
     assert float(out_hi.t_tower_return) > float(out_lo.t_tower_return)
     # more fan power under load
     assert float(out_hi.p_cooling) > float(out_lo.p_cooling)
-    assert float(state_hi.t_basin) > float(state.t_basin)
+    assert float(state_hi.t_basin[0]) > float(state.t_basin[0])
     # return temperature always above wet bulb
     assert float(out_lo.t_tower_return) > cfg.t_wetbulb_c
 

@@ -1,0 +1,344 @@
+"""Facility-topology tests: 1-hall equivalence with the pre-refactor flat
+plant, hall-level energy conservation, maintenance (cells_offline)
+monotonicity, hierarchical fused-kernel parity at Frontier scale, and the
+hall-aware scheduler shifting load away from a degraded hall."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cooling import model as cooling
+from repro.cooling import weather as wx
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.kernels.power_topo import ops as topo_ops
+from repro.kernels.power_topo import ref as topo_ref
+from repro.systems.config import FacilityTopology, get_system
+
+
+@pytest.fixture(scope="module")
+def system():
+    return get_system("marconi100").scaled(64)
+
+
+def with_topology(cfg, n_halls, n_groups=None, n_cells=None, **over):
+    return dataclasses.replace(
+        cfg, n_groups=n_groups or cfg.n_groups,
+        n_tower_cells=n_cells or cfg.n_tower_cells,
+        topology=FacilityTopology(n_halls=n_halls), **over)
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor equivalence: the flat (1-hall) plant must reproduce the
+# original scalar-basin model trajectory.
+# ---------------------------------------------------------------------------
+def flat_reference_step(cfg, state, q, dt, t_wb=None, t_set=None):
+    """The pre-hierarchy scalar tower/basin update, transcribed from the
+    flat model (one basin, one fan-staging scalar, global reuse split) as
+    the equivalence oracle. Returns (t_basin, fan, q_reject, fan_w)."""
+    t_wb = cfg.t_wetbulb_c if t_wb is None else t_wb
+    t_set = cfg.t_supply_setpoint_c if t_set is None else t_set
+    q_tot = float(np.sum(q))
+    mdot = np.asarray(state["mdot"])
+    t_return = np.asarray(state["t_return"])
+    t_ret_mix = float((mdot * t_return).sum() / max(mdot.sum(), 1e-6))
+    q_reuse = min(cfg.reuse_frac * q_tot, cfg.reuse_max_w) \
+        if t_ret_mix >= cfg.reuse_t_min_c else 0.0
+    q_tower = q_tot - q_reuse
+    cell_ua = cfg.cell_ua()
+    mcp_b = cfg.basin_mcp()
+    passive_ua = cfg.passive_ua_frac * cfg.n_tower_cells * cell_ua
+    q_passive = passive_ua * (state["t_basin"] - t_wb)
+    t_b_tgt = max(t_wb + cfg.tower_approach_c, t_set - cfg.basin_margin_c)
+    drive = max(state["t_basin"] - t_wb, 0.5)
+    q_need = q_tower - q_passive + \
+        mcp_b * (state["t_basin"] - t_b_tgt) / cfg.tower_tau_s
+    s_tgt = np.clip(q_need / (cell_ua * drive), 0.0,
+                    float(cfg.n_tower_cells))
+    fan = state["fan"] + (s_tgt - state["fan"]) * \
+        min(dt / cfg.tau_fan_s, 1.0)
+    q_rej = max(fan * cell_ua * (state["t_basin"] - t_wb), 0.0) + q_passive
+    t_basin = state["t_basin"] + (q_tower - q_rej) * dt / mcp_b
+    k = np.floor(fan)
+    fan_w = cfg.fan_rated_w * (k + (fan - k) ** 3)
+    return t_basin, fan, q_rej, fan_w
+
+
+def test_one_hall_matches_pre_refactor_flat_model(system):
+    """The hierarchical plant with H = 1 must track the original scalar
+    model to <= 1e-5 (relative) over a random load transient — the
+    refactor is behavior-preserving where the old model applied."""
+    cfg = system.cooling
+    assert cfg.n_halls == 1
+    dt = 30.0
+    rng = np.random.default_rng(11)
+    state = cooling.init_state(cfg)
+    ref = {"t_basin": float(state.t_basin[0]), "fan": 0.0,
+           "mdot": np.asarray(state.mdot),
+           "t_return": np.asarray(state.t_return)}
+    p = cooling.cdu_params(cfg, dt)
+    for k in range(400):
+        q = rng.uniform(1e4, 2.5e5, cfg.n_groups).astype(np.float32)
+        # oracle: flat CDU update (scalar basin broadcast) + scalar tower
+        qj, t_ret_r, t_sup_r, md_r = topo_ref.cdu_update_ref(
+            jnp.asarray(q), jnp.asarray(ref.get("t_supply",
+                                                np.asarray(state.t_supply))),
+            jnp.asarray(ref["mdot"]), jnp.float32(ref["t_basin"]),
+            jnp.float32(cfg.t_supply_setpoint_c), p)
+        ref["mdot"], ref["t_return"] = np.asarray(md_r), np.asarray(t_ret_r)
+        ref["t_supply"] = np.asarray(t_sup_r)
+        tb, fan, q_rej, fan_w = flat_reference_step(cfg, ref,
+                                                    np.asarray(qj), dt)
+        ref["t_basin"], ref["fan"] = float(tb), float(fan)
+        # system under test: the hierarchical path
+        state, out = cooling.step(cfg, state, jnp.asarray(q), dt)
+        np.testing.assert_allclose(float(state.t_basin[0]), ref["t_basin"],
+                                   rtol=1e-5, err_msg=f"basin @step {k}")
+        np.testing.assert_allclose(float(state.fan_stages[0]), ref["fan"],
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"fan @step {k}")
+        np.testing.assert_allclose(np.asarray(state.t_supply),
+                                   ref["t_supply"], rtol=1e-5)
+        np.testing.assert_allclose(float(out.q_reject_w), q_rej,
+                                   rtol=1e-4, atol=1.0)
+        np.testing.assert_allclose(float(out.p_fan), fan_w,
+                                   rtol=1e-4, atol=1e-2)
+
+
+def test_symmetric_halls_mirror_each_other(system):
+    """Two identical halls fed identical loads must produce identical
+    per-hall trajectories (no hidden cross-hall coupling)."""
+    cfg = with_topology(system.cooling, 2, n_groups=4, n_cells=2)
+    state = cooling.init_state(cfg)
+    q = jnp.asarray([1.5e5, 0.7e5, 1.5e5, 0.7e5], jnp.float32)
+    for _ in range(300):
+        state, out = cooling.step(cfg, state, q, 30.0)
+    np.testing.assert_allclose(float(state.t_basin[0]),
+                               float(state.t_basin[1]), rtol=1e-6)
+    np.testing.assert_allclose(float(out.fan_w_hall[0]),
+                               float(out.fan_w_hall[1]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hall-level energy conservation.
+# ---------------------------------------------------------------------------
+def test_hall_energy_balance_per_hall_and_summed(system):
+    """Over any transient, each hall's basin stored-energy change equals
+    the integral of (its tower-bound heat - its rejection), and the
+    hall-summed telemetry conserves facility energy."""
+    cfg = with_topology(system.cooling, 3, n_groups=6, n_cells=3)
+    dt = 30.0
+    rng = np.random.default_rng(5)
+    state = cooling.init_state(cfg)
+    mcp_h = np.asarray(cfg.basin_mcp_per_hall())
+    t0 = np.asarray(state.t_basin)
+    acc = np.zeros(3)
+    for _ in range(300):
+        q = jnp.asarray(rng.uniform(1e4, 2e5, cfg.n_groups), jnp.float32)
+        state, out = cooling.step(cfg, state, q, dt)
+        q_tower_h = np.asarray(out.q_hall_w) - 0.0  # reuse off by default
+        acc += (q_tower_h - np.asarray(out.q_reject_hall_w)) * dt
+    stored = mcp_h * (np.asarray(state.t_basin) - t0)
+    np.testing.assert_allclose(acc, stored, rtol=1e-3, atol=1e3)
+    np.testing.assert_allclose(acc.sum(), stored.sum(), rtol=1e-3, atol=1e3)
+
+
+# ---------------------------------------------------------------------------
+# Maintenance what-if: cells offline.
+# ---------------------------------------------------------------------------
+def test_cells_offline_monotonically_heats_that_hall(system):
+    """Taking tower cells offline in one hall monotonically raises that
+    hall's steady basin temperature and leaves the other halls' untouched
+    (their loops are independent given the same group heat)."""
+    cfg = with_topology(system.cooling, 3, n_groups=6, n_cells=6)
+    q = jnp.full((cfg.n_groups,), 1.5e5, jnp.float32)
+    finals = []
+    for off in (0.0, 1.0, 2.0):
+        state = cooling.init_state(cfg)
+        for _ in range(600):
+            state, out = cooling.step(
+                cfg, state, q, 30.0,
+                cells_offline=jnp.asarray([off, 0.0, 0.0], jnp.float32))
+        finals.append(np.asarray(state.t_basin))
+        assert float(out.cells_online[0]) == cfg.cells_per_hall()[0] - off
+    t_hall0 = [f[0] for f in finals]
+    assert t_hall0[0] < t_hall0[1] < t_hall0[2]
+    for a, b in zip(finals[:-1], finals[1:]):
+        np.testing.assert_allclose(a[1:], b[1:], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical fused-kernel parity at Frontier scale (acceptance: <= 1e-4
+# at >= 4 halls and the full Frontier node count).
+# ---------------------------------------------------------------------------
+def test_hier_fused_kernel_parity_frontier_scale():
+    sysc = get_system("frontier")
+    N, G, H, S = sysc.n_nodes, sysc.cooling.n_groups, 5, 8
+    topo = FacilityTopology(n_halls=H)
+    hog = topo.hall_of_group(G)
+    rng = np.random.default_rng(17)
+    node_pw = jnp.asarray(rng.uniform(700.0, 3200.0, (S, N)), jnp.float32)
+    ts = jnp.asarray(rng.uniform(28.0, 40.0, (S, G)), jnp.float32)
+    md = jnp.asarray(rng.uniform(12.0, 60.0, (S, G)), jnp.float32)
+    tb = jnp.asarray(rng.uniform(18.0, 30.0, (S, H)), jnp.float32)
+    tset = jnp.asarray(rng.uniform(30.0, 34.0, (S,)), jnp.float32)
+    p = cooling.cdu_params(sysc.cooling, sysc.dt)
+    want = topo_ref.fused_cooling_hier_ref(node_pw, ts, md, tb, tset, hog,
+                                           G, p)
+    got = topo_ops.fused_cooling_hier(node_pw, ts, md, tb, tset, hog, G, p,
+                                      use_pallas=True, interpret=True)
+    for w, g, name in zip(want, got,
+                          ("q", "t_return", "t_supply", "mdot", "q_hall")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_hier_fused_unbatched_matches_ref():
+    cfg = with_topology(get_system("marconi100").scaled(64).cooling, 2,
+                        n_groups=4)
+    hog = cfg.hall_of_group()
+    p = cooling.cdu_params(cfg, 20.0)
+    node_pw = jnp.full((64,), 900.0, jnp.float32)
+    ts = jnp.full((4,), 25.0)
+    md = jnp.full((4,), 10.0)
+    tb = jnp.asarray([22.0, 24.0], jnp.float32)
+    want = topo_ref.fused_cooling_hier_ref(node_pw, ts, md, tb,
+                                           jnp.float32(25.0), hog, 4, p)
+    got = topo_ops.fused_cooling_hier(node_pw, ts, md, tb, jnp.float32(25.0),
+                                      hog, 4, p, use_pallas=True,
+                                      interpret=True)
+    assert got[4].shape == (2,)
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: telemetry consistency + the hall-aware scheduler.
+# ---------------------------------------------------------------------------
+T1 = 4 * 3600.0
+
+
+def make_table(system, seed, load=1.4, n_jobs=64):
+    js = generate(system, WorkloadSpec(
+        n_jobs=n_jobs, duration_s=T1, load=load, trace_len=8,
+        n_accounts=8, mean_wall_s=1800.0, seed=seed))
+    js.assign_prepop_placement(0.0, system.n_nodes)
+    return js.to_table(n_jobs + 16)
+
+
+def test_engine_hall_telemetry_consistent(system):
+    """Per-hall IT power sums to the facility IT power and the scalar
+    basin telemetry is the hottest hall."""
+    sys4 = dataclasses.replace(
+        system, cooling=with_topology(system.cooling, 4, n_groups=4,
+                                      n_cells=4))
+    table = make_table(sys4, 2)
+    scen = T.Scenario.make("fcfs", "first-fit")
+    _, h = eng.simulate(sys4, table, scen, 0.0, T1, num_accounts=8)
+    assert h.power_it_hall.shape[-1] == 4
+    np.testing.assert_allclose(np.asarray(h.power_it_hall).sum(-1),
+                               np.asarray(h.power_it), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h.t_basin_hall).max(-1),
+                               np.asarray(h.t_basin), rtol=1e-6)
+
+
+def test_neutral_cells_offline_is_identity(system):
+    """cells_offline=0 must not perturb a multi-hall trajectory (neutral
+    default of the new Scenario knob)."""
+    sys2 = dataclasses.replace(
+        system, cooling=with_topology(system.cooling, 2, n_groups=4,
+                                      n_cells=2))
+    table = make_table(sys2, 3)
+    scens = [T.Scenario.make("fcfs", "first-fit"),
+             T.Scenario.make("fcfs", "first-fit",
+                             cells_offline=(0.0, 0.0))]
+    _, h = eng.simulate_sweep(sys2, table, scens, 0.0, T1, num_accounts=8)
+    np.testing.assert_allclose(np.asarray(h.power_it)[0],
+                               np.asarray(h.power_it)[1], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(h.t_basin_hall)[0],
+                               np.asarray(h.t_basin_hall)[1], rtol=1e-6)
+
+
+def test_scheduler_shifts_load_away_from_degraded_hall(system):
+    """Acceptance: with one hall's tower cells knocked out, the hall-aware
+    placement (+ per-hall admission gate) moves work into the healthy
+    hall — the degraded hall's share of IT power drops vs the healthy
+    run, while the healthy hall's share rises."""
+    sys2 = dataclasses.replace(
+        system, cooling=with_topology(
+            system.cooling, 2, n_groups=4, n_cells=4,
+            # towers sized ~2x the nominal load (losing half of hall 0's
+            # cells must hurt) and a tight soft band so cooling pressure
+            # is visible to the scheduler well before the hard limit
+            cell_rated_heat_w=5e4, fan_rated_w=2e3,
+            t_return_limit_c=34.0, thermal_margin_c=4.0,
+            t_supply_margin_c=4.0))
+    table = make_table(sys2, 4, load=1.6)
+    n_steps = int(T1 / sys2.dt)
+    warm = wx.constant_weather(n_steps, sys2.cooling.t_wetbulb_c + 4.0)
+    scens = [T.Scenario.make("fcfs", "first-fit"),
+             T.Scenario.make("fcfs", "first-fit",
+                             cells_offline=(2.0, 0.0))]
+    _, h = eng.simulate_sweep(sys2, table, scens, 0.0, T1, num_accounts=8,
+                              weather=[warm, warm])
+    p_hall = np.asarray(h.power_it_hall, np.float64)   # [S, steps, H]
+    # compare the back half (after the degraded basin has heated up)
+    half = p_hall.shape[1] // 2
+    share = p_hall[:, half:, :].sum(1) / \
+        np.maximum(p_hall[:, half:, :].sum((1, 2))[:, None], 1.0)
+    assert share[1, 0] < share[0, 0] - 0.02, \
+        f"degraded hall kept its load share: {share}"
+    assert share[1, 1] > share[0, 1] + 0.02
+    # the degraded hall runs hotter despite shedding load
+    t_basin = np.asarray(h.t_basin_hall)
+    assert t_basin[1, :, 0].max() > t_basin[0, :, 0].max() + 0.5
+
+
+# ---------------------------------------------------------------------------
+# Sharded scenario sweeps (shard_map over a ("scenario",) mesh).
+# ---------------------------------------------------------------------------
+def test_sharded_sweep_matches_vmap_on_forced_devices():
+    """With the host platform forced to 4 devices, simulate_sweep_sharded
+    must reproduce the plain vmapped sweep row-for-row — including a
+    scenario count that does not divide the device count (padding)."""
+    import subprocess
+    import sys as _sys
+    prog = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4")
+import numpy as np
+import jax
+from repro.core import engine as eng, types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.systems.config import get_system
+assert len(jax.devices()) == 4
+system = get_system("marconi100").scaled(64)
+t1 = 60 * system.dt
+js = generate(system, WorkloadSpec(n_jobs=32, duration_s=t1, load=1.2,
+                                   trace_len=4, n_accounts=8, seed=3))
+js.assign_prepop_placement(0.0, system.n_nodes)
+table = js.to_table(40)
+scens = [T.Scenario.make("fcfs", "first-fit"),
+         T.Scenario.make("sjf", "first-fit"),
+         T.Scenario.make("fcfs", "easy")]          # 3 rows on 4 devices
+f_v, h_v = eng.simulate_sweep(system, table, scens, 0.0, t1, num_accounts=8)
+f_s, h_s = eng.simulate_sweep_sharded(system, table, scens, 0.0, t1,
+                                      num_accounts=8)
+assert np.asarray(h_s.power_it).shape == np.asarray(h_v.power_it).shape
+np.testing.assert_allclose(np.asarray(h_s.power_it),
+                           np.asarray(h_v.power_it), rtol=1e-5)
+np.testing.assert_allclose(np.asarray(f_s.completed),
+                           np.asarray(f_v.completed))
+print("SHARDED_OK")
+"""
+    env = dict(__import__("os").environ)
+    env["PYTHONPATH"] = "src" + (":" + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    out = subprocess.run([_sys.executable, "-c", prog], cwd=".",
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
