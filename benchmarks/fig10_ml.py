@@ -1,8 +1,19 @@
-"""Paper Fig. 10 / §4.4: ML-guided scheduling on Fugaku (F-Data).
+"""Paper Fig. 10 / §4.4: ML-guided scheduling on Fugaku (F-Data), plus the
+closed training loop (contribution (5), repro.ml.train).
 
 (a) under high load the ML policy lowers power per timestep by prioritizing
 smaller jobs; (b) L2-normalized multi-objective comparison across policies
-(wait, turnaround, energy, EDP, power peak — lower is better)."""
+(wait, turnaround, energy, EDP, power peak — lower is better).
+
+Closed loop: ES-train the scoring alpha on a *validation* workload, then
+sweep the trained policy against the fcfs / priority / incentive (acct_edp)
+/ thermal_aware / carbon_aware baselines and the hand-set default alpha on
+the held-out test workload — the trained-vs-baseline comparison of the MIT
+SuperCloud trace-replay study (arXiv:2509.16513). ``--smoke`` is the CI
+variant: tiny seeded config, emits ``BENCH_ml.json`` (generations/s +
+trained-vs-baseline reward deltas) as a tracked artifact next to
+``BENCH_engine.json``.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -11,14 +22,21 @@ from benchmarks.common import hist_stats, save, timed
 from repro.core import engine as eng
 from repro.core import stats as stats_mod
 from repro.core import types as T
-from repro.datasets.loaders import load_fugaku
 from repro.datasets.synthetic import WorkloadSpec, generate
-from repro.ml.pipeline import MLSchedulerModel, attach_scores
+from repro.ml import train as ml_train
+from repro.ml.pipeline import MLSchedulerModel, attach_basis
 from repro.systems.config import get_system
 
 POLICIES = ["fcfs", "sjf", "priority", "ljf", "ml"]
+BASELINES = ["fcfs", "priority", "acct_edp", "thermal_aware",
+             "carbon_aware"]
 OBJECTIVES = ["avg_wait_s", "avg_turnaround_s", "avg_job_energy_j", "edp",
               "max_power_mw"]
+REWARD = ml_train.DEFAULT_REWARD_SPEC
+
+
+def _scen(policy: str, alpha=0.0) -> T.Scenario:
+    return T.Scenario.make(policy, "first-fit", alpha=alpha)
 
 
 def run(quick: bool = False):
@@ -29,18 +47,20 @@ def run(quick: bool = False):
     train_js = generate(sys_, WorkloadSpec(
         n_jobs=1500 if quick else 4000, duration_s=14 * 86400.0, load=0.8,
         trace_len=8, n_accounts=64, seed=30))
-    (model, fit_wall) = (MLSchedulerModel.fit(train_js, k=5,
-                                              n_trees=8, depth=6), 0.0)
+    model = MLSchedulerModel.fit(train_js, k=5, n_trees=8, depth=6)
     test_js = generate(sys_, WorkloadSpec(
         n_jobs=500 if quick else 1500,
         duration_s=(1.0 if quick else 2.0) * 86400.0, load=1.8,
         trace_len=8, n_accounts=64, seed=31, max_frac_nodes=0.15))
-    attach_scores(test_js, model)
+    # basis (not baked scores): the same table serves the hand-set alpha
+    # (Scenario.alpha = model.alpha) and the trained one
+    attach_basis(test_js, model)
     test_js.assign_prepop_placement(0.0, sys_.n_nodes)
     table = test_js.to_table()
     t1 = (0.5 if quick else 1.5) * 86400.0
 
-    scens = [T.Scenario.make(p, "first-fit") for p in POLICIES]
+    scens = [_scen(p, alpha=np.asarray(model.alpha) if p == "ml" else 0.0)
+             for p in POLICIES]
     (finals, hists), wall = timed(eng.simulate_sweep, sys_, table, scens,
                                   0.0, t1)
     rows = []
@@ -63,6 +83,29 @@ def run(quick: bool = False):
     scores = (obj / norm).mean(axis=1)
     for i, p in enumerate(POLICIES):
         rows[i]["l2_multiobjective"] = float(scores[i])
+
+    # ---- closed loop: train on a validation workload, evaluate held-out --
+    val_js = generate(sys_, WorkloadSpec(
+        n_jobs=300 if quick else 800, duration_s=0.5 * 86400.0, load=1.8,
+        trace_len=8, n_accounts=64, seed=32, max_frac_nodes=0.15))
+    attach_basis(val_js, model)
+    val_js.assign_prepop_placement(0.0, sys_.n_nodes)
+    res, train_wall = timed(
+        ml_train.train, sys_, val_js.to_table(), 0.0, 0.25 * 86400.0,
+        reward=REWARD, generations=4 if quick else 8, population=8,
+        seed=33, log=None)
+    rows.append({
+        "name": "fig10/train", "wall_s": train_wall,
+        "generations": res.generations,
+        "generations_per_s": res.generations / train_wall,
+        "reward_best": res.reward_best,
+        "reward_default": res.reward_default,
+        "gain": res.reward_best - res.reward_default,
+    })
+    trained_rows, _ = sweep_trained(sys_, table, t1, model, res.alpha,
+                                    prefix="fig10")
+    rows += trained_rows
+
     save("fig10_ml", {"rows": rows, "objectives": OBJECTIVES})
     # ML should beat LJF on the multi-objective score under high load
     s = {p: scores[i] for i, p in enumerate(POLICIES)}
@@ -70,6 +113,120 @@ def run(quick: bool = False):
     return rows
 
 
+def sweep_trained(sys_, table, t1, model, trained_alpha, prefix,
+                  signals=None):
+    """ONE batched sweep: baselines + default-alpha ml + trained ml.
+
+    Returns (rows, deltas): per-policy summary rows (reward under the
+    training objective included) and trained-vs-baseline reward deltas
+    (positive = trained better)."""
+    names = BASELINES + ["ml_default", "ml_trained"]
+    scens = [_scen(p) for p in BASELINES] + \
+        [_scen("ml", alpha=np.asarray(model.alpha)),
+         _scen("ml", alpha=np.asarray(trained_alpha))]
+    (finals, hists), wall = timed(eng.simulate_sweep_sharded, sys_, table,
+                                  scens, 0.0, t1, signals=signals)
+    reward = ml_train.Reward.parse(REWARD)
+    metrics = ml_train.rollout_metrics(sys_, table, finals, hists)
+    refs = reward.refs(metrics, names.index("ml_default"))
+    rewards = reward.evaluate(metrics, refs)
+    rows, deltas = [], {}
+    for i, p in enumerate(names):
+        s = stats_mod.summarize(sys_, table, jaxtree_index(finals, i),
+                                jaxtree_index(hists, i))
+        rows.append({
+            "name": f"{prefix}/eval/{p}", "wall_s": wall / len(names),
+            "completed": s["jobs_completed"],
+            "avg_wait_s": s["avg_wait_s"],
+            "avg_turnaround_s": s["avg_turnaround_s"],
+            "total_energy_mwh": s["total_energy_mwh"],
+            "emissions_kg": s["emissions_kg"],
+            "reward": float(rewards[i]),
+        })
+        if p != "ml_trained":
+            deltas[f"trained_vs_{p}"] = float(rewards[-1] - rewards[i])
+    return rows, deltas
+
+
+def smoke(bench_json: str = "BENCH_ml.json"):
+    """CI canary for the closed loop: train a few ES generations on a tiny
+    seeded workload (one batched rollout per generation), then sweep the
+    trained alpha against the baselines under synthetic grid signals.
+    Emits CSV rows + ``BENCH_ml.json`` (generations/s, reward gain,
+    trained-vs-baseline deltas) — uploaded next to ``BENCH_engine.json``
+    so the training-loop trajectory is tracked across PRs."""
+    import json
+
+    from repro.datasets import loaders
+    from repro.grid import signals as gsig
+
+    # one seeded tiny config, shared with `simulate train --smoke`
+    from repro.launch.simulate import _parse_time
+
+    cfg = ml_train.SMOKE_CONFIG
+    sys_ = get_system(cfg["system"]).scaled(cfg["scale"])
+    t1 = _parse_time(cfg["time"])
+    days = max((t1 / 86400.0) * 1.2, 0.02)    # the CLI smoke's formula
+    js = loaders.load(cfg["system"], n_jobs=cfg["jobs"], days=days, seed=0)
+    # loaders size jobs for the full machine; drop what can't fit at
+    # this scale (mirrors the CLI smoke)
+    js = js.select(np.asarray(js.nodes) <= sys_.n_nodes)
+    model = MLSchedulerModel.fit(js, k=4, n_trees=6, depth=5, seed=0)
+    attach_basis(js, model)
+    js.assign_prepop_placement(0.0, sys_.n_nodes)
+    table = js.to_table()
+    n_steps = int(round(t1 / sys_.dt))
+    sig = gsig.synthetic_signals(
+        sys_.grid, n_steps, sys_.dt, seed=1,
+        cap_base_w=0.8 * sys_.n_nodes * sys_.power.peak_node_w)
+
+    res, train_wall = timed(
+        ml_train.train, sys_, table, 0.0, t1, reward=REWARD,
+        generations=cfg["generations"], population=cfg["population"],
+        sigma=cfg["sigma"], lr=cfg["lr"], seed=0, signals=sig, log=None)
+    rows = [{
+        "name": "fig10/smoke-train", "wall_s": train_wall,
+        "generations": res.generations,
+        "generations_per_s": res.generations / train_wall,
+        "rollouts_per_gen": cfg["population"] + 2,
+        "reward_best": res.reward_best,
+        "reward_default": res.reward_default,
+        "gain": res.reward_best - res.reward_default,
+    }]
+    eval_rows, deltas = sweep_trained(sys_, table, t1, model, res.alpha,
+                                      prefix="fig10/smoke", signals=sig)
+    rows += eval_rows
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "wall_s"))
+        print(f"{r['name']},{r['wall_s'] * 1e6:.1f},{derived}")
+    if bench_json:
+        payload = {"train": rows[0], "eval": eval_rows, "deltas": deltas,
+                   "trained_alpha": [float(a) for a in res.alpha],
+                   "reward": REWARD}
+        with open(bench_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {bench_json}")
+    assert res.reward_best >= res.reward_default, \
+        "elite policy must not be worse than the hand-set default"
+    return rows
+
+
 def jaxtree_index(tree, i):
     import jax
-    return jax.tree_util.tree_map(lambda x: x[i], tree)
+    return jax.tree_util.tree_map(lambda x, i=i: x[i], tree)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI canary: tiny train + eval, writes BENCH_ml.json")
+    ap.add_argument("--bench-json", default="BENCH_ml.json")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.bench_json)
+    else:
+        from benchmarks.common import emit_csv
+        emit_csv(run(quick=args.quick))

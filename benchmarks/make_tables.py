@@ -1,4 +1,4 @@
-"""Render EXPERIMENTS.md tables from results/dryrun artifacts.
+"""Render markdown result tables from results/dryrun artifacts.
 
   PYTHONPATH=src python -m benchmarks.make_tables [--tag final]
 

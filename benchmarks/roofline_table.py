@@ -1,4 +1,4 @@
-"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+"""Render the model-zoo roofline table from the dry-run
 artifacts in results/dryrun/."""
 from __future__ import annotations
 

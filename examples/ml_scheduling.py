@@ -1,46 +1,102 @@
-"""ML-guided scheduling (paper §4.4): cluster -> classify -> predict ->
-score S(X) -> schedule, compared against the classic policies under load.
+"""Close the ML scheduling loop (paper §4.4 + contribution (5)):
+cluster -> classify -> predict -> score -> TRAIN -> sweep.
+
+Train-under-stress, evaluate-nominal: the ES loop (repro.ml.train)
+optimizes the scoring alpha while the twin simulates a heat wave with two
+tower cells out per hall — then the trained policy is judged on the
+nominal (typical-weather, full-plant) window against the hand-set default
+alpha and the classic policies. Every training generation is ONE batched
+rollout (population on the scenario axis).
 
   PYTHONPATH=src python examples/ml_scheduling.py
 """
 import numpy as np
 
+from repro.cooling import weather as wx
 from repro.core import engine, stats, types as T
 from repro.datasets.synthetic import WorkloadSpec, generate
-from repro.ml.pipeline import MLSchedulerModel, attach_scores
+from repro.ml import train as ml_train
+from repro.ml.pipeline import MLSchedulerModel, attach_basis
 from repro.systems.config import get_system
+
+REWARD = "wait=1,turnaround=0.5,energy=0.25,unfinished=0.5,overheat=2"
 
 
 def main():
-    system = get_system("fugaku").scaled(8192)
+    system = get_system("marconi100").scaled(64)
+    t1 = 3 * 3600.0
+    n_steps = int(round(t1 / system.dt))
 
-    print("training phase: cluster / classify / fit per-cluster predictors")
+    print("offline phase: cluster / classify / fit per-cluster predictors")
     hist_jobs = generate(system, WorkloadSpec(
-        n_jobs=2000, duration_s=14 * 86400.0, load=0.8, trace_len=8,
-        n_accounts=64, seed=30))
-    model = MLSchedulerModel.fit(hist_jobs, k=5, n_trees=8, depth=6)
+        n_jobs=400, duration_s=2 * 86400.0, load=0.9, trace_len=8,
+        n_accounts=16, seed=30))
+    model = MLSchedulerModel.fit(hist_jobs, k=4, n_trees=6, depth=5)
 
-    print("inference phase: score incoming jobs, schedule under high load")
-    test = generate(system, WorkloadSpec(
-        n_jobs=600, duration_s=0.5 * 86400.0, load=2.5, trace_len=8,
-        n_accounts=64, seed=31, max_frac_nodes=0.35))
-    attach_scores(test, model)
-    table = test.to_table()
+    # the training workload: contended, scored via the basis so alpha is a
+    # traced Scenario knob (ml.pipeline.attach_basis)
+    jobs = generate(system, WorkloadSpec(
+        n_jobs=170, duration_s=t1, load=2.4, trace_len=8,
+        n_accounts=16, seed=31, mean_wall_s=1500.0, max_frac_nodes=0.4))
+    attach_basis(jobs, model)
+    table = jobs.to_table()
 
+    print(f"train phase: ES under stress (heat wave + 2 tower cells out), "
+          f"reward = {REWARD}")
+    nominal = wx.synthetic_weather(n_steps, system.dt, seed=5)
+    stress = wx.heat_wave(nominal, system.dt, start_s=0.1 * t1,
+                          duration_s=0.7 * t1, peak_amp_c=10.0)
+    res = ml_train.train(
+        system, table, 0.0, t1, reward=REWARD,
+        generations=5, population=8, sigma=0.35, lr=0.8, seed=0,
+        weather=stress, scen_kw={"cells_offline": 2.0},
+        checkpoint=None, log=lambda s: print("  " + s))
+    print(f"trained alpha {np.round(res.alpha, 3).tolist()} "
+          f"(default {list(ml_train.scoring.DEFAULT_ALPHA)}); "
+          f"stress reward {res.reward_best:+.3f} vs default "
+          f"{res.reward_default:+.3f}")
+
+    print("\neval phase: (nominal + stress) x policies — ONE batched sweep "
+          "(per-scenario weather)")
+    names = ["fcfs", "sjf", "priority", "thermal_aware", "ml (default)",
+             "ml (trained)", "ml (default) @stress", "ml (trained) @stress"]
+    a_def, a_tr = np.asarray(model.alpha), res.alpha
+    scens = [T.Scenario.make(p, "first-fit")
+             for p in ["fcfs", "sjf", "priority", "thermal_aware"]] + \
+        [T.Scenario.make("ml", "first-fit", alpha=a_def),
+         T.Scenario.make("ml", "first-fit", alpha=a_tr),
+         T.Scenario.make("ml", "first-fit", alpha=a_def,
+                         cells_offline=2.0),
+         T.Scenario.make("ml", "first-fit", alpha=a_tr,
+                         cells_offline=2.0)]
+    weather = [nominal] * 6 + [stress] * 2
+    finals, hists = engine.simulate_sweep_sharded(
+        system, table, scens, 0.0, t1, weather=weather)
+
+    import jax
+    pick = lambda tree, i: jax.tree_util.tree_map(lambda x: x[i], tree)
     rows = {}
-    for policy in ["fcfs", "sjf", "ljf", "priority", "ml"]:
-        final, hist = engine.simulate(system, table,
-                                      T.Scenario.make(policy, "first-fit"),
-                                      0.0, 0.6 * 86400.0)
-        s = stats.summarize(system, table, final, hist)
-        rows[policy] = s
-        print(f"{policy:9s} done={s['jobs_completed']:5.0f} "
-              f"wait={s['avg_wait_s']:8.0f}s turn={s['avg_turnaround_s']:8.0f}s "
-              f"Pmax={s['max_power_mw']:6.2f}MW edp={s['edp']:.3e}")
+    for i, name in enumerate(names):
+        s = stats.summarize(system, table, pick(finals, i), pick(hists, i))
+        rows[name] = s
+        print(f"{name:21s} done={s['jobs_completed']:4.0f} "
+              f"wait={s['avg_wait_s']:7.0f}s "
+              f"turn={s['avg_turnaround_s']:7.0f}s "
+              f"E={s['total_energy_mwh']:6.3f}MWh "
+              f"Tret_max={s['t_tower_return_max_c']:5.1f}C")
 
-    better = sum(rows["ml"][k] <= rows["ljf"][k]
-                 for k in ("avg_wait_s", "avg_turnaround_s", "max_power_mw"))
-    print(f"\nml beats ljf on {better}/3 objectives (paper Fig. 10)")
+    objs = ("avg_wait_s", "avg_turnaround_s", "total_energy_mwh")
+
+    def compare(tr, df, label):
+        wins = sum(tr[k] < df[k] for k in objs)
+        ties = sum(tr[k] == df[k] for k in objs)
+        print(f"  {label}: {wins}/3 strictly better, {ties}/3 tied, "
+              f"{3 - wins - ties}/3 worse")
+
+    print("\ntrained vs hand-set alpha:")
+    compare(rows["ml (trained)"], rows["ml (default)"], "nominal window")
+    compare(rows["ml (trained) @stress"], rows["ml (default) @stress"],
+            "stress window (heat wave + 2 cells out)")
 
 
 if __name__ == "__main__":

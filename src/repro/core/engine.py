@@ -406,7 +406,7 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
     """Single-scenario fast path: policy/backfill are *compile-time*
     constants, so only the selected priority key is computed, non-EASY runs
     skip the reservation machinery entirely, and all policy selects fold
-    away (EXPERIMENTS.md §Perf-twin iter T1)."""
+    away (docs/architecture.md, "The engine is a single lax.scan")."""
     n_steps = int(round((t1 - t0) / system.dt))
     # keyword/default construction with raw Python values (-> static in
     # the closure): every knob past policy/backfill takes its declared
@@ -426,6 +426,32 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
         _STATIC_CACHE[key] = fn
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
     return fn(table, st0, signals, weather)
+
+
+_SWEEP_CACHE: dict = {}
+
+
+def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
+    """Cached jitted sweep runner keyed on (system, horizon, weather axis).
+
+    ``jax.jit`` caches traces per *function identity*; defining the runner
+    inside ``simulate_sweep`` would re-jit on every call. Caching it here
+    means repeated same-shape sweeps — notably the per-generation rollouts
+    of the ES training loop (repro.ml.train) — compile once and then run
+    at steady-state throughput."""
+    key = (system, n_steps, w_axis)
+    fn = _SWEEP_CACHE.get(key)
+    if fn is None:
+        @jax.jit
+        def fn(table_, st0_, scen_, signals_, weather_):
+            def one(scen1, weather1):
+                def body(st, _):
+                    return engine_step(system, table_, st, scen1, signals_,
+                                       weather1)
+                return jax.lax.scan(body, st0_, None, length=n_steps)
+            return jax.vmap(one, in_axes=(0, w_axis))(scen_, weather_)
+        _SWEEP_CACHE[key] = fn
+    return fn
 
 
 def simulate_sweep(system: SystemConfig, table: T.JobTable,
@@ -458,16 +484,8 @@ def simulate_sweep(system: SystemConfig, table: T.JobTable,
     else:
         weather_b, w_axis = weather, None
 
-    @functools.partial(jax.jit, static_argnums=(0, 6))
-    def run(sys_, table_, st0_, scen_, signals_, weather_, n_steps_):
-        def one(scen1, weather1):
-            def body(st, _):
-                return engine_step(sys_, table_, st, scen1, signals_,
-                                   weather1)
-            return jax.lax.scan(body, st0_, None, length=n_steps_)
-        return jax.vmap(one, in_axes=(0, w_axis))(scen_, weather_)
-
-    return run(system, table, st0, batched, signals, weather_b, n_steps)
+    run = _sweep_fn(system, n_steps, w_axis)
+    return run(table, st0, batched, signals, weather_b)
 
 
 def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
@@ -513,24 +531,31 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
     batched, _ = psh.pad_leading_axis(batched, n_dev)
     if w_axis == 0:
         weather_b, _ = psh.pad_leading_axis(weather_b, n_dev)
-    mesh = psh.sweep_mesh()
-    scen_spec = psh.scenario_spec()
-    w_spec = scen_spec if w_axis == 0 else jax.sharding.PartitionSpec()
-    rep = jax.sharding.PartitionSpec()
 
-    @jax.jit
-    def run(table_, st0_, scen_, signals_, weather_):
-        def shard(table_s, st0_s, scen_s, signals_s, weather_s):
-            def one(scen1, weather1):
-                def body(st, _):
-                    return engine_step(system, table_s, st, scen1,
-                                       signals_s, weather1)
-                return jax.lax.scan(body, st0_s, None, length=n_steps)
-            return jax.vmap(one, in_axes=(0, w_axis))(scen_s, weather_s)
-        return shard_map(shard, mesh=mesh,
-                         in_specs=(rep, rep, scen_spec, rep, w_spec),
-                         out_specs=scen_spec)(
-            table_, st0_, scen_, signals_, weather_)
+    # compiled-program cache, same rationale as _sweep_fn: per-generation
+    # training rollouts re-enter here with identical shapes
+    key = ("sharded", system, n_steps, w_axis, n_dev)
+    run = _SWEEP_CACHE.get(key)
+    if run is None:
+        mesh = psh.sweep_mesh()
+        scen_spec = psh.scenario_spec()
+        w_spec = scen_spec if w_axis == 0 else jax.sharding.PartitionSpec()
+        rep = jax.sharding.PartitionSpec()
+
+        @jax.jit
+        def run(table_, st0_, scen_, signals_, weather_):
+            def shard(table_s, st0_s, scen_s, signals_s, weather_s):
+                def one(scen1, weather1):
+                    def body(st, _):
+                        return engine_step(system, table_s, st, scen1,
+                                           signals_s, weather1)
+                    return jax.lax.scan(body, st0_s, None, length=n_steps)
+                return jax.vmap(one, in_axes=(0, w_axis))(scen_s, weather_s)
+            return shard_map(shard, mesh=mesh,
+                             in_specs=(rep, rep, scen_spec, rep, w_spec),
+                             out_specs=scen_spec)(
+                table_, st0_, scen_, signals_, weather_)
+        _SWEEP_CACHE[key] = run
 
     final, hist = run(table, st0, batched, signals, weather_b)
     trim = lambda x: x[:S]

@@ -56,7 +56,7 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
         ``repro.cooling.model.thermal_now``); neutral when ``None``.
 
     When ``scen.policy`` is a *Python int* (static-scenario fast path,
-    EXPERIMENTS.md §Perf-twin) only the selected key is computed; traced
+    docs/architecture.md) only the selected key is computed; traced
     policies compute the full stack and select (vmappable sweeps).
     """
     if grid is None:
@@ -89,6 +89,18 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
         return table.submit + scen.thermal_weight * thermal.excess * \
             defer_heat
 
+    # ML-guided key (paper §4.4.2): higher score = earlier. The score has a
+    # static part (``table.score``, baked at attach time) plus a
+    # *parameterized* part ``ml_basis @ scen.alpha`` — linear in the traced
+    # alpha vector, so a vmapped sweep evaluates one alpha per scenario
+    # against the shared basis (the ES population axis, repro.ml.train).
+    # ``ml_basis is None`` is compile-time "legacy score only".
+    def ml_key():
+        s = table.score
+        if table.ml_basis is not None:
+            s = s + jnp.sum(table.ml_basis * scen.alpha, axis=-1)
+        return -s
+
     builders = [
         lambda: table.rec_start,            # REPLAY: recorded order
         lambda: table.submit,               # FCFS
@@ -100,7 +112,7 @@ def policy_key(table: T.JobTable, accounts: T.AccountStats,
         lambda: accounts.edp[acct],         # ACCT_EDP (lower first)
         lambda: accounts.ed2p[acct],        # ACCT_ED2P
         lambda: -accounts.fugaku_pts[acct],  # ACCT_FUGAKU_PTS
-        lambda: -table.score,               # ML score (higher is better)
+        ml_key,                             # ML score (higher is better)
         lambda: grid_key(grid.carbon, grid.carbon_ref,
                          scen.carbon_weight),       # CARBON_AWARE
         lambda: grid_key(grid.price, grid.price_ref,

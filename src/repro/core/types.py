@@ -101,6 +101,14 @@ class JobTable:
     power_prof: jnp.ndarray    # f32[J, P] per-node power trace (W)
     util_prof: jnp.ndarray     # f32[J, P] utilization trace in [0, 1]
     valid: jnp.ndarray         # bool[J] padding mask
+    # ML scoring basis (paper §4.4.2): exp(1/sqrt(X+1)) of the per-job
+    # feature matrix, so the ranking score is *linear* in the alpha vector
+    # (score = ml_basis @ alpha). The basis lives in the broadcast table
+    # while alpha rides the traced Scenario axis — which is what lets a
+    # whole ES population of alphas evaluate as ONE batched sweep
+    # (repro.ml.train). ``None`` = no parameterized scoring (legacy
+    # ``score`` column only).
+    ml_basis: jnp.ndarray | None = None  # f32[J, K] or None
 
     @property
     def num_jobs(self) -> int:
@@ -252,6 +260,12 @@ class Scenario:
     # degrades halls individually (all scenarios in one sweep must agree
     # on the shape so the leaves stack).
     cells_offline: jnp.ndarray = 0.0     # f32[] or f32[H] cells offline
+    # ML scoring coefficients (repro.ml.scoring): the POLICY_ML key is
+    # -(table.score + table.ml_basis @ alpha), so a sweep can carry one
+    # alpha vector *per scenario* — the ES training loop (repro.ml.train)
+    # puts its whole population here. The scalar 0.0 default is neutral
+    # (pure ``table.score`` ranking, the pre-training behavior).
+    alpha: jnp.ndarray = 0.0             # f32[] or f32[K] scoring weights
 
     @staticmethod
     def make(policy: str | int, backfill: str | int = "none",
@@ -259,7 +273,7 @@ class Scenario:
              price_weight: float = 1.0, cap_scale: float = 1.0,
              thermal_weight: float = 1.0,
              setpoint_delta_c: float = 0.0,
-             cells_offline=0.0) -> "Scenario":
+             cells_offline=0.0, alpha=0.0) -> "Scenario":
         p = POLICY_NAMES[policy] if isinstance(policy, str) else policy
         b = BACKFILL_NAMES[backfill] if isinstance(backfill, str) else backfill
         return Scenario(
@@ -270,7 +284,8 @@ class Scenario:
             cap_scale=jnp.float32(cap_scale),
             thermal_weight=jnp.float32(thermal_weight),
             setpoint_delta_c=jnp.float32(setpoint_delta_c),
-            cells_offline=jnp.asarray(cells_offline, jnp.float32))
+            cells_offline=jnp.asarray(cells_offline, jnp.float32),
+            alpha=jnp.asarray(alpha, jnp.float32))
 
 
 def stack_scenarios(scens: list) -> "Scenario":

@@ -21,6 +21,12 @@ from repro.core import types as T
 
 @dataclass
 class JobSet:
+    """Host-side struct-of-arrays job set (paper §3.2.2, SWF-style).
+
+    Times are absolute seconds from the dataset origin; ``power_prof`` is
+    per-node watts sampled at ``SystemConfig.prof_dt`` (P == 1 for
+    scalar-summary datasets); ``util_prof`` is dimensionless in [0, 1].
+    """
     submit: np.ndarray       # f64[J] seconds
     limit: np.ndarray        # f64[J] requested walltime
     wall: np.ndarray         # f64[J] true runtime
@@ -31,7 +37,10 @@ class JobSet:
     power_prof: np.ndarray   # f32[J, P] per-node power (W)
     util_prof: np.ndarray    # f32[J, P] in [0,1]
     first_node: np.ndarray | None = None  # i32[J], -1 unknown
-    score: np.ndarray | None = None       # f32[J]
+    score: np.ndarray | None = None       # f32[J] baked ML/external score
+    ml_basis: np.ndarray | None = None    # f32[J, K] scoring basis
+    #   (repro.ml.scoring.basis of the predicted features; lets the table
+    #    score jobs under any Scenario.alpha — see ml.pipeline.attach_basis)
     name: str = "jobset"
 
     def __len__(self) -> int:
@@ -53,7 +62,8 @@ class JobSet:
                       self.nodes[mask], self.priority[mask],
                       self.account[mask], self.rec_start[mask],
                       self.power_prof[mask], self.util_prof[mask],
-                      pick(self.first_node), pick(self.score), self.name)
+                      pick(self.first_node), pick(self.score),
+                      pick(self.ml_basis), self.name)
 
     def assign_prepop_placement(self, t0: float, n_nodes: int) -> None:
         """Give contiguous spans to jobs running at t0 (prepopulation)."""
@@ -68,6 +78,10 @@ class JobSet:
         self.first_node = first
 
     def to_table(self, pad_to: int | None = None) -> T.JobTable:
+        """Pad and pack into the fixed-shape ``JobTable`` the compiled
+        engine consumes (times -> f32 s, power -> f32 W, counts -> i32).
+        Padded rows are marked invalid; ``ml_basis`` (if attached) pads
+        with zeros, so padded jobs score 0 under every alpha."""
         J = len(self)
         Jp = pad_to or J
         assert Jp >= J, f"pad_to={Jp} < {J} jobs"
@@ -78,14 +92,17 @@ class JobSet:
             out[:J] = x
             return jnp.asarray(out)
 
-        def pad2(x, fill, dtype):
-            out = np.full((Jp, P), fill, dtype)
+        def pad2(x, fill, dtype, width=P):
+            out = np.full((Jp, width), fill, dtype)
             out[:J] = x
             return jnp.asarray(out)
 
         first = self.first_node if self.first_node is not None else \
             np.full(J, -1, np.int64)
         score = self.score if self.score is not None else np.zeros(J)
+        basis = None if self.ml_basis is None else \
+            pad2(self.ml_basis, 0.0, np.float32,
+                 width=self.ml_basis.shape[1])
         valid = np.zeros((Jp,), bool)
         valid[:J] = True
         return T.JobTable(
@@ -101,12 +118,14 @@ class JobSet:
             power_prof=pad2(self.power_prof, 0.0, np.float32),
             util_prof=pad2(self.util_prof, 0.0, np.float32),
             valid=jnp.asarray(valid),
+            ml_basis=basis,
         )
 
     # -- pre-submission feature matrix for the ML pipeline (paper §4.4) -----
     def presubmit_features(self) -> np.ndarray:
-        """Features known at submit time: nodes, limit, priority, account
-        aggregates are intentionally excluded (they're ledger state)."""
+        """f64[J, 5] features known at submit time: nodes, limit (s),
+        priority, log1p(nodes), log1p(limit). Account aggregates are
+        intentionally excluded (they're ledger state)."""
         return np.stack([
             self.nodes.astype(np.float64),
             self.limit.astype(np.float64),
@@ -116,8 +135,10 @@ class JobSet:
         ], axis=1)
 
     def behavior_features(self) -> np.ndarray:
-        """Post-hoc features (clustering targets): summary statistics of the
-        noisy time series, as the paper does for PM100 (§4.4.3)."""
+        """f64[J, 7] post-hoc features (clustering targets): power trace
+        mean/max/min/std (W), utilization mean/std, runtime (s) — summary
+        statistics of the noisy time series, as the paper does for PM100
+        (§4.4.3)."""
         p = self.power_prof
         u = self.util_prof
         return np.stack([

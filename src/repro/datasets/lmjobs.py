@@ -44,7 +44,13 @@ def _cell_utilization() -> dict:
 def generate_lm_workload(system: SystemConfig, n_jobs: int = 256,
                          duration_s: float = 86400.0, seed: int = 0,
                          n_accounts: int = 16) -> JobSet:
-    """Jobs = LM runs drawn from the assigned (arch x shape) grid."""
+    """Jobs = LM runs drawn from the assigned (arch x shape) grid.
+
+    Returns a ``JobSet`` with times in s and scalar per-node power
+    profiles (W) derived from each cell's roofline utilization
+    (idle + (peak - idle) * util); walltimes are grid-aligned to
+    ``system.dt`` and a ground-truth schedule is recorded via
+    ``event_schedule`` (replay semantics, paper §3.2.2)."""
     rng = np.random.default_rng(seed)
     cells = _cell_utilization()
     if not cells:

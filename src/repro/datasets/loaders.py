@@ -4,7 +4,8 @@ Each loader returns a ``JobSet`` with the telemetry characteristics of its
 dataset: PM100 and Frontier carry per-job power *traces* (20 s / 15 s); F-Data,
 LAST and Cirou's Adastra set carry scalar summaries only (trace_len == 1).
 Offline note: data is drawn from the calibrated synthetic generator — see
-DESIGN.md §2 (assumption changes).
+docs/architecture.md ("Datasets and synthetic calibration") for what is
+calibrated and how the recorded ground-truth schedule is produced.
 """
 from __future__ import annotations
 
@@ -80,4 +81,6 @@ LOADERS = {
 
 
 def load(system_name: str, **kw) -> JobSet:
+    """Dispatch to the per-system loader (CLI ``--system``); ``kw`` is
+    forwarded (commonly ``n_jobs``, ``days``, ``seed``)."""
     return LOADERS[system_name](**kw)

@@ -15,6 +15,9 @@ from repro.datasets.base import JobSet
 
 
 def write_swf(js: JobSet, path: str) -> None:
+    """Export a ``JobSet`` as SWF rows (times in whole seconds; the wait
+    column is derived from the recorded start). Power/utilization channels
+    are dropped — SWF has no slot for them."""
     with open(path, "w") as f:
         f.write("; SWF export from repro (S-RAPS JAX twin)\n")
         for i in range(len(js)):
@@ -27,6 +30,12 @@ def write_swf(js: JobSet, path: str) -> None:
 
 def read_swf(path: str, node_power_w: float = 500.0,
              util: float = 0.7) -> JobSet:
+    """Import an SWF trace into a ``JobSet`` (times s, counts i64).
+
+    SWF carries no power telemetry, so every job gets a scalar profile of
+    ``node_power_w`` watts per node at ``util`` utilization — enough to
+    drive scheduling studies; swap in measured profiles for power work.
+    """
     rows = []
     with open(path) as f:
         for line in f:

@@ -88,6 +88,10 @@ def event_schedule(submit: np.ndarray, limit: np.ndarray, wall: np.ndarray,
 # ---------------------------------------------------------------------------
 @dataclass
 class WorkloadSpec:
+    """Knobs of the calibrated generator (one spec per paper Table 1
+    system — see docs/architecture.md, "Datasets and synthetic
+    calibration"). Times in seconds; ``load`` is offered node-seconds
+    over capacity node-seconds (dimensionless)."""
     n_jobs: int = 512
     duration_s: float = 24 * 3600.0
     load: float = 0.85              # target offered load (node-seconds ratio)
@@ -101,6 +105,12 @@ class WorkloadSpec:
 
 
 def generate(system: SystemConfig, spec: WorkloadSpec) -> JobSet:
+    """Draw a ``JobSet`` from the calibrated generator: diurnal Poisson
+    arrivals (s), log2-mix node counts, lognormal walltimes scaled to hit
+    ``spec.load``, correlated per-node power traces (W) at
+    ``system.prof_dt``, and a recorded ground-truth schedule
+    (``rec_start``) from the event-driven reference scheduler (paper
+    §3.2.2 replay semantics)."""
     rng = np.random.default_rng(spec.seed)
     J = spec.n_jobs
     dt = system.dt

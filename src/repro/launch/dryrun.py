@@ -56,7 +56,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     if shape in cfg.skip_shapes:
         return dict(cell=cell_id, status="SKIP",
                     reason=f"{arch} is full-attention (or shape not "
-                           f"meaningful); see DESIGN.md §3")
+                           f"meaningful)")
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
@@ -167,7 +167,7 @@ def run_cell_extrapolated(arch: str, shape: str, multi_pod: bool,
     *unrolled* compiles at L=unit and L=2*unit give
         body = c2 - c1,  rest = c1 - body,
         corrected(L) = rest + (L/unit) * body.
-    Validated against a full qwen2.5-3b unroll (see EXPERIMENTS.md §Dry-run).
+    Validated against a full qwen2.5-3b unroll.
     """
     import dataclasses
     cfg = get_config(arch)
@@ -179,7 +179,7 @@ def run_cell_extrapolated(arch: str, shape: str, multi_pod: bool,
         (f"__{tag}" if tag else "")
     if shape in cfg.skip_shapes:
         return dict(cell=cell_id, status="SKIP",
-                    reason=f"{arch}: shape not meaningful (DESIGN.md §3)")
+                    reason=f"{arch}: shape not meaningful")
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size

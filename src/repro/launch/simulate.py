@@ -8,6 +8,12 @@ Options mirror the paper's artifact: --system selects the dataloader,
 event-based external simulator (fastsim | scheduleflow), --accounts tracks
 account ledgers, --accounts-json reloads them (incentive redeeming),
 --sweep runs several policies in one compiled batch.
+
+Subcommand ``train`` closes the ML scheduling loop (repro.ml.train,
+docs/ml-scheduling.md): ES-optimize the scoring alpha against batched twin
+rollouts, e.g. ``python -m repro.launch.simulate train --smoke``. A trained
+checkpoint feeds back into evaluation via ``--policy ml --ml-alpha
+<checkpoint.json or comma floats>``.
 """
 from __future__ import annotations
 
@@ -39,6 +45,13 @@ def _parse_time(s: str) -> float:
 
 
 def main(argv=None):
+    import sys as _sys
+    argv = list(_sys.argv[1:]) if argv is None else list(argv)
+    if argv[:1] == ["train"]:
+        # policy-training subcommand (repro.ml.train): ES over batched
+        # twin rollouts; everything after "train" is its own arg set
+        from repro.ml import train as ml_train
+        return ml_train.main(argv[1:])
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--system", default="marconi100")
     ap.add_argument("--scheduler", default="default",
@@ -65,6 +78,10 @@ def main(argv=None):
                          "'2,0,0,0'")
     ap.add_argument("--accounts", action="store_true")
     ap.add_argument("--accounts-json", default=None)
+    ap.add_argument("--ml-alpha", default=None,
+                    help="scoring alpha for --policy ml: a training "
+                         "checkpoint JSON (repro.ml.train) or comma "
+                         "floats, e.g. '1.2,0.8,1.1,0.3'")
     ap.add_argument("--sweep", nargs="*", default=None,
                     help="policy[:backfill] list to run as one batch")
     ap.add_argument("-o", "--output", default=None, nargs="?",
@@ -105,7 +122,18 @@ def main(argv=None):
     js = loaders.load(args.system, n_jobs=args.jobs, days=days,
                       seed=args.seed)
     if args.policy == "ml":
-        model = MLSchedulerModel.fit(js, k=5)
+        alpha = None
+        if args.ml_alpha:
+            if pathlib.Path(args.ml_alpha).exists():
+                from repro.ml.train import load_alpha
+                alpha = load_alpha(args.ml_alpha)
+            else:
+                alpha = np.asarray(
+                    [float(x) for x in args.ml_alpha.split(",")],
+                    np.float32)
+        # trained or default alpha is baked into the static score, so
+        # every engine path (static / sweep / traced) ranks identically
+        model = MLSchedulerModel.fit(js, k=5, alpha=alpha)
         attach_scores(js, model)
     js.assign_prepop_placement(t0, sys_.n_nodes)
     table = js.to_table()
@@ -158,7 +186,7 @@ def main(argv=None):
         runs = [((args.policy, args.backfill), final, hist)]
     else:
         # single-policy runs take the static fast path (policy/backfill are
-        # compile-time constants; EXPERIMENTS.md §Perf-twin)
+        # compile-time constants; docs/architecture.md)
         final, hist = eng.simulate_static(sys_, table, args.policy,
                                           args.backfill, t0, t1, accounts)
         runs = [((args.policy, args.backfill), final, hist)]

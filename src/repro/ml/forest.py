@@ -2,7 +2,7 @@
 predict (paper §4.4.1 step 2: classify jobs into behavioral clusters from
 pre-submission features).
 
-Hardware adaptation (DESIGN.md §2): scikit-learn is unavailable and tree
+Hardware adaptation (offline image, no scikit-learn): tree
 *fitting* is branchy host-side work anyway; *inference* must be traceable so
 the ML-guided policy can score jobs inside the compiled twin. Trees are
 stored as flat arrays (feature, threshold, left/right child, leaf value) and
@@ -92,6 +92,9 @@ class RandomForest:
     def fit(x: np.ndarray, y: np.ndarray, n_classes: int, n_trees: int = 16,
             depth: int = 6, seed: int = 0,
             max_features: int | None = None) -> "RandomForest":
+        """Bagged CART fit (paper §4.4.1 step 2): x f64[N, D] standardized
+        features, y i64[N] cluster labels. ``max_features`` defaults to
+        sqrt(D) per split (the usual forest heuristic)."""
         rng = np.random.default_rng(seed)
         max_features = max_features or max(1, int(np.sqrt(x.shape[1])))
         feats, threshs, leafs = [], [], []
@@ -129,4 +132,5 @@ class RandomForest:
         return probs.mean(0)
 
     def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        """f32[N, D] -> i32[N] majority-vote cluster labels."""
         return jnp.argmax(self.predict_proba(x), axis=-1)

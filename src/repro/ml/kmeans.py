@@ -10,8 +10,9 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def fit(x: jnp.ndarray, k: int, iters: int = 50, seed: int = 0):
-    """Lloyd's algorithm. x: f32[N, D] (standardized). Returns (centers[k,D],
-    labels[N], inertia)."""
+    """Lloyd's algorithm (paper §4.4.1 step 1). x: f32[N, D]
+    (standardized, dimensionless). Returns (centers f32[k, D],
+    labels i32[N], inertia f32[] — summed squared distances)."""
     n = x.shape[0]
     key = jax.random.PRNGKey(seed)
     # k-means++-ish init: random distinct points
@@ -39,12 +40,16 @@ def fit(x: jnp.ndarray, k: int, iters: int = 50, seed: int = 0):
 
 @jax.jit
 def predict(centers: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-center assignment (paper §4.4.1 inference): centers
+    f32[k, D], x f32[N, D] (standardized) -> labels i32[N]."""
     d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
     return jnp.argmin(d2, axis=1)
 
 
 def standardize(x, mean=None, std=None):
-    """Return (x_std, mean, std); pass stored moments at inference time."""
+    """Zero-mean / unit-std feature scaling: x f32[N, D] ->
+    (x_std f32[N, D], mean f32[D], std f32[D]); pass the stored moments
+    at inference time so train/test share one scale."""
     if mean is None:
         mean = x.mean(0)
         std = x.std(0) + 1e-6

@@ -6,11 +6,16 @@ Training phase:
   (2) *Classification* — random forest from pre-submission features to the
       cluster label (dynamic features are unavailable at submit time).
   (3) *Prediction* — per-cluster ridge regressors from pre-submission
-      features to target metrics (runtime, avg power, energy).
+      features to target metrics (runtime s, avg per-node power W, energy J).
 
 Inference phase: normalize statics -> predict cluster -> invoke that
 cluster's regressor -> rank via S(X) (repro.ml.scoring). The resulting score
 feeds the twin's ``ml`` policy (higher score = scheduled earlier).
+
+Closing the loop (paper contribution (5), repro.ml.train): ``attach_basis``
+stores the per-job scoring *basis* in the table instead of a baked score,
+so the alpha trade-off vector becomes a traced ``Scenario.alpha`` knob —
+trainable against batched twin rollouts without refitting this pipeline.
 """
 from __future__ import annotations
 
@@ -22,19 +27,22 @@ import jax.numpy as jnp
 from repro.datasets.base import JobSet
 from repro.ml import kmeans
 from repro.ml.forest import RandomForest
-from repro.ml.scoring import score as s_score
+from repro.ml import scoring
 
-TARGETS = ("wall", "avg_power", "energy")
+TARGETS = ("wall", "avg_power", "energy")   # units: s, W, J
 
 
 def _targets(js: JobSet) -> np.ndarray:
+    """Ground-truth regression targets f64[N, 3]: runtime (s), average
+    per-node power (W), job energy (J = W * nodes * s)."""
     avg_pw = js.power_prof.mean(1)
     energy = avg_pw * js.nodes * js.wall
     return np.stack([js.wall, avg_pw, energy], 1).astype(np.float64)
 
 
 def _ridge(x: np.ndarray, y: np.ndarray, lam: float = 1e-2) -> np.ndarray:
-    """Closed-form ridge with bias: returns W [D+1, T]."""
+    """Closed-form ridge with bias: x f64[N, D], y f64[N, T] ->
+    weights f64[D+1, T] (last row is the bias)."""
     xb = np.concatenate([x, np.ones((len(x), 1))], 1)
     d = xb.shape[1]
     w = np.linalg.solve(xb.T @ xb + lam * np.eye(d), xb.T @ y)
@@ -43,20 +51,36 @@ def _ridge(x: np.ndarray, y: np.ndarray, lam: float = 1e-2) -> np.ndarray:
 
 @dataclass
 class MLSchedulerModel:
-    centers: jnp.ndarray          # [k, Db] cluster centers (behavior space)
+    """Fitted cluster/classify/predict pipeline (paper Fig. 9).
+
+    Shapes: k clusters, D pre-submission features, Db behavior features,
+    T = len(TARGETS) predicted metrics, K_score scoring columns.
+    """
+    centers: jnp.ndarray          # f32[k, Db] cluster centers (behavior space)
     clf: RandomForest             # presubmit features -> cluster
-    reg_w: jnp.ndarray            # [k, D+1, T] per-cluster ridge weights
-    x_mean: jnp.ndarray
-    x_std: jnp.ndarray
-    b_mean: jnp.ndarray
-    b_std: jnp.ndarray
-    alpha: jnp.ndarray            # [K_score] scoring coefficients
+    reg_w: jnp.ndarray            # f32[k, D+1, T] per-cluster ridge weights
+    x_mean: jnp.ndarray           # f32[D] presubmit standardization mean
+    x_std: jnp.ndarray            # f32[D] presubmit standardization std
+    b_mean: jnp.ndarray           # f32[Db] behavior standardization mean
+    b_std: jnp.ndarray            # f32[Db] behavior standardization std
+    alpha: jnp.ndarray            # f32[K_score] scoring coefficients
 
     # ------------------------------------------------------------------ fit
     @staticmethod
     def fit(train: JobSet, k: int = 5, n_trees: int = 12, depth: int = 6,
             alpha: np.ndarray | None = None, seed: int = 0
             ) -> "MLSchedulerModel":
+        """Fit the three-stage pipeline on a historical ``JobSet``.
+
+        Args:
+          train: historical jobs with full (post-hoc) telemetry.
+          k: number of K-means behavior clusters (paper uses a handful).
+          n_trees, depth: random-forest classifier size.
+          alpha: f32[K_score] scoring trade-off; defaults to the paper's
+            hand-set ``scoring.DEFAULT_ALPHA`` (the Fig. 10a setting, and
+            the baseline the training loop must beat).
+          seed: RNG seed for K-means init and forest bagging.
+        """
         xs = train.presubmit_features()
         xb = train.behavior_features()
         xs_n, x_mean, x_std = kmeans.standardize(jnp.asarray(xs))
@@ -78,16 +102,17 @@ class MLSchedulerModel:
                 reg[c] = _ridge(np.asarray(xs_n), y)
 
         if alpha is None:
-            # default trade-off: favor (predicted) short, low-power, small
-            # jobs under load — the paper's observation in Fig. 10(a)
-            alpha = np.array([1.0, 1.0, 1.0, 0.5], np.float32)
+            alpha = np.asarray(scoring.DEFAULT_ALPHA, np.float32)
         return MLSchedulerModel(centers, clf, jnp.asarray(reg),
                                 x_mean, x_std,
                                 b_mean, b_std, jnp.asarray(alpha))
 
     # ------------------------------------------------------------- inference
     def predict_metrics(self, js: JobSet):
-        """Returns (cluster i32[N], predicted [N, T])."""
+        """Predict per-job metrics from pre-submission features.
+
+        Returns (cluster i32[N], predicted f32[N, T]) with T = runtime (s),
+        avg per-node power (W), energy (J)."""
         xs = jnp.asarray(js.presubmit_features())
         xs_n = (xs - self.x_mean) / self.x_std
         cluster = self.clf.predict(xs_n)
@@ -96,15 +121,43 @@ class MLSchedulerModel:
         pred = jnp.einsum("nd,ndt->nt", xb, w)
         return cluster, pred
 
-    def score(self, js: JobSet) -> np.ndarray:
-        """Ranking score per job (higher = scheduled earlier)."""
+    def score_features(self, js: JobSet) -> jnp.ndarray:
+        """f32[N, K_score] raw scoring features: predicted (runtime s,
+        power W, energy J) columns + requested node count."""
         _, pred = self.predict_metrics(js)
-        # features for S(X): predicted runtime, power, energy + nodes
-        feats = jnp.concatenate(
+        return jnp.concatenate(
             [pred, jnp.asarray(js.nodes, jnp.float32)[:, None]], axis=1)
-        return np.asarray(s_score(feats, self.alpha))
+
+    def score_basis(self, js: JobSet) -> np.ndarray:
+        """f32[N, K_score] scoring basis ``exp(1/sqrt(X+1))`` per job.
+
+        The score under any coefficient vector is ``basis @ alpha`` — this
+        matrix is what ``repro.ml.train`` bakes into the broadcast job
+        table so the alpha population can ride the scenario axis."""
+        return np.asarray(scoring.basis(self.score_features(js)))
+
+    def score(self, js: JobSet) -> np.ndarray:
+        """f32[N] ranking score per job under the model's own alpha
+        (higher = scheduled earlier)."""
+        return np.asarray(
+            scoring.score(self.score_features(js), self.alpha))
 
 
 def attach_scores(js: JobSet, model: MLSchedulerModel) -> JobSet:
+    """Bake the model's score (its own alpha) into ``js.score``. The
+    resulting table ranks jobs statically — the pre-training path."""
     js.score = model.score(js)
+    return js
+
+
+def attach_basis(js: JobSet, model: MLSchedulerModel) -> JobSet:
+    """Store the scoring *basis* instead of a baked score.
+
+    ``js.score`` is zeroed and ``js.ml_basis`` set, so the ``ml`` policy key
+    becomes ``-(ml_basis @ Scenario.alpha)`` — fully parameterized by the
+    traced per-scenario alpha vector. ``Scenario.make("ml",
+    alpha=model.alpha)`` then reproduces ``attach_scores`` ranking exactly
+    (same key up to the zeroed static part)."""
+    js.score = np.zeros(len(js), np.float32)
+    js.ml_basis = model.score_basis(js)
     return js

@@ -6,14 +6,56 @@
 prioritization based on predicted system-level impact. Unlike single-
 objective schedulers, this supports trade-offs across throughput, wait time,
 turnaround, and energy."
+
+The score is **linear in alpha**: S = basis(X) @ alpha with
+``basis(X) = exp(1 / sqrt(max(X, 0) + 1))``. That factorization is what
+closes the training loop (paper contribution (5)): the per-job basis matrix
+is computed once and stored in the broadcast ``JobTable.ml_basis``, while
+the alpha vector rides the traced ``Scenario.alpha`` axis — so an entire ES
+population of candidate alphas evaluates as ONE batched ``simulate_sweep``
+rollout (repro.ml.train).
+
+Feature convention (K_SCORE = 4 columns, in order): predicted runtime (s),
+predicted average per-node power (W), predicted job energy (J), requested
+node count — see ``repro.ml.pipeline.MLSchedulerModel.score_basis``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+# Number of scoring features: predicted (runtime s, avg power W, energy J)
+# + node count. Keep in sync with MLSchedulerModel.score_basis.
+K_SCORE = 4
+
+# The paper's hand-set trade-off (Fig. 10a): favor predicted-short,
+# low-power, low-energy jobs, with half weight on size. The training loop
+# treats this as the starting point / baseline to beat.
+DEFAULT_ALPHA = (1.0, 1.0, 1.0, 0.5)
+
+
+def basis(features: jnp.ndarray) -> jnp.ndarray:
+    """Per-job scoring basis: ``exp(1 / sqrt(max(X, 0) + 1))``.
+
+    Args:
+      features: f32[N, K] non-negative predicted metrics + static features
+        (runtime s, power W, energy J, nodes — see module docstring).
+    Returns:
+      f32[N, K] basis matrix, each column in (1, e]: large predicted
+      impact -> values near 1, tiny impact -> values near e. The score of
+      job i under coefficients ``alpha`` is ``basis[i] @ alpha``.
+    """
+    x = jnp.maximum(features, 0.0)
+    return jnp.exp(1.0 / jnp.sqrt(x + 1.0))
+
 
 def score(features: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
-    """features: f32[N, K] non-negative predicted metrics + static features;
-    alpha: f32[K] coefficients. Returns f32[N]."""
-    x = jnp.maximum(features, 0.0)
-    return jnp.sum(alpha * jnp.exp(1.0 / jnp.sqrt(x + 1.0)), axis=-1)
+    """Ranking score S(X) per job (higher = scheduled earlier).
+
+    Args:
+      features: f32[N, K] non-negative predicted metrics + static features.
+      alpha: f32[K] trade-off coefficients (dimensionless; the features are
+        squashed through the basis before weighting).
+    Returns:
+      f32[N] scores; equals ``basis(features) @ alpha`` exactly.
+    """
+    return jnp.sum(alpha * basis(features), axis=-1)

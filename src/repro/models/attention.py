@@ -25,7 +25,7 @@ class KVCache(NamedTuple):
 def init(key, cfg: ArchConfig, layer_prefix: str = ""):
     """Weights use the *padded* head counts (cfg.h_pad / cfg.kv_pad); wo
     rows for padded heads are zeroed so the padded model computes exactly
-    the spec model's function at init (EXPERIMENTS.md §Perf iter 1)."""
+    the spec model's function at init."""
     hd, H, KV, D = cfg.hd, cfg.h_pad, cfg.kv_pad, cfg.d_model
     ks = jax.random.split(key, 5)
     wo = param(ks[3], (H, hd, D), ("heads", "head_dim", "embed"),
@@ -71,7 +71,7 @@ def _sdpa(q, k, v, mask, cfg: ArchConfig):
     TP formulation. The naive grouped reshape [B,S,H,hd]->[B,S,KV,G,hd]
     *breaks* the head sharding whenever KV doesn't divide the model axis
     (XLA reshards and replicates the quadratic attention) — measured 5-13x
-    redundant compute before this change (EXPERIMENTS.md §Perf iter 2).
+    redundant compute before this change.
     The gather keeps q/logits/out sharded by H end-to-end; for MHA it is an
     identity gather that XLA elides.
     """
@@ -81,7 +81,7 @@ def _sdpa(q, k, v, mask, cfg: ArchConfig):
     if g_spec == 1 and KV == H:
         # MHA: skip the identity gather — XLA does not recognize it on a
         # model-sharded kv cache and would all-gather ~100 GB per decode
-        # step (EXPERIMENTS.md §Perf iter 6)
+        # step (avoids a per-step gather)
         kh, vh = k, v
     else:
         head_kv = jnp.arange(H) // g_spec       # [H]

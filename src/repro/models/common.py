@@ -48,7 +48,7 @@ class ArchConfig:
     ssm_state: int = 0
     ssm_heads: int = 0
     conv_kernel: int = 4
-    # TP head padding (beyond-paper optimization, EXPERIMENTS.md §Perf):
+    # TP head padding (beyond-paper optimization):
     # pad q heads to this count (0 = off) so attention shards over the
     # 16-way model axis when the spec head count doesn't divide it. Padded
     # wo rows are zero-initialized, so the padded model computes exactly the

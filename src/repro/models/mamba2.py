@@ -1,7 +1,7 @@
 """Mamba2 (SSD) blocks and the Zamba2 hybrid (arXiv:2411.15242):
 Mamba2 backbone with a *shared* transformer block invoked every
 ``shared_attn_every`` SSM layers (weights shared across invocations; the
-per-invocation LoRA adapters of the real model are omitted — DESIGN.md §2).
+per-invocation LoRA adapters of the real model are omitted).
 
 SSD recurrence per head (state S in R^{P x N}, scalar decay a_t per head):
     S_t = a_t S_{t-1} + (dt_t x_t) (x) B_t

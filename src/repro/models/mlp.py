@@ -1,7 +1,7 @@
 """Feed-forward layers: dense SwiGLU and grouped top-k MoE (GShard-style
 dispatch with capacity, einsum formulation).
 
-MoE design (see DESIGN.md): tokens are routed in *groups* of ``moe_group``
+MoE design: tokens are routed in *groups* of ``moe_group``
 tokens so the dispatch/combine tensors stay VMEM/HBM-friendly:
 [G, Sg, E, C] with C = ceil(top_k * Sg / E * capacity_factor). Expert
 parallelism shards the expert axis over the ``model`` mesh axis when the

@@ -5,7 +5,7 @@ Every parameter is annotated at init with logical axis names (see
 divisibility guard drops a rule per-leaf-dim when the dim does not divide the
 mesh axis (e.g. phi3's 40 heads on a 16-way ``model`` axis, mixtral's 8
 experts), falling back to replication for that dim — every (arch x mesh)
-cell lowers without hand-tuning, and EXPERIMENTS.md records where the
+cell lowers without hand-tuning; the benchmarks record where the
 fallback fired.
 
 Parallelism mapping (production mesh (pod, data, model)):
@@ -201,7 +201,7 @@ def hint(x, *spec):
 # Batch axes for activation hints inside model code. The step builders set
 # this to the mesh's DP axes; without the hint XLA's SPMD partitioner is
 # free to replicate the scan-carried activations, which measured as ~4x
-# redundant per-device flops (EXPERIMENTS.md §Perf iter 3).
+# redundant per-device flops.
 _BATCH_AXES: tuple = ("data",)
 
 
@@ -223,7 +223,7 @@ def hint_axes(x, spec):
     """Constrain with a symbolic spec: 'batch' -> DP axes, 'model' -> TP
     axis, None -> unspecified. Pins layouts across scan bodies so the SPMD
     partitioner doesn't insert per-iteration reshard collective-permutes
-    (EXPERIMENTS.md §Perf iter 5)."""
+    (saves a transpose on the hot path)."""
     resolved = tuple(_BATCH_AXES if a == "batch" else a for a in spec)
     try:
         return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,6 +1,6 @@
 """AdamW with global-norm clipping, cosine schedule, and configurable moment
 dtype (bf16 moments for the 400B MoE so optimizer state fits the pod —
-DESIGN.md §2). Implemented directly (no optax dependency) as pure pytree ops
+no optax in the image). Implemented directly as pure pytree ops
 so the optimizer state inherits parameter shardings leaf-for-leaf.
 """
 from __future__ import annotations

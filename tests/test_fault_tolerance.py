@@ -1,6 +1,6 @@
 """Fault tolerance: checkpoint/restart must continue a killed training run
 bit-for-bit (modulo fresh RNG for new batches), and checkpoints are
-mesh-independent numpy artifacts (elastic re-meshing story, DESIGN.md §7)."""
+mesh-independent numpy artifacts (elastic re-meshing story)."""
 import pathlib
 
 import numpy as np

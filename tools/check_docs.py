@@ -1,10 +1,19 @@
 #!/usr/bin/env python
 """Docs checker: every intra-repo markdown link must resolve.
 
-Scans the repo's *.md files (root + docs/) for inline links and images
-``[text](target)`` and verifies that non-URL targets exist relative to the
-file that references them (anchors are stripped; pure-anchor and mailto /
-http(s) links are skipped). Exit code 1 lists every broken link.
+Two passes:
+
+1. *Markdown links* — scans the repo's *.md files (root + docs/) for
+   inline links and images ``[text](target)`` and verifies that non-URL
+   targets exist relative to the file that references them (anchors are
+   stripped; pure-anchor and mailto / http(s) links are skipped).
+2. *Source references* — scans the Python sources (src/, tools/,
+   benchmarks/, examples/, tests/) for repo-relative ``*.md`` mentions in
+   docstrings and comments (e.g. ``see docs/architecture.md``) and
+   verifies the referenced file exists. This is what catches a docstring
+   citing a design document that was never committed or later renamed.
+
+Exit code 1 lists every broken reference.
 
 CI runs this plus ``python -m doctest docs/*.md`` (the fenced examples in
 the docs are real doctests) — see .github/workflows/ci.yml.
@@ -18,6 +27,10 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+# a markdown-file token (optionally path-qualified); the trailing
+# guard keeps attribute accesses like ``cfg.mdot_kg_s`` from matching
+MD_REF_RE = re.compile(r"(?<![\w.])([\w][\w./-]*\.md)(?![\w])")
+SRC_DIRS = ("src", "tools", "benchmarks", "examples", "tests")
 
 
 def md_files() -> list[pathlib.Path]:
@@ -46,17 +59,44 @@ def check_file(path: pathlib.Path) -> list[str]:
     return errors
 
 
+def py_files() -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for d in SRC_DIRS:
+        p = ROOT / d
+        if p.is_dir():
+            files += sorted(p.rglob("*.py"))
+    return files
+
+
+def check_source(path: pathlib.Path) -> list[str]:
+    """Repo-relative ``*.md`` references in a Python source must exist.
+
+    A bare name (``ROADMAP.md``) resolves against the repo root; a
+    path-qualified one (``docs/architecture.md``) resolves as written."""
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in MD_REF_RE.finditer(text):
+        target = m.group(1)
+        if not (ROOT / target).exists():
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(f"{path.relative_to(ROOT)}:{line}: dangling "
+                          f"doc reference -> {target}")
+    return errors
+
+
 def main() -> int:
     errors = []
     for path in md_files():
         errors += check_file(path)
+    for path in py_files():
+        errors += check_source(path)
     for e in errors:
         print(e, file=sys.stderr)
     if errors:
-        print(f"{len(errors)} broken markdown link(s)", file=sys.stderr)
+        print(f"{len(errors)} broken doc reference(s)", file=sys.stderr)
         return 1
-    print(f"checked {len(md_files())} markdown files: all intra-repo "
-          f"links resolve")
+    print(f"checked {len(md_files())} markdown files and "
+          f"{len(py_files())} python sources: all doc references resolve")
     return 0
 
 
