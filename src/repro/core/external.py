@@ -32,6 +32,12 @@ in-process peer cannot be preempted, so the over-budget answer is
 (``peer.reset`` replay) and a bounded retry; persistent failure raises
 ``BridgeTimeout``. Legacy peers exposing only ``running_at`` are wrapped
 transparently; peers exposing ``poll_wire`` are validated end-to-end.
+
+Out-of-process peers speak the same envelopes over a newline-delimited
+JSON socket: ``core/transport.py`` (``SocketPeer`` / ``SubprocessPeer``)
+carries them across a real process boundary, and
+``tools/reference_peer.py`` is the stdlib-only reference peer. Protocol
+reference: docs/external-scheduling.md.
 """
 from __future__ import annotations
 
@@ -98,15 +104,24 @@ def decode_running(msg, n_jobs: int) -> np.ndarray:
     if msg.get("kind") != WIRE_KIND_RUNNING:
         raise ProtocolError(f"unexpected message kind {msg.get('kind')!r}")
     ids = msg.get("job_ids")
+    if isinstance(ids, (list, tuple)) and \
+            any(isinstance(x, bool) for x in ids):
+        # JSON true/false would silently cast to 1/0 through np.asarray
+        raise ProtocolError("job_ids must be integers, got booleans")
     try:
         arr = np.asarray(ids)
     except Exception as e:  # ragged / object payloads
         raise ProtocolError(f"job_ids not array-like: {e}") from e
+    if arr.ndim != 1:
+        # ndim before the empty-fastpath: a nested-but-empty payload like
+        # [[]] has size 0 and must still be rejected, not silently passed
+        raise ProtocolError(f"job_ids must be a flat integer list, got "
+                            f"ndim={arr.ndim}")
     if arr.size == 0:
         return np.zeros((0,), np.int64)
-    if arr.ndim != 1 or not np.issubdtype(arr.dtype, np.integer):
+    if not np.issubdtype(arr.dtype, np.integer):
         raise ProtocolError(f"job_ids must be a flat integer list, got "
-                            f"ndim={arr.ndim} dtype={arr.dtype}")
+                            f"dtype={arr.dtype}")
     arr = arr.astype(np.int64)
     if arr.min() < 0 or arr.max() >= n_jobs:
         raise ProtocolError(f"job id out of range [0, {n_jobs}): "
@@ -154,20 +169,50 @@ class SchedulerBridge:
     _args: tuple | None = None
 
     def reset(self, system: SystemConfig, jobs: JobSet, t0: float) -> None:
-        self._args = (system, jobs, t0)
-        self.peer.reset(system, jobs, t0)
+        """Resync the peer, retrying transport failures.
 
-    def _reconnect(self) -> None:
+        An out-of-process peer can fail to *come up* (spawn or dial
+        fails, handshake times out) exactly like it can fail mid-poll,
+        so reset gets the same bounded-retry treatment. ``ProtocolError``
+        (wrong version in hello, digest mismatch) is terminal — the peer
+        will keep speaking the wrong dialect."""
+        self._args = (system, jobs, t0)
+        last: BaseException | None = None
+        for attempt in range(self.config.max_retries + 1):
+            try:
+                self.peer.reset(system, jobs, t0)
+                return
+            except ProtocolError:
+                raise
+            except TRANSPORT_ERRORS as e:
+                last = e
+                if attempt < self.config.max_retries:
+                    self.reconnects += 1
+        raise BridgeTimeout(f"peer reset failed after "
+                            f"{self.config.max_retries + 1} attempts: "
+                            f"{last!r}")
+
+    def _reconnect(self) -> str | None:
+        """One reconnect attempt; returns an error note instead of letting
+        a transport failure during the *resync itself* (e.g. a respawned
+        subprocess that fails to dial) escape unwrapped — the poll retry
+        loop owns the budget and converts persistent failure to
+        ``BridgeTimeout``."""
         if self._args is None:
             raise BridgeTimeout("cannot reconnect before reset()")
         self.reconnects += 1
-        self.peer.reset(*self._args)
+        try:
+            self.peer.reset(*self._args)
+            return None
+        except TRANSPORT_ERRORS as e:
+            return f"reconnect failed: {e!r}"
 
     def poll(self, t: float) -> np.ndarray:
         """Running-set ids at ``t``, validated; reconnects on failure."""
         n_jobs = len(self._args[1]) if self._args else 1 << 31
         last = "never polled"
-        for _ in range(self.config.max_retries + 1):
+        for attempt in range(self.config.max_retries + 1):
+            retryable = attempt < self.config.max_retries
             t_call = time.perf_counter()
             try:
                 if hasattr(self.peer, "poll_wire"):
@@ -179,14 +224,16 @@ class SchedulerBridge:
                 raise                       # malformed speech: not retryable
             except TRANSPORT_ERRORS as e:   # connection-style failure
                 last = f"poll raised {e!r}"
-                self._reconnect()
+                if retryable:               # no pointless trailing respawn
+                    last = self._reconnect() or last
                 continue
             took = time.perf_counter() - t_call
             if took > self.config.timeout_s:
                 # in-process peers cannot be preempted: the budget is
                 # enforced post-hoc and the stale answer discarded
                 last = f"poll took {took:.3f}s > {self.config.timeout_s}s"
-                self._reconnect()
+                if retryable:
+                    last = self._reconnect() or last
                 continue
             return ids
         raise BridgeTimeout(f"peer unusable after "

@@ -1,0 +1,480 @@
+"""Out-of-process scheduler peers: socket/subprocess transport (paper §4.2).
+
+The bridge in ``core/external.py`` speaks a versioned wire format
+(``WIRE_VERSION`` envelopes) but until now every peer ran in-process.
+This module carries those same envelopes across a real process boundary:
+newline-delimited JSON frames (one envelope per line, UTF-8) over a
+Unix-domain or TCP socket, so a second scheduler implementation — any
+language that can read lines of JSON — can couple to the twin.
+
+Wire protocol (full reference: docs/external-scheduling.md)
+-----------------------------------------------------------
+Every frame is one JSON object terminated by ``\\n``; every object
+carries ``version`` (must equal ``WIRE_VERSION``) and ``kind``:
+
+=================  =========  ==============================================
+kind               direction  payload
+=================  =========  ==============================================
+``hello``          peer→twin  sent once on connect: ``name``, optional ``pid``
+``reset``          twin→peer  ``t0``, ``policy``, ``backfill``,
+                              ``system`` (``n_nodes``, ``dt``, ``name``),
+                              ``jobs`` (submit/limit/wall/nodes/priority/
+                              account columns), ``system_digest``,
+                              ``job_digest``
+``reset_ack``      peer→twin  echoes both digests *recomputed by the peer*
+                              plus ``n_jobs``
+``poll``           twin→peer  ``t`` — simulated seconds
+``running_set``    peer→twin  ``job_ids`` (``external.encode_running``)
+``schedule_req``   twin→peer  sequential mode: ask for the full schedule
+``schedule``       peer→twin  ``start``: per-job start seconds, ``null``
+                              for never-started
+``bye``            twin→peer  clean shutdown request
+``error``          peer→twin  ``message`` — surfaced as ``ProtocolError``
+=================  =========  ==============================================
+
+The handshake is digest-checked: the twin sends canonical whole-second
+job columns (the SWF contract — ``datasets/swf.py``) and the sha256 the
+peer must recompute from *what it actually deserialized*; a mismatched
+echo raises ``ProtocolError`` before any poll touches engine state.
+
+Failure model
+-------------
+Framing/parse problems (garbage, truncated line, over-long frame, wrong
+version, digest mismatch) raise ``ProtocolError`` — the peer speaks the
+wrong dialect and is not retried. Connection problems (EOF from a dead
+peer, socket timeout from a hung one) raise ``ConnectionError`` /
+``TimeoutError`` — ``SchedulerBridge`` heals those by calling ``reset``
+again, which for these peers means *re-dial* (``SocketPeer``) or
+*kill, reap and respawn* (``SubprocessPeer``) followed by a full state
+resync. ``SubprocessPeer`` keeps every ``Popen`` it ever spawned in
+``spawned`` and reaps them all on ``close()`` — no zombies, ever.
+
+``tools/reference_peer.py`` is the stdlib-only reference implementation
+of the peer side (FastSimLike semantics), runnable as
+``python -m tools.reference_peer``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shlex
+import shutil
+import socket
+import subprocess
+import tempfile
+from dataclasses import dataclass, field
+from typing import IO
+
+import numpy as np
+
+from repro.core.external import (WIRE_VERSION, ProtocolError, decode_running)
+from repro.datasets.base import JobSet
+from repro.systems.config import SystemConfig
+
+# Sized for the biggest legitimate frame: a reset envelope carries six
+# full job columns (~100 bytes/job of JSON), so ~1e6 jobs fits with
+# headroom. Anything past this is a confused peer, not a big answer —
+# and write_frame enforces the same cap outbound, so an oversized twin
+# payload fails loudly here instead of as a peer-side parse error.
+MAX_FRAME_BYTES = 256 << 20
+
+
+# ---------------------------------------------------------------------------
+# Canonical digests (handshake).
+# ---------------------------------------------------------------------------
+def _digest(obj) -> str:
+    """sha256 over the canonical (sorted-keys, no-spaces) JSON of ``obj``."""
+    blob = json.dumps(obj, separators=(",", ":"), sort_keys=True)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+def system_digest(system: SystemConfig) -> str:
+    """Digest of the system parameters a peer's schedule depends on."""
+    return _digest({"v": WIRE_VERSION, "n_nodes": int(system.n_nodes),
+                    "dt": float(system.dt)})
+
+
+def job_digest(jobs: JobSet) -> str:
+    """Digest of the SWF-preserved job columns, whole-second rounded.
+
+    Only the columns the SWF roundtrip guarantees (submit / limit / wall /
+    nodes / account — ``datasets/swf.py``) participate, rounded to whole
+    seconds with banker's rounding (what both ``round`` and the SWF
+    writer's ``:.0f`` do), so a peer that loaded the same trace from an
+    SWF file computes the same digest as one fed over the wire.
+    """
+    def whole(col):  # np.round is half-even, same as round() peer-side
+        return np.round(np.asarray(col)).astype(np.int64).tolist()
+
+    return _digest({"v": WIRE_VERSION, "jobs": {
+        "submit": whole(jobs.submit),
+        "limit": whole(jobs.limit),
+        "wall": whole(jobs.wall),
+        "nodes": np.asarray(jobs.nodes).astype(np.int64).tolist(),
+        "account": np.asarray(jobs.account).astype(np.int64).tolist(),
+    }})
+
+
+# ---------------------------------------------------------------------------
+# NDJSON framing.
+# ---------------------------------------------------------------------------
+def write_frame(wfile: IO[bytes], msg: dict) -> None:
+    """Write one envelope as a newline-terminated JSON frame and flush.
+
+    Enforces ``MAX_FRAME_BYTES`` outbound too: a compliant peer would
+    reject an over-long line anyway, so failing here turns a confusing
+    remote parse error into a local, diagnosable one."""
+    line = json.dumps(msg, separators=(",", ":")).encode("utf-8") + b"\n"
+    if len(line) > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"outbound {msg.get('kind')!r} frame is {len(line)} bytes, "
+            f"over the {MAX_FRAME_BYTES}-byte protocol cap")
+    wfile.write(line)
+    wfile.flush()
+
+
+def read_frame(rfile: IO[bytes]) -> dict:
+    """Read one envelope; classify every way a peer can get it wrong.
+
+    EOF (peer died) raises ``ConnectionError`` — a transport failure the
+    bridge may heal by reconnecting. A frame that *arrives* but is
+    over-long, truncated (no newline before EOF), non-JSON, or not an
+    object raises ``ProtocolError`` — broken speech is not retried.
+    Socket timeouts propagate as ``TimeoutError`` from the underlying
+    file object.
+    """
+    line = rfile.readline(MAX_FRAME_BYTES + 1)
+    if not line:
+        raise ConnectionError("peer closed the connection (EOF)")
+    if len(line) > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame exceeds {MAX_FRAME_BYTES} bytes")
+    if not line.endswith(b"\n"):
+        raise ProtocolError("truncated frame: EOF before newline")
+    try:
+        msg = json.loads(line)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ProtocolError(f"frame is not JSON: {e}") from e
+    if not isinstance(msg, dict):
+        raise ProtocolError(f"frame must be a JSON object, got "
+                            f"{type(msg).__name__}")
+    return msg
+
+
+def decode_schedule(msg: dict, n_jobs: int) -> np.ndarray:
+    """Validate a ``schedule`` envelope; return start times (inf = never)."""
+    if msg.get("version") != WIRE_VERSION:
+        raise ProtocolError(f"wire version mismatch: peer speaks "
+                            f"{msg.get('version')!r}")
+    if msg.get("kind") != "schedule":
+        raise ProtocolError(f"unexpected message kind {msg.get('kind')!r}")
+    start = msg.get("start")
+    if not isinstance(start, list) or len(start) != n_jobs:
+        raise ProtocolError(f"schedule must list {n_jobs} start times, got "
+                            f"{type(start).__name__}"
+                            f"{'' if not isinstance(start, list) else f'[{len(start)}]'}")
+    out = np.full((n_jobs,), np.inf, np.float64)
+    for j, s in enumerate(start):
+        if s is None:
+            continue
+        if not isinstance(s, (int, float)) or isinstance(s, bool):
+            raise ProtocolError(f"schedule start[{j}] must be a number or "
+                                f"null, got {type(s).__name__}")
+        try:
+            val = float(s)
+        except OverflowError as e:  # arbitrary-precision JSON integer
+            raise ProtocolError(f"schedule start[{j}] out of float "
+                                f"range") from e
+        if not np.isfinite(val):
+            # json.loads accepts non-standard NaN/Infinity tokens; a
+            # never-started job is spelled null, so a non-finite number
+            # is a confused peer, not a big start time
+            raise ProtocolError(f"schedule start[{j}] must be finite or "
+                                f"null, got {s!r}")
+        out[j] = val
+    return out
+
+
+def parse_address(addr: str) -> tuple[int, str | tuple[str, int]]:
+    """``unix:/path`` or a bare path → AF_UNIX; ``host:port`` → TCP."""
+    if addr.startswith("unix:"):
+        return socket.AF_UNIX, addr[len("unix:"):]
+    if addr.startswith("tcp:"):
+        addr = addr[len("tcp:"):]
+    if "/" in addr:
+        return socket.AF_UNIX, addr
+    host, _, port = addr.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"address must be unix:/path or host:port, "
+                         f"got {addr!r}")
+    return socket.AF_INET, (host, int(port))
+
+
+def format_address(family: int, sockaddr) -> str:
+    if family == getattr(socket, "AF_UNIX", -1):
+        return f"unix:{sockaddr}"
+    host, port = sockaddr
+    return f"{host}:{port}"
+
+
+# ---------------------------------------------------------------------------
+# Client side: ExternalScheduler over a socket.
+# ---------------------------------------------------------------------------
+@dataclass
+class SocketPeer:
+    """``ExternalScheduler`` whose brain lives across a socket.
+
+    ``reset`` (re)establishes the session from scratch — dial, ``hello``
+    handshake, digest-checked ``reset`` exchange — which is exactly the
+    resync ``SchedulerBridge`` needs its reconnect path to perform, so a
+    mid-stream death or hang heals transparently. Plugs into
+    ``run_plugin_mode`` / ``run_sequential_mode`` unchanged (the process
+    boundary is behaviorally invisible).
+    """
+    address: str | None = None
+    policy: str = "fcfs"
+    backfill: str = "firstfit"
+    timeout_s: float = 30.0            # per-reply socket budget
+    handshake_timeout_s: float = 20.0  # connect + hello + reset_ack budget
+    peer_hello: dict | None = None
+    _sock: socket.socket | None = None
+    _rfile: IO[bytes] | None = None
+    _wfile: IO[bytes] | None = None
+    _n_jobs: int = 0
+
+    # -- connection lifecycle ----------------------------------------------
+    def _dial(self) -> socket.socket:
+        if self.address is None:
+            raise ValueError("SocketPeer needs an address")
+        family, sockaddr = parse_address(self.address)
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        sock.settimeout(self.handshake_timeout_s)
+        sock.connect(sockaddr)
+        return sock
+
+    def _attach(self, sock: socket.socket) -> None:
+        """Adopt a connected socket: buffered files + hello validation."""
+        self._sock = sock
+        self._rfile = sock.makefile("rb")
+        self._wfile = sock.makefile("wb")
+        hello = read_frame(self._rfile)
+        if hello.get("kind") != "hello":
+            raise ProtocolError(f"expected hello, got "
+                                f"{hello.get('kind')!r}")
+        if hello.get("version") != WIRE_VERSION:
+            raise ProtocolError(
+                f"wire version mismatch: peer speaks "
+                f"{hello.get('version')!r}, bridge speaks {WIRE_VERSION}")
+        self.peer_hello = hello
+
+    def _teardown_connection(self) -> None:
+        for f in (self._wfile, self._rfile, self._sock):
+            if f is not None:
+                try:
+                    f.close()
+                except OSError:
+                    pass
+        self._sock = self._rfile = self._wfile = None
+
+    def _establish(self) -> None:
+        self._attach(self._dial())
+
+    # -- ExternalScheduler protocol ----------------------------------------
+    def reset(self, system: SystemConfig, jobs: JobSet, t0: float) -> None:
+        """Fresh session: (re)connect, handshake, digest-checked resync."""
+        self._teardown_connection()
+        try:
+            self._establish()
+            self._n_jobs = len(jobs)
+            sys_d, job_d = system_digest(system), job_digest(jobs)
+            self._send({
+                "version": WIRE_VERSION, "kind": "reset", "t0": float(t0),
+                "policy": self.policy, "backfill": self.backfill,
+                "system": {"n_nodes": int(system.n_nodes),
+                           "dt": float(system.dt), "name": system.name},
+                "system_digest": sys_d, "job_digest": job_d,
+                "jobs": {
+                    # .tolist() yields native floats/ints losslessly and
+                    # avoids per-element numpy-scalar boxing on big sets
+                    "submit": np.asarray(jobs.submit, np.float64).tolist(),
+                    "limit": np.asarray(jobs.limit, np.float64).tolist(),
+                    "wall": np.asarray(jobs.wall, np.float64).tolist(),
+                    "nodes": np.asarray(jobs.nodes,
+                                        np.int64).tolist(),
+                    "priority": np.asarray(jobs.priority,
+                                           np.float64).tolist(),
+                    "account": np.asarray(jobs.account,
+                                          np.int64).tolist(),
+                },
+            })
+            ack = self._recv()
+            if ack.get("kind") == "error":
+                raise ProtocolError(f"peer rejected reset: "
+                                    f"{ack.get('message')!r}")
+            if ack.get("kind") != "reset_ack":
+                raise ProtocolError(f"expected reset_ack, got "
+                                    f"{ack.get('kind')!r}")
+            if ack.get("version") != WIRE_VERSION:
+                raise ProtocolError(f"wire version mismatch in reset_ack: "
+                                    f"{ack.get('version')!r}")
+            if ack.get("n_jobs") != len(jobs):
+                raise ProtocolError(f"peer deserialized {ack.get('n_jobs')!r}"
+                                    f" jobs, sent {len(jobs)}")
+            if ack.get("system_digest") != sys_d or \
+                    ack.get("job_digest") != job_d:
+                raise ProtocolError(
+                    "handshake digest mismatch: the peer's view of the "
+                    "(system, jobs) state diverged from the twin's — "
+                    f"system {ack.get('system_digest')!r} vs {sys_d!r}, "
+                    f"jobs {ack.get('job_digest')!r} vs {job_d!r}")
+            # handshake (hello + digest-checked reset_ack, which may
+            # include the peer computing its whole schedule) ran under
+            # handshake_timeout_s; polls get the tighter per-call budget
+            self._sock.settimeout(self.timeout_s)
+        except ProtocolError:
+            # broken speech is terminal for the session: don't leak the
+            # half-open connection (or, in SubprocessPeer, the process)
+            self._teardown_connection()
+            raise
+
+    def poll_wire(self, t: float) -> dict:
+        """One poll round-trip; returns the raw envelope for the bridge."""
+        self._send({"version": WIRE_VERSION, "kind": "poll", "t": float(t)})
+        reply = self._recv()
+        if reply.get("kind") == "error":
+            raise ProtocolError(f"peer error: {reply.get('message')!r}")
+        return reply
+
+    def running_at(self, t: float) -> np.ndarray:
+        return decode_running(self.poll_wire(t), self._n_jobs or (1 << 31))
+
+    @property
+    def start(self) -> np.ndarray:
+        """Full schedule (sequential mode): fetched over the wire."""
+        self._send({"version": WIRE_VERSION, "kind": "schedule_req"})
+        reply = self._recv()
+        if reply.get("kind") == "error":
+            raise ProtocolError(f"peer error: {reply.get('message')!r}")
+        return decode_schedule(reply, self._n_jobs)
+
+    # -- plumbing -----------------------------------------------------------
+    def _send(self, msg: dict) -> None:
+        if self._wfile is None:
+            raise ConnectionError("not connected (reset first)")
+        write_frame(self._wfile, msg)
+
+    def _recv(self) -> dict:
+        if self._rfile is None:
+            raise ConnectionError("not connected (reset first)")
+        return read_frame(self._rfile)
+
+    def close(self) -> None:
+        """Best-effort ``bye``, then drop the connection."""
+        if self._wfile is not None:
+            try:
+                self._send({"version": WIRE_VERSION, "kind": "bye"})
+            except (OSError, ConnectionError):
+                pass
+        self._teardown_connection()
+
+    def __enter__(self) -> "SocketPeer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+@dataclass
+class SubprocessPeer(SocketPeer):
+    """``SocketPeer`` that owns its peer process.
+
+    The twin listens on a fresh Unix-domain socket (TCP loopback where
+    AF_UNIX is unavailable), spawns ``cmd`` with ``--connect <address>``
+    appended, and accepts the peer's dial-in within
+    ``handshake_timeout_s`` — no bind race. Bridge-driven ``reset``
+    kills, *reaps* and respawns the process (full resync); ``close()``
+    tears everything down and asserts nothing is left unreaped. Every
+    ``Popen`` ever spawned stays in ``spawned`` so tests can verify no
+    zombies survive any fault path.
+    """
+    cmd: str | list[str] = ""
+    cwd: str | None = None
+    spawned: list = field(default_factory=list)
+    _proc: subprocess.Popen | None = None
+    _tmpdir: str | None = None
+
+    def _spawn_cmd(self) -> list[str]:
+        argv = shlex.split(self.cmd) if isinstance(self.cmd, str) \
+            else list(self.cmd)
+        if not argv:
+            raise ValueError("SubprocessPeer needs a peer command")
+        return argv
+
+    def _establish(self) -> None:
+        argv = self._spawn_cmd()  # validate before binding anything
+        self._tmpdir = tempfile.mkdtemp(prefix="repro-peer-")
+        if hasattr(socket, "AF_UNIX"):
+            listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            listener.bind(os.path.join(self._tmpdir, "peer.sock"))
+            address = f"unix:{os.path.join(self._tmpdir, 'peer.sock')}"
+        else:  # pragma: no cover - non-POSIX fallback
+            listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            listener.bind(("127.0.0.1", 0))
+            address = "127.0.0.1:%d" % listener.getsockname()[1]
+        listener.listen(1)
+        listener.settimeout(self.handshake_timeout_s)
+        log = open(os.path.join(self._tmpdir, "peer.log"), "ab")
+        try:
+            self._proc = subprocess.Popen(
+                argv + ["--connect", address],
+                stdin=subprocess.DEVNULL, stdout=log, stderr=log,
+                cwd=self.cwd)
+        except OSError:
+            # spawn itself failed (bad command): nothing to accept, and
+            # the retry must not leak this attempt's listener or tmpdir
+            listener.close()
+            self._reap()
+            raise
+        finally:
+            log.close()
+        self.spawned.append(self._proc)
+        try:
+            conn, _ = listener.accept()
+        except (socket.timeout, TimeoutError) as e:
+            self._reap()
+            raise TimeoutError(
+                f"peer {argv!r} did not connect within "
+                f"{self.handshake_timeout_s}s") from e
+        finally:
+            listener.close()
+        conn.settimeout(self.handshake_timeout_s)
+        self._attach(conn)
+
+    def _reap(self) -> None:
+        """Terminate (escalating to kill) and wait() the child, if any;
+        always drops this attempt's tmpdir, spawned or not."""
+        proc = self._proc
+        self._proc = None
+        if proc is not None:
+            if proc.poll() is None:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=5.0)
+                except subprocess.TimeoutExpired:  # pragma: no cover
+                    proc.kill()
+                    proc.wait()
+            else:
+                proc.wait()  # already dead: collect the exit status
+        if self._tmpdir is not None:
+            shutil.rmtree(self._tmpdir, ignore_errors=True)
+            self._tmpdir = None
+
+    def _teardown_connection(self) -> None:
+        super()._teardown_connection()
+        self._reap()
+
+    def __del__(self) -> None:  # safety net; close() is the contract
+        try:
+            self._teardown_connection()
+        except Exception:
+            pass

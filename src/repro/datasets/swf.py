@@ -17,11 +17,14 @@ from repro.datasets.base import JobSet
 def write_swf(js: JobSet, path: str) -> None:
     """Export a ``JobSet`` as SWF rows (times in whole seconds; the wait
     column is derived from the recorded start). Power/utilization channels
-    are dropped — SWF has no slot for them."""
+    are dropped — SWF has no slot for them. Jobs that never started
+    (non-finite ``rec_start``) get the SWF missing-value wait of ``-1``
+    instead of a non-numeric ``inf`` token."""
     with open(path, "w") as f:
         f.write("; SWF export from repro (S-RAPS JAX twin)\n")
         for i in range(len(js)):
-            wait = max(js.rec_start[i] - js.submit[i], 0.0)
+            wait = max(js.rec_start[i] - js.submit[i], 0.0) \
+                if np.isfinite(js.rec_start[i]) else -1.0
             f.write(f"{i + 1} {js.submit[i]:.0f} {wait:.0f} "
                     f"{js.wall[i]:.0f} {js.nodes[i]} 0 0 {js.nodes[i]} "
                     f"{js.limit[i]:.0f} 0 1 {js.account[i] + 1} "
@@ -52,7 +55,9 @@ def read_swf(path: str, node_power_w: float = 500.0,
     a = np.asarray(rows)
     submit = a[:, 0]
     wall = np.maximum(a[:, 1], 1.0)
-    wait = a[:, 2]
+    # SWF marks an unknown/never-happened wait as -1: those jobs never
+    # started, which the JobSet contract spells rec_start = inf
+    wait = np.where(a[:, 2] >= 0, a[:, 2], np.inf)
     nodes = np.maximum(a[:, 3], 1).astype(np.int64)
     limit = np.where(a[:, 4] > 0, a[:, 4], wall * 2)
     account = (a[:, 5].astype(np.int64) - 1) % 64

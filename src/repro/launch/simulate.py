@@ -22,6 +22,7 @@ import json
 import pathlib
 import secrets
 import time
+import types
 
 import numpy as np
 
@@ -58,7 +59,10 @@ def main(argv=None):
                     choices=["default", "experimental", "fastsim",
                              "scheduleflow"])
     ap.add_argument("--policy", default="replay")
-    ap.add_argument("--backfill", default="none")
+    ap.add_argument("--backfill", default=None,
+                    help="backfill mode (default: none for built-in "
+                         "schedulers, firstfit for external peers; an "
+                         "explicit value always wins)")
     ap.add_argument("-ff", "--fastforward", default="0", type=str,
                     help="simulation start offset (s/m/h/d suffix)")
     ap.add_argument("-t", "--time", default="6h", type=str,
@@ -76,6 +80,23 @@ def main(argv=None):
                     help="tower cells out for maintenance: a number "
                          "(every hall) or comma list (per hall), e.g. "
                          "'2,0,0,0'")
+    ap.add_argument("--external-cmd", default=None,
+                    help="couple an out-of-process scheduler: spawn this "
+                         "command as a subprocess peer (NDJSON socket "
+                         "wire protocol, docs/external-scheduling.md), "
+                         "e.g. 'python -m tools.reference_peer'")
+    ap.add_argument("--external-socket", default=None,
+                    help="couple a peer already listening at unix:/path "
+                         "or host:port (see tools/reference_peer.py "
+                         "--listen)")
+    ap.add_argument("--external-mode", default="plugin",
+                    choices=["plugin", "sequential"],
+                    help="coupling mode for --external-cmd/--external-"
+                         "socket (paper §4.2: per-step polling vs "
+                         "schedule-then-replay)")
+    ap.add_argument("--external-timeout", type=float, default=30.0,
+                    help="per-poll wall budget (s) for the external "
+                         "bridge; also the socket recv timeout")
     ap.add_argument("--accounts", action="store_true")
     ap.add_argument("--accounts-json", default=None)
     ap.add_argument("--ml-alpha", default=None,
@@ -143,7 +164,39 @@ def main(argv=None):
         accounts = acct_mod.load_json(args.accounts_json)
 
     wall0 = time.perf_counter()
-    if args.scheduler in ("fastsim", "scheduleflow"):
+    backfill_cli = args.backfill or "none"
+    if args.external_cmd or args.external_socket:
+        from repro.core import transport as tr
+        policy = args.policy if args.policy != "replay" else "fcfs"
+        # an explicit --backfill (including "none") reaches the peer;
+        # only the unset default maps to FastSimLike's firstfit
+        backfill = args.backfill or "firstfit"
+        if args.external_cmd:
+            peer = tr.SubprocessPeer(cmd=args.external_cmd, policy=policy,
+                                     backfill=backfill,
+                                     timeout_s=args.external_timeout)
+        else:
+            peer = tr.SocketPeer(address=args.external_socket,
+                                 policy=policy, backfill=backfill,
+                                 timeout_s=args.external_timeout)
+        ext_scen = T.Scenario.make("replay", cells_offline=cells_offline)
+        try:
+            if args.external_mode == "sequential":
+                # one-shot coupling: the peer is driven directly (the
+                # bridge's poll retry policy has nothing to wrap here)
+                final, hist = ext.run_sequential_mode(sys_, js, peer,
+                                                      t0, t1, scen=ext_scen)
+            else:
+                bridge = ext.SchedulerBridge(
+                    peer, ext.BridgeConfig(timeout_s=args.external_timeout))
+                final, hist, _ = ext.run_plugin_mode(sys_, js, bridge,
+                                                     t0, t1, scen=ext_scen)
+        finally:
+            peer.close()
+        if isinstance(hist, dict):  # plugin mode returns a dict of arrays
+            hist = types.SimpleNamespace(**hist)
+        runs = [((policy, f"external:{args.external_mode}"), final, hist)]
+    elif args.scheduler in ("fastsim", "scheduleflow"):
         sched = ext.FastSimLike(policy=args.policy if args.policy != "replay"
                                 else "fcfs") \
             if args.scheduler == "fastsim" else ext.ScheduleFlowLike()
@@ -154,13 +207,8 @@ def main(argv=None):
             if args.scheduler == "fastsim" else \
             ext.run_plugin_mode(sys_, js, sched, t0, t1,
                                 scen=ext_scen)[:2]
-        if isinstance(hist, dict):
-            class H:  # plugin mode returns a dict of arrays
-                pass
-            h = H()
-            for k, v in hist.items():
-                setattr(h, k, v)
-            hist = h
+        if isinstance(hist, dict):  # plugin mode returns a dict of arrays
+            hist = types.SimpleNamespace(**hist)
         runs = [((args.policy, "external"), final, hist)]
     elif args.sweep:
         specs = []
@@ -180,16 +228,16 @@ def main(argv=None):
                 for i, (p, b) in enumerate(specs)]
     elif args.cells_offline:
         # maintenance knob is traced: run the traced-scenario engine
-        scen = T.Scenario.make(args.policy, args.backfill,
+        scen = T.Scenario.make(args.policy, backfill_cli,
                                cells_offline=cells_offline)
         final, hist = eng.simulate(sys_, table, scen, t0, t1, accounts)
-        runs = [((args.policy, args.backfill), final, hist)]
+        runs = [((args.policy, backfill_cli), final, hist)]
     else:
         # single-policy runs take the static fast path (policy/backfill are
         # compile-time constants; docs/architecture.md)
         final, hist = eng.simulate_static(sys_, table, args.policy,
-                                          args.backfill, t0, t1, accounts)
-        runs = [((args.policy, args.backfill), final, hist)]
+                                          backfill_cli, t0, t1, accounts)
+        runs = [((args.policy, backfill_cli), final, hist)]
     wall = time.perf_counter() - wall0
 
     for (p, b), final, hist in runs:

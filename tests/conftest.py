@@ -5,6 +5,17 @@ from repro.datasets.synthetic import WorkloadSpec, generate
 from repro.systems.config import get_system
 
 
+def pytest_configure(config):
+    # pytest-timeout provides enforcement in CI (ci.yml passes
+    # --timeout); registering the marker keeps plugin-less local runs
+    # warning-free so the subprocess tests stay runnable anywhere
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): hard per-test deadline, enforced by "
+        "pytest-timeout where installed (kills a deadlocked bridge "
+        "instead of stalling the suite)")
+
+
 @pytest.fixture(scope="session")
 def small_system():
     return get_system("marconi100").scaled(64)

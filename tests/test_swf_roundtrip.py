@@ -1,0 +1,97 @@
+"""SWF export/import roundtrip regression (Chapin et al. [13]).
+
+``write_swf`` → ``read_swf`` must preserve the scheduling-relevant
+columns (submit / wall / nodes / limit / account) within whole-second
+rounding: this is the dataloader contract the out-of-process handshake's
+job digest (``core/transport.job_digest``) is computed over, so drift
+here silently breaks digest-checked peer resyncs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import transport as tr
+from repro.datasets.base import JobSet
+from repro.datasets.swf import read_swf, write_swf
+
+
+def synth_jobset(seed=0, n=50, n_accounts=32):
+    rng = np.random.default_rng(seed)
+    submit = np.sort(rng.uniform(0.0, 86400.0, n))
+    wall = rng.uniform(60.0, 7200.0, n)
+    nodes = rng.integers(1, 128, n)
+    wait = rng.uniform(0.0, 3600.0, n)
+    rec_start = submit + wait
+    # a tail of jobs that never started (SWF wait = -1 on export)
+    rec_start[-3:] = np.inf
+    J = n
+    return JobSet(submit=submit, limit=wall * rng.uniform(1.1, 3.0, n),
+                  wall=wall, nodes=nodes.astype(np.int64),
+                  priority=rng.uniform(0, 10, n),
+                  account=rng.integers(0, n_accounts, n),
+                  rec_start=rec_start,
+                  power_prof=np.full((J, 1), 500.0, np.float32),
+                  util_prof=np.full((J, 1), 0.7, np.float32),
+                  name="synthetic")
+
+
+def test_roundtrip_preserves_columns_within_rounding(tmp_path):
+    js = synth_jobset(seed=3)
+    path = str(tmp_path / "trace.swf")
+    write_swf(js, path)
+    back = read_swf(path)
+    assert len(back) == len(js)
+    # :.0f export rounds each time to the nearest whole second
+    assert np.abs(back.submit - js.submit).max() <= 0.5
+    assert np.abs(back.wall - js.wall).max() <= 0.5
+    assert np.abs(back.limit - js.limit).max() <= 0.5
+    assert np.array_equal(back.nodes, js.nodes)
+    assert np.array_equal(back.account, js.account)
+
+
+def test_roundtrip_preserves_never_started_jobs(tmp_path):
+    """inf rec_start must survive as inf, not parse as a bogus wait."""
+    js = synth_jobset(seed=4)
+    path = str(tmp_path / "trace.swf")
+    write_swf(js, path)
+    back = read_swf(path)
+    assert (np.isfinite(back.rec_start) == np.isfinite(js.rec_start)).all()
+    fin = np.isfinite(js.rec_start)
+    # submit and wait each round independently: at most 1 s of drift
+    assert np.abs(back.rec_start[fin] - js.rec_start[fin]).max() <= 1.0
+    # and the file itself contains no inf/nan tokens (SWF is numeric)
+    text = (tmp_path / "trace.swf").read_text()
+    assert "inf" not in text and "nan" not in text
+
+
+def test_roundtrip_preserves_job_digest(tmp_path):
+    """The handshake digest is whole-second canonical, so an SWF trip
+    (which rounds with the same half-even rule) must not change it."""
+    js = synth_jobset(seed=5)
+    path = str(tmp_path / "trace.swf")
+    write_swf(js, path)
+    back = read_swf(path)
+    assert tr.job_digest(back) == tr.job_digest(js)
+
+
+def test_read_swf_skips_comments_and_short_rows(tmp_path):
+    path = tmp_path / "messy.swf"
+    path.write_text(
+        "; header comment\n"
+        "\n"
+        "1 2 3\n"  # short row: ignored
+        "1 100 50 3600 16 0 0 16 7200 0 1 5 5 0 0 0 0 0\n")
+    js = read_swf(str(path))
+    assert len(js) == 1
+    assert js.submit[0] == 100.0 and js.wall[0] == 3600.0
+    assert js.nodes[0] == 16 and js.limit[0] == 7200.0
+    assert js.account[0] == 4
+    assert js.rec_start[0] == 150.0
+
+
+def test_read_swf_falls_back_to_allocated_procs(tmp_path):
+    """Requested procs 0/missing -> allocated procs column (SWF spec)."""
+    path = tmp_path / "alloc.swf"
+    path.write_text("1 0 0 600 8 0 0 0 0 0 1 1 1 0 0 0 0 0\n")
+    js = read_swf(str(path))
+    assert js.nodes[0] == 8
+    assert js.limit[0] == 1200.0  # missing limit -> 2x runtime fallback

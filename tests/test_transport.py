@@ -1,0 +1,396 @@
+"""Out-of-process peer transport: conformance + fault injection.
+
+The conformance half runs the *real* ``tools/reference_peer.py``
+subprocess end-to-end and asserts the process boundary is behaviorally
+invisible: plugin-mode telemetry must match the in-process
+``FastSimLike`` bit-for-bit on the same seed. The fault half drives the
+bridge through every way a peer can go wrong — dies mid-stream, hangs
+past the budget, writes garbage or truncated frames, speaks the wrong
+wire version — and asserts the failure surfaces as ``ProtocolError`` /
+``BridgeTimeout`` (never a hang) and that no peer process is left
+unreaped (no zombies).
+"""
+import importlib.util
+import io
+import pathlib
+import socket
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import external as ext
+from repro.core import transport as tr
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.systems.config import get_system
+
+pytestmark = pytest.mark.timeout(180)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+PEER = [sys.executable, str(ROOT / "tools" / "reference_peer.py")]
+SYS = get_system("frontier").scaled(64)
+
+
+def load_peer_module():
+    """Import tools/reference_peer.py by path (tests run from src/)."""
+    spec = importlib.util.spec_from_file_location(
+        "reference_peer", ROOT / "tools" / "reference_peer.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def make_jobs(seed=0, n=30):
+    spec = WorkloadSpec(n_jobs=n, duration_s=2 * 3600.0, load=1.2,
+                        trace_len=4, seed=seed)
+    return generate(SYS, spec)
+
+
+def make_peer(*fault, **kw):
+    cmd = PEER + (["--fault", fault[0]] if fault else [])
+    kw.setdefault("handshake_timeout_s", 30.0)
+    return tr.SubprocessPeer(cmd=cmd, **kw)
+
+
+def assert_reaped(peer):
+    """Every process the peer ever spawned has been wait()ed."""
+    assert peer._proc is None, "peer process still attached after close"
+    assert peer.spawned, "no peer process was ever spawned"
+    for p in peer.spawned:
+        assert p.returncode is not None, \
+            f"pid {p.pid} never reaped (zombie)"
+
+
+# ---------------------------------------------------------------------------
+# Conformance: the process boundary must be behaviorally invisible.
+# ---------------------------------------------------------------------------
+def test_subprocess_plugin_mode_matches_in_process_fastsim():
+    js = make_jobs(seed=21)
+    t1 = 1800.0
+    inproc = ext.FastSimLike(policy="fcfs", backfill="firstfit")
+    _, h_ref, _ = ext.run_plugin_mode(SYS, js, inproc, 0.0, t1)
+    peer = make_peer(policy="fcfs", backfill="firstfit")
+    try:
+        _, h_sub, _ = ext.run_plugin_mode(SYS, js, peer, 0.0, t1)
+    finally:
+        peer.close()
+    assert_reaped(peer)
+    assert set(h_ref) == set(h_sub)
+    for k in h_ref:
+        assert np.array_equal(np.asarray(h_ref[k]), np.asarray(h_sub[k])), \
+            f"telemetry channel {k!r} diverged across the process boundary"
+
+
+def test_subprocess_schedule_matches_in_process_event_schedule():
+    """Sequential mode: the peer's full schedule equals FastSimLike's."""
+    js = make_jobs(seed=22, n=40)
+    inproc = ext.FastSimLike(policy="sjf", backfill="firstfit")
+    inproc.reset(SYS, js, 0.0)
+    peer = make_peer(policy="sjf", backfill="firstfit")
+    try:
+        peer.reset(SYS, js, 0.0)
+        remote_start = peer.start
+    finally:
+        peer.close()
+    assert_reaped(peer)
+    ref = np.asarray(inproc.start, np.float64)
+    both_inf = ~np.isfinite(ref) & ~np.isfinite(remote_start)
+    assert np.array_equal(ref[~both_inf], remote_start[~both_inf])
+    assert (np.isfinite(ref) == np.isfinite(remote_start)).all()
+
+
+def test_sequential_mode_over_subprocess_peer():
+    js = make_jobs(seed=23)
+    peer = make_peer()
+    try:
+        final, hist = ext.run_sequential_mode(SYS, js, peer, 0.0, 1800.0)
+    finally:
+        peer.close()
+    assert_reaped(peer)
+    s1 = ext.FastSimLike(policy="fcfs", backfill="firstfit")
+    _, h_ref = ext.run_sequential_mode(SYS, js, s1, 0.0, 1800.0)
+    assert np.array_equal(np.asarray(h_ref.power_it),
+                          np.asarray(hist.power_it))
+
+
+def test_handshake_hello_and_digest_checked():
+    js = make_jobs(seed=24, n=8)
+    peer = make_peer()
+    try:
+        peer.reset(SYS, js, 0.0)
+        assert peer.peer_hello["name"] == "reference-peer"
+        assert peer.peer_hello["version"] == ext.WIRE_VERSION
+        # digest helpers agree with the peer's stdlib reimplementation
+        mod = load_peer_module()
+        assert tr.job_digest(js) == mod.job_digest(
+            js.submit, js.limit, js.wall, js.nodes, js.account)
+        assert tr.system_digest(SYS) == mod.system_digest(SYS.n_nodes,
+                                                          SYS.dt)
+    finally:
+        peer.close()
+    assert_reaped(peer)
+
+
+def test_bridge_polls_subprocess_through_wire_validation():
+    """The bridge path decodes every subprocess answer (spot check)."""
+    js = make_jobs(seed=25, n=12)
+    peer = make_peer()
+    bridge = ext.SchedulerBridge(peer)
+    try:
+        bridge.reset(SYS, js, 0.0)
+        ids = bridge.poll(600.0)
+        assert ids.dtype == np.int64
+        assert np.unique(ids).size == ids.size
+        inproc = ext.FastSimLike(policy="fcfs", backfill="firstfit")
+        inproc.reset(SYS, js, 0.0)
+        assert sorted(ids.tolist()) == \
+            sorted(inproc.running_at(600.0).tolist())
+    finally:
+        peer.close()
+    assert_reaped(peer)
+
+
+def test_listen_mode_socket_peer_roundtrip(tmp_path):
+    """--listen serving + SocketPeer dialing (the --external-socket path)."""
+    addr = f"unix:{tmp_path / 'peer.sock'}"
+    server = subprocess.Popen(PEER + ["--listen", addr],
+                              stdin=subprocess.DEVNULL,
+                              stdout=subprocess.DEVNULL,
+                              stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.monotonic() + 20.0
+        js = make_jobs(seed=26, n=10)
+        peer = tr.SocketPeer(address=addr)
+        while True:  # wait for the server to bind
+            try:
+                peer.reset(SYS, js, 0.0)
+                break
+            except (ConnectionError, OSError, FileNotFoundError):
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.05)
+        inproc = ext.FastSimLike(policy="fcfs", backfill="firstfit")
+        inproc.reset(SYS, js, 0.0)
+        for t in (0.0, 900.0, 3600.0):
+            assert sorted(peer.running_at(t).tolist()) == \
+                sorted(inproc.running_at(t).tolist())
+        peer.close()
+        # a listen-mode server survives the session and accepts a new one
+        peer2 = tr.SocketPeer(address=addr)
+        peer2.reset(SYS, js, 0.0)
+        assert peer2.running_at(0.0) is not None
+        peer2.close()
+    finally:
+        server.terminate()
+        server.wait(timeout=10.0)
+    assert server.returncode is not None
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: every failure mode surfaces, nothing hangs, no zombies.
+# ---------------------------------------------------------------------------
+def test_peer_dying_immediately_raises_bridge_timeout():
+    js = make_jobs(seed=30, n=8)
+    peer = make_peer("die:0")
+    try:
+        with pytest.raises(ext.BridgeTimeout):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 4 * SYS.dt)
+    finally:
+        peer.close()
+    # one spawn per attempt, and no pointless respawn after the final
+    # failure (that answer could never be used)
+    assert len(peer.spawned) == ext.BridgeConfig().max_retries + 1
+    assert_reaped(peer)
+
+
+def test_peer_dying_mid_stream_heals_via_respawn():
+    """A peer that dies every few polls is respawned+resynced each time
+    and the run still completes — reconnect-with-resync end-to-end."""
+    js = make_jobs(seed=31, n=10)
+    peer = make_peer("die:3")
+    bridge = ext.SchedulerBridge(peer)
+    try:
+        final, hist, _ = ext.run_plugin_mode(SYS, js, bridge, 0.0,
+                                             10 * SYS.dt)
+    finally:
+        peer.close()
+    assert bridge.reconnects >= 2
+    assert len(peer.spawned) == bridge.reconnects + 1
+    assert_reaped(peer)
+    assert np.asarray(hist["power_it"]).shape[0] == 10
+
+
+def test_hanging_peer_times_out_not_deadlocks():
+    js = make_jobs(seed=32, n=8)
+    peer = make_peer("hang", timeout_s=0.5)
+    bridge = ext.SchedulerBridge(peer, ext.BridgeConfig(timeout_s=0.5,
+                                                        max_retries=1))
+    t_wall = time.monotonic()
+    try:
+        with pytest.raises(ext.BridgeTimeout):
+            ext.run_plugin_mode(SYS, js, bridge, 0.0, 4 * SYS.dt)
+    finally:
+        peer.close()
+    assert time.monotonic() - t_wall < 60.0, "bridge deadlocked on a hang"
+    assert_reaped(peer)
+
+
+def test_garbage_frames_raise_protocol_error_not_retried():
+    js = make_jobs(seed=33, n=8)
+    peer = make_peer("garbage")
+    try:
+        with pytest.raises(ext.ProtocolError):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 4 * SYS.dt)
+    finally:
+        peer.close()
+    assert len(peer.spawned) == 1, "broken speech must not be retried"
+    assert_reaped(peer)
+
+
+def test_truncated_frame_raises_protocol_error():
+    js = make_jobs(seed=34, n=8)
+    peer = make_peer("truncate")
+    try:
+        with pytest.raises(ext.ProtocolError):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 4 * SYS.dt)
+    finally:
+        peer.close()
+    assert_reaped(peer)
+
+
+def test_wrong_wire_version_rejected_at_handshake():
+    """A peer advertising version 2 must be refused before any poll —
+    and the refused process must already be reaped (no leak on the
+    ProtocolError path)."""
+    js = make_jobs(seed=35, n=8)
+    peer = make_peer("version")
+    try:
+        with pytest.raises(ext.ProtocolError, match="version"):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 4 * SYS.dt)
+    finally:
+        peer.close()
+    assert len(peer.spawned) == 1
+    assert_reaped(peer)
+
+
+def test_missing_peer_command_times_out_cleanly():
+    js = make_jobs(seed=36, n=8)
+    peer = tr.SubprocessPeer(
+        cmd=[sys.executable, "-c", "import time; time.sleep(60)"],
+        handshake_timeout_s=1.0)
+    try:
+        with pytest.raises(ext.BridgeTimeout):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 2 * SYS.dt)
+    finally:
+        peer.close()
+    assert_reaped(peer)
+
+
+def test_unsupported_policy_surfaces_peer_error_envelope():
+    """A reset the peer cannot honor comes back as the protocol's error
+    envelope with the real cause, not a wordless death + BridgeTimeout."""
+    js = make_jobs(seed=38, n=8)
+    peer = make_peer(policy="not-a-policy")
+    try:
+        with pytest.raises(ext.ProtocolError, match="rejected"):
+            peer.reset(SYS, js, 0.0)
+    finally:
+        peer.close()
+    assert_reaped(peer)
+
+
+def test_nonexistent_peer_command_fails_cleanly():
+    """Popen itself failing (bad command) must not leak the listener
+    socket or the per-attempt tmpdir across bridge retries."""
+    js = make_jobs(seed=37, n=8)
+    peer = tr.SubprocessPeer(cmd=["/nonexistent/peer-binary"])
+    try:
+        with pytest.raises(ext.BridgeTimeout):
+            ext.run_plugin_mode(SYS, js, peer, 0.0, 2 * SYS.dt)
+    finally:
+        peer.close()
+    assert peer.spawned == []          # nothing ever started
+    assert peer._tmpdir is None and peer._proc is None
+
+
+# ---------------------------------------------------------------------------
+# Framing / codec unit coverage (socket-free).
+# ---------------------------------------------------------------------------
+def test_read_frame_classifies_failures(monkeypatch):
+    ok = io.BytesIO(b'{"version":1,"kind":"hello"}\n')
+    assert tr.read_frame(ok)["kind"] == "hello"
+    with pytest.raises(ConnectionError):          # EOF: peer died
+        tr.read_frame(io.BytesIO(b""))
+    with pytest.raises(ext.ProtocolError):        # garbage
+        tr.read_frame(io.BytesIO(b"}{ nope\n"))
+    with pytest.raises(ext.ProtocolError):        # truncated
+        tr.read_frame(io.BytesIO(b'{"version":1'))
+    with pytest.raises(ext.ProtocolError):        # non-object frame
+        tr.read_frame(io.BytesIO(b"[1,2,3]\n"))
+    monkeypatch.setattr(tr, "MAX_FRAME_BYTES", 1024)
+    huge = b'{"pad":"' + b"x" * 2048 + b'"}\n'
+    with pytest.raises(ext.ProtocolError):        # over-long inbound
+        tr.read_frame(io.BytesIO(huge))
+    with pytest.raises(ext.ProtocolError):        # over-long outbound
+        tr.write_frame(io.BytesIO(), {"pad": "x" * 2048})
+
+
+def test_decode_schedule_validation():
+    msg = {"version": 1, "kind": "schedule", "start": [0.0, None, 30.5]}
+    out = tr.decode_schedule(msg, 3)
+    assert out[0] == 0.0 and np.isinf(out[1]) and out[2] == 30.5
+    for bad in [
+        {"version": 2, "kind": "schedule", "start": [0.0]},
+        {"version": 1, "kind": "running_set", "start": [0.0]},
+        {"version": 1, "kind": "schedule", "start": [0.0, 1.0]},
+        {"version": 1, "kind": "schedule", "start": "soon"},
+        {"version": 1, "kind": "schedule", "start": [True]},
+        {"version": 1, "kind": "schedule", "start": ["0.0"]},
+        {"version": 1, "kind": "schedule", "start": [float("nan")]},
+        {"version": 1, "kind": "schedule", "start": [float("inf")]},
+        {"version": 1, "kind": "schedule", "start": [10 ** 400]},
+    ]:
+        with pytest.raises(ext.ProtocolError):
+            tr.decode_schedule(bad, 1 if len(bad.get("start", [])) == 1
+                               else 3)
+
+
+def test_parse_address_forms():
+    if hasattr(socket, "AF_UNIX"):
+        assert tr.parse_address("unix:/tmp/x.sock") == \
+            (socket.AF_UNIX, "/tmp/x.sock")
+        assert tr.parse_address("/tmp/x.sock") == \
+            (socket.AF_UNIX, "/tmp/x.sock")
+    assert tr.parse_address("127.0.0.1:7700") == \
+        (socket.AF_INET, ("127.0.0.1", 7700))
+    assert tr.parse_address("tcp:localhost:80") == \
+        (socket.AF_INET, ("localhost", 80))
+    with pytest.raises(ValueError):
+        tr.parse_address("not-an-address")
+
+
+def test_pure_python_event_schedule_matches_numpy_reference():
+    """The peer's stdlib scheduler is decision-identical to the twin's."""
+    from repro.datasets.synthetic import event_schedule as np_sched
+    mod = load_peer_module()
+    for seed in range(4):
+        js = make_jobs(seed=seed, n=25)
+        for policy in ("fcfs", "sjf", "ljf", "priority"):
+            for backfill in ("none", "firstfit"):
+                ref = np_sched(js.submit, js.limit, js.wall, js.nodes,
+                               SYS.n_nodes, SYS.dt, policy=policy,
+                               backfill=backfill, priority=js.priority)
+                got = np.asarray(mod.event_schedule(
+                    [float(x) for x in js.submit],
+                    [float(x) for x in js.limit],
+                    [float(x) for x in js.wall],
+                    [int(x) for x in js.nodes],
+                    SYS.n_nodes, SYS.dt, policy=policy, backfill=backfill,
+                    priority=[float(x) for x in js.priority]))
+                finite = np.isfinite(ref)
+                assert (finite == np.isfinite(got)).all(), \
+                    (seed, policy, backfill)
+                assert np.array_equal(ref[finite], got[finite]), \
+                    (seed, policy, backfill)

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the external-bridge wire codec.
+
+The envelope codec is the trust boundary between the twin and an
+arbitrary out-of-process peer: whatever bytes arrive, ``decode_running``
+/ ``decode_schedule`` must either return a validated array or raise
+``ProtocolError`` — never crash with something else, never silently
+accept a malformed payload.
+"""
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import external as ext  # noqa: E402
+from repro.core import transport as tr  # noqa: E402
+
+N_JOBS = 64
+
+
+@st.composite
+def id_sets(draw):
+    """Arbitrary duplicate-free id sets in [0, N_JOBS)."""
+    ids = draw(st.lists(st.integers(0, N_JOBS - 1), unique=True,
+                        max_size=N_JOBS))
+    return ids
+
+
+@given(id_sets())
+@settings(max_examples=200, deadline=None)
+def test_encode_decode_roundtrip(ids):
+    msg = ext.encode_running(ids)
+    out = ext.decode_running(msg, N_JOBS)
+    assert sorted(out.tolist()) == sorted(ids)
+    assert out.dtype == np.int64
+    # and the envelope survives an actual JSON wire trip
+    out2 = ext.decode_running(json.loads(json.dumps(msg)), N_JOBS)
+    assert np.array_equal(out, out2)
+
+
+@given(id_sets())
+@settings(max_examples=100, deadline=None)
+def test_decode_rejects_shifted_version_and_kind(ids):
+    msg = ext.encode_running(ids)
+    with pytest.raises(ext.ProtocolError):
+        ext.decode_running({**msg, "version": ext.WIRE_VERSION + 1}, N_JOBS)
+    with pytest.raises(ext.ProtocolError):
+        ext.decode_running({**msg, "kind": "plan"}, N_JOBS)
+
+
+@given(st.lists(st.integers(N_JOBS, N_JOBS + 1000), min_size=1, max_size=8,
+                unique=True))
+@settings(max_examples=100, deadline=None)
+def test_decode_rejects_out_of_range_ids(ids):
+    with pytest.raises(ext.ProtocolError):
+        ext.decode_running(ext.encode_running(ids), N_JOBS)
+
+
+@given(st.lists(st.integers(0, N_JOBS - 1), min_size=1, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_decode_rejects_duplicates(ids):
+    dup = ids + [ids[0]]
+    with pytest.raises(ext.ProtocolError):
+        ext.decode_running(ext.encode_running(dup), N_JOBS)
+
+
+# Anything JSON can spell: scalars, strings, nested lists, objects.
+json_values = st.recursive(
+    st.none() | st.booleans() | st.integers(-2**40, 2**40) |
+    st.floats(allow_nan=False) | st.text(max_size=8),
+    lambda inner: st.lists(inner, max_size=5) |
+    st.dictionaries(st.text(max_size=8), inner, max_size=5),
+    max_leaves=10)
+
+
+@given(json_values)
+@settings(max_examples=300, deadline=None)
+def test_fuzzed_job_ids_never_crash_never_silently_pass(payload):
+    """Arbitrary JSON in the job_ids slot: either it is a genuinely valid
+    flat unique in-range integer list, or ProtocolError — nothing else."""
+    msg = {"version": ext.WIRE_VERSION, "kind": ext.WIRE_KIND_RUNNING,
+           "job_ids": payload}
+    try:
+        out = ext.decode_running(msg, N_JOBS)
+    except ext.ProtocolError:
+        return
+    ids = out.tolist()
+    assert isinstance(payload, list)
+    assert all(isinstance(x, int) and not isinstance(x, bool)
+               for x in payload)
+    assert sorted(ids) == sorted(payload)
+    assert len(set(ids)) == len(ids)
+    assert all(0 <= x < N_JOBS for x in ids)
+
+
+@given(json_values)
+@settings(max_examples=300, deadline=None)
+def test_fuzzed_envelope_never_crashes(payload):
+    """The whole envelope slot fuzzed (not just job_ids)."""
+    try:
+        ext.decode_running(payload, N_JOBS)
+    except ext.ProtocolError:
+        pass
+
+
+@given(st.lists(st.none() | st.floats(allow_nan=False, allow_infinity=False,
+                                      width=32),
+                max_size=32))
+@settings(max_examples=150, deadline=None)
+def test_schedule_roundtrip(start):
+    msg = {"version": ext.WIRE_VERSION, "kind": "schedule",
+           "start": [None if s is None else float(s) for s in start]}
+    out = tr.decode_schedule(json.loads(json.dumps(msg)), len(start))
+    for s, o in zip(start, out):
+        if s is None:
+            assert np.isinf(o)
+        else:
+            assert o == s
+
+
+@given(json_values)
+@settings(max_examples=200, deadline=None)
+def test_fuzzed_schedule_never_crashes(payload):
+    msg = {"version": ext.WIRE_VERSION, "kind": "schedule",
+           "start": payload}
+    try:
+        out = tr.decode_schedule(msg, 4)
+    except ext.ProtocolError:
+        return
+    assert isinstance(payload, list) and len(payload) == 4
+    assert out.shape == (4,)

@@ -1,0 +1,292 @@
+#!/usr/bin/env python
+"""Reference external-scheduler peer (stdlib only — no repro, no numpy).
+
+Serves FastSimLike semantics (event-driven FCFS/SJF/LJF/priority with
+optional firstfit backfill — a pure-Python port of
+``datasets/synthetic.event_schedule`` with identical tie-breaking and
+float arithmetic) over the NDJSON wire protocol documented in
+docs/external-scheduling.md. Because it only needs the standard
+library, it doubles as the porting template for coupling a scheduler
+written in any language: speak ``hello``, answer ``reset`` with the
+recomputed digests, then answer ``poll`` / ``schedule_req``.
+
+Run modes::
+
+  python -m tools.reference_peer --connect unix:/path/peer.sock
+      dial a twin that is listening (how SubprocessPeer drives it);
+      serves one session, then exits.
+
+  python -m tools.reference_peer --listen unix:/path/peer.sock
+  python -m tools.reference_peer --listen 127.0.0.1:7700
+      bind and serve sessions forever (pair with --external-socket).
+
+``--fault MODE`` injects failures for the bridge's fault tests:
+``die:N`` (exit abruptly after N polls), ``hang`` (never answer),
+``garbage`` (non-JSON frame), ``truncate`` (partial frame then exit),
+``version`` (advertise wire version 2 in hello).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import heapq
+import json
+import math
+import os
+import socket
+import sys
+import time
+
+WIRE_VERSION = 1
+MAX_FRAME_BYTES = 256 << 20  # keep equal to repro.core.transport's cap
+
+
+# ---------------------------------------------------------------------------
+# FastSimLike semantics, pure Python (port of synthetic.event_schedule).
+# ---------------------------------------------------------------------------
+def event_schedule(submit, limit, wall, nodes, n_nodes, dt,
+                   policy="fcfs", backfill="firstfit", priority=None):
+    """Event-driven start times; math.inf marks never-started jobs.
+
+    Mirrors the numpy implementation op-for-op (ceil-to-grid submits,
+    release-before-submit event ordering, ``(key, submit, id)`` queue
+    sort) so the twin's in-process ``FastSimLike`` and this peer make
+    bit-identical scheduling decisions on the same inputs.
+    """
+    J = len(submit)
+    submit_g = [math.ceil(s / dt) * dt for s in submit]
+    start = [math.inf] * J
+    free = n_nodes
+    queue = []
+    ev = [(float(submit_g[j]), 1, j) for j in range(J)]
+    heapq.heapify(ev)
+
+    if policy == "fcfs":
+        key = submit_g
+    elif policy == "sjf":
+        key = limit
+    elif policy == "ljf":
+        key = [-float(n) for n in nodes]
+    elif policy == "priority":
+        if priority is None:
+            raise ValueError("priority policy needs a priority column")
+        key = [-float(p) for p in priority]
+    else:
+        raise ValueError(policy)
+
+    while ev:
+        t, kind, j = heapq.heappop(ev)
+        if kind == 0:
+            free += int(nodes[j])
+        else:
+            queue.append(j)
+        if ev and ev[0][0] == t:
+            continue
+        queue.sort(key=lambda q: (key[q], submit_g[q], q))
+        placed = []
+        for q in queue:
+            need = int(nodes[q])
+            if need <= free:
+                free -= need
+                start[q] = t
+                heapq.heappush(ev, (t + float(wall[q]), 0, q))
+                placed.append(q)
+            elif backfill == "none":
+                break
+        for q in placed:
+            queue.remove(q)
+    return start
+
+
+# ---------------------------------------------------------------------------
+# Canonical digests — must match repro.core.transport exactly.
+# ---------------------------------------------------------------------------
+def _digest(obj):
+    blob = json.dumps(obj, separators=(",", ":"), sort_keys=True)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+def system_digest(n_nodes, dt):
+    return _digest({"v": WIRE_VERSION, "n_nodes": int(n_nodes),
+                    "dt": float(dt)})
+
+
+def job_digest(submit, limit, wall, nodes, account):
+    return _digest({"v": WIRE_VERSION, "jobs": {
+        "submit": [int(round(float(x))) for x in submit],
+        "limit": [int(round(float(x))) for x in limit],
+        "wall": [int(round(float(x))) for x in wall],
+        "nodes": [int(x) for x in nodes],
+        "account": [int(x) for x in account],
+    }})
+
+
+# ---------------------------------------------------------------------------
+# Session: one connected twin.
+# ---------------------------------------------------------------------------
+class Session:
+    def __init__(self, conn, fault=None):
+        self.rfile = conn.makefile("rb")
+        self.wfile = conn.makefile("wb")
+        self.fault, _, n = (fault or "none").partition(":")
+        self.fault_arg = int(n) if n else 0
+        self.polls = 0
+        self.jobs = None
+        self.start = None
+
+    def send(self, msg):
+        self.wfile.write(json.dumps(msg, separators=(",", ":"))
+                         .encode("utf-8") + b"\n")
+        self.wfile.flush()
+
+    def send_error(self, message):
+        self.send({"version": WIRE_VERSION, "kind": "error",
+                   "message": message})
+
+    def hello(self):
+        version = 2 if self.fault == "version" else WIRE_VERSION
+        self.send({"version": version, "kind": "hello",
+                   "name": "reference-peer", "pid": os.getpid()})
+
+    def on_reset(self, msg):
+        sysd, jobs = msg.get("system") or {}, msg.get("jobs") or {}
+        cols = {k: jobs.get(k) or [] for k in
+                ("submit", "limit", "wall", "nodes", "priority", "account")}
+        lens = {len(v) for v in cols.values()}
+        if len(lens) != 1:
+            self.send_error(f"ragged job columns: lengths {sorted(lens)}")
+            return
+        self.jobs = cols
+        try:
+            self.start = event_schedule(
+                cols["submit"], cols["limit"], cols["wall"], cols["nodes"],
+                int(sysd.get("n_nodes", 0)), float(sysd.get("dt", 1.0)),
+                policy=msg.get("policy", "fcfs"),
+                backfill=msg.get("backfill", "firstfit"),
+                priority=cols["priority"])
+        except (ValueError, TypeError) as e:
+            # e.g. a policy this peer doesn't implement: answer with the
+            # protocol's error envelope instead of dying wordlessly (the
+            # twin surfaces it as ProtocolError with this message)
+            self.send_error(f"reset rejected: {e!r}")
+            return
+        # echo digests recomputed from what we actually deserialized —
+        # the twin compares them against its own (handshake contract)
+        self.send({
+            "version": WIRE_VERSION, "kind": "reset_ack",
+            "n_jobs": len(cols["submit"]),
+            "system_digest": system_digest(sysd.get("n_nodes", 0),
+                                           sysd.get("dt", 1.0)),
+            "job_digest": job_digest(cols["submit"], cols["limit"],
+                                     cols["wall"], cols["nodes"],
+                                     cols["account"]),
+        })
+
+    def running_ids(self, t):
+        wall = self.jobs["wall"]
+        return [j for j, s in enumerate(self.start)
+                if s <= t and s + wall[j] > t]
+
+    def on_poll(self, msg):
+        self.polls += 1
+        if self.fault == "hang":
+            time.sleep(3600.0)
+        if self.fault == "die" and self.polls > self.fault_arg:
+            os._exit(1)                       # no bye, no flush: abrupt
+        if self.fault == "garbage":
+            self.wfile.write(b"}{ this is not a JSON frame\n")
+            self.wfile.flush()
+            return
+        if self.fault == "truncate":
+            self.wfile.write(b'{"version":1,"kind":"running_s')
+            self.wfile.flush()
+            os._exit(1)                       # frame cut mid-envelope
+        if self.start is None:
+            self.send_error("poll before reset")
+            return
+        self.send({"version": WIRE_VERSION, "kind": "running_set",
+                   "job_ids": self.running_ids(float(msg.get("t", 0.0)))})
+
+    def on_schedule_req(self):
+        if self.start is None:
+            self.send_error("schedule_req before reset")
+            return
+        self.send({"version": WIRE_VERSION, "kind": "schedule",
+                   "start": [None if math.isinf(s) else s
+                             for s in self.start]})
+
+    def serve(self):
+        self.hello()
+        while True:
+            line = self.rfile.readline(MAX_FRAME_BYTES + 1)
+            if not line:
+                return                        # twin went away
+            try:
+                msg = json.loads(line)
+            except ValueError:
+                self.send_error("unparseable frame")
+                return
+            kind = msg.get("kind") if isinstance(msg, dict) else None
+            if kind == "reset":
+                self.on_reset(msg)
+            elif kind == "poll":
+                self.on_poll(msg)
+            elif kind == "schedule_req":
+                self.on_schedule_req()
+            elif kind == "bye":
+                return
+            else:
+                self.send_error(f"unknown message kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+def parse_address(addr):
+    if addr.startswith("unix:"):
+        return socket.AF_UNIX, addr[len("unix:"):]
+    if addr.startswith("tcp:"):
+        addr = addr[len("tcp:"):]
+    if "/" in addr:
+        return socket.AF_UNIX, addr
+    host, _, port = addr.rpartition(":")
+    return socket.AF_INET, (host, int(port))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--connect", help="dial a listening twin "
+                                        "(unix:/path or host:port)")
+    mode.add_argument("--listen", help="bind and serve sessions forever")
+    ap.add_argument("--fault", default=None,
+                    help="die:N | hang | garbage | truncate | version")
+    args = ap.parse_args(argv)
+
+    if args.connect:
+        family, sockaddr = parse_address(args.connect)
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        sock.connect(sockaddr)
+        Session(sock, fault=args.fault).serve()
+        sock.close()
+        return 0
+
+    family, sockaddr = parse_address(args.listen)
+    srv = socket.socket(family, socket.SOCK_STREAM)
+    if family == socket.AF_INET:
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    elif os.path.exists(sockaddr):
+        os.unlink(sockaddr)
+    srv.bind(sockaddr)
+    srv.listen(1)
+    print(f"reference-peer listening on {args.listen}", flush=True)
+    while True:
+        conn, _ = srv.accept()
+        try:
+            Session(conn, fault=args.fault).serve()
+        except (BrokenPipeError, ConnectionError):
+            pass
+        finally:
+            conn.close()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
