@@ -11,6 +11,23 @@ import numpy as np
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
 
 
+def bench_meta() -> dict:
+    """Environment block for BENCH_*.json artifacts: what ran where.
+
+    The perf-trajectory gate (tools/bench_compare.py) only compares runs
+    with the same backend, so a laptop-CPU run never gates a GPU baseline."""
+    import platform
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "backend": jax.default_backend(),
+        "device": getattr(dev, "device_kind", str(dev)),
+        "n_devices": jax.device_count(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+    }
+
+
 def timed(fn: Callable, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)

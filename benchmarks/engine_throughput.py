@@ -102,13 +102,16 @@ def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
              T.Scenario.make("carbon_aware", "easy", carbon_weight=4.0)]
 
     def timed_sweep(name, system, **kw):
+        tc = time.perf_counter()
         eng.simulate_sweep(system, table, scens, 0.0, t1, **kw)  # compile
+        compile_s = time.perf_counter() - tc
         t0 = time.perf_counter()
         final, _ = eng.simulate_sweep(system, table, scens, 0.0, t1, **kw)
         jax.block_until_ready(final.t)
         wall = time.perf_counter() - t0
         return {"name": name, "us_per_call": wall / n_steps * 1e6,
-                "wall_s": wall, "steps": n_steps, "scenarios": len(scens),
+                "wall_s": wall, "compile_s": compile_s, "steps": n_steps,
+                "scenarios": len(scens),
                 "steps_per_s": n_steps * len(scens) / wall,
                 "jobs_done": float(np.asarray(final.completed).sum())}
 
@@ -137,10 +140,13 @@ def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
                            if k not in ("name", "us_per_call"))
         print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
     if bench_json:
+        from benchmarks.common import bench_meta
         payload = {r["name"]: {"steps_per_s": r["steps_per_s"],
                                "wall_s": r["wall_s"],
+                               "compile_s": r["compile_s"],
                                "scenarios": r["scenarios"],
                                "steps": r["steps"]} for r in rows}
+        payload["meta"] = bench_meta()
         with open(bench_json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {bench_json}")

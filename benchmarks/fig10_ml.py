@@ -201,9 +201,10 @@ def smoke(bench_json: str = "BENCH_ml.json"):
                            if k not in ("name", "wall_s"))
         print(f"{r['name']},{r['wall_s'] * 1e6:.1f},{derived}")
     if bench_json:
+        from benchmarks.common import bench_meta
         payload = {"train": rows[0], "eval": eval_rows, "deltas": deltas,
                    "trained_alpha": [float(a) for a in res.alpha],
-                   "reward": REWARD}
+                   "reward": REWARD, "meta": bench_meta()}
         with open(bench_json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {bench_json}")

@@ -33,12 +33,16 @@ def run(quick: bool = False):
     wall = time.perf_counter() - t0
     speedup = days * 86400.0 / wall
 
-    # plugin mode on a shorter window for comparison
+    # plugin mode on a shorter window for comparison; explicit bridge so
+    # its wire counters (polls, latency histogram) land in the results
     t0 = time.perf_counter()
-    sched2 = ext.FastSimLike(policy="fcfs", backfill="firstfit")
-    _, _, wall_plugin = ext.run_plugin_mode(sys_, js, sched2, 0.0,
+    bridge = ext.SchedulerBridge(
+        ext.FastSimLike(policy="fcfs", backfill="firstfit"))
+    _, _, wall_plugin = ext.run_plugin_mode(sys_, js, bridge, 0.0,
                                             0.25 * 86400.0)
     speedup_plugin = 0.25 * 86400.0 / wall_plugin
+    bstats = bridge.stats()
+    lat = bstats["poll_latency"]
 
     p = np.asarray(hist.power_it, np.float64)
     rows = [{
@@ -52,7 +56,13 @@ def run(quick: bool = False):
     }, {
         "name": "fig7/fastsim-plugin", "wall_s": wall_plugin,
         "speedup_vs_realtime": float(speedup_plugin),
+        "polls": bstats["polls"],
+        "poll_failures": bstats["poll_failures"],
+        "reconnects": bstats["reconnects"],
+        "poll_p_max_ms": (lat["max_s"] or 0.0) * 1e3,
+        "poll_mean_ms": (lat["total_s"] / lat["count"] * 1e3
+                         if lat["count"] else 0.0),
     }]
-    save("fig7_external", {"rows": rows})
+    save("fig7_external", {"rows": rows, "bridge": bstats})
     assert speedup > 688.0, "compiled twin should beat the paper's 688x"
     return rows

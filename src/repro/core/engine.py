@@ -44,6 +44,7 @@ from repro.core import types as T
 from repro.grid import powercap
 from repro.grid import signals as gsig
 from repro.kernels.power_topo import ops as topo_ops
+from repro.obs import timing as obs_timing
 from repro.power import losses as plosses
 from repro.power import model as pmodel
 from repro.systems.config import SystemConfig
@@ -364,6 +365,27 @@ def _simulate_jit(system: SystemConfig, table: T.JobTable, st0: T.SimState,
     return jax.lax.scan(body, st0, None, length=n_steps)
 
 
+def _simulate_observed(system, table, st0, scen, signals, weather,
+                       n_steps: int, timer) -> Tuple[T.SimState,
+                                                     T.StepRecord]:
+    """Opt-in observed run: AOT lower/compile so the jit **compile** phase
+    is a separate span from the scan **execute** phase (a plain jit call
+    fuses both into the first invocation, which is exactly the number a
+    flight recorder must split). Uncached on purpose — the observed path
+    is for one-shot CLI runs; hot callers never land here because they
+    install no timer."""
+    meta = {"system": system.name, "n_steps": int(n_steps)}
+    with timer.span("engine.lower", **meta):
+        lowered = _simulate_jit.lower(system, table, st0, scen, signals,
+                                      weather, n_steps)
+    with timer.span("engine.compile", **meta):
+        compiled = lowered.compile()
+    with timer.span("engine.scan", **meta):
+        out = jax.block_until_ready(
+            compiled(table, st0, scen, signals, weather))
+    return out
+
+
 def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
              t0: float, t1: float,
              accounts: T.AccountStats | None = None,
@@ -391,6 +413,10 @@ def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
     """
     n_steps = int(round((t1 - t0) / system.dt))
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    timer = obs_timing.current()
+    if timer is not None:
+        return _simulate_observed(system, table, st0, scen, signals,
+                                  weather, n_steps, timer)
     return _simulate_jit(system, table, st0, scen, signals, weather, n_steps)
 
 
@@ -416,6 +442,8 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
     key = (system, policy, backfill, n_steps, table.num_jobs,
            table.prof_len, num_accounts, signals is None, weather is None)
     fn = _STATIC_CACHE.get(key)
+    timer = obs_timing.current()
+    hit = fn is not None
     if fn is None:
         def run(table_, st0_, signals_, weather_):
             def body(st, _):
@@ -425,10 +453,31 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
         fn = jax.jit(run)
         _STATIC_CACHE[key] = fn
     st0 = init_state(system, table, t0, t1, accounts, num_accounts)
-    return fn(table, st0, signals, weather)
+    if timer is None:
+        return fn(table, st0, signals, weather)
+    # observed path (opt-in): split compile from execute via AOT on a cache
+    # miss; a warm hit only times the scan. The AOT executable is NOT
+    # cached — the key above doesn't capture signal/weather array shapes,
+    # and jit (the cached object) re-specializes on those by itself.
+    timer.count("static_cache_hit" if hit else "static_cache_miss")
+    meta = {"system": system.name, "policy": policy, "n_steps": int(n_steps)}
+    if hit:
+        with timer.span("engine.scan", **meta):
+            return jax.block_until_ready(fn(table, st0, signals, weather))
+    with timer.span("engine.lower", **meta):
+        lowered = fn.lower(table, st0, signals, weather)
+    with timer.span("engine.compile", **meta):
+        compiled = lowered.compile()
+    with timer.span("engine.scan", **meta):
+        return jax.block_until_ready(compiled(table, st0, signals, weather))
 
 
 _SWEEP_CACHE: dict = {}
+# Monotonic hit/miss counters over the jitted sweep-runner cache (both
+# _sweep_fn and the sharded variant). A steady-state training loop should
+# show hits only after generation 0; ``ml.train`` snapshots the deltas per
+# generation and the run manifest embeds the totals.
+SWEEP_CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
@@ -441,6 +490,7 @@ def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
     at steady-state throughput."""
     key = (system, n_steps, w_axis)
     fn = _SWEEP_CACHE.get(key)
+    SWEEP_CACHE_STATS["hits" if fn is not None else "misses"] += 1
     if fn is None:
         @jax.jit
         def fn(table_, st0_, scen_, signals_, weather_):
@@ -536,6 +586,7 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
     # training rollouts re-enter here with identical shapes
     key = ("sharded", system, n_steps, w_axis, n_dev)
     run = _SWEEP_CACHE.get(key)
+    SWEEP_CACHE_STATS["hits" if run is not None else "misses"] += 1
     if run is None:
         mesh = psh.sweep_mesh()
         scen_spec = psh.scenario_spec()

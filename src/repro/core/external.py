@@ -52,6 +52,7 @@ from repro.core import engine as eng
 from repro.core import types as T
 from repro.datasets.base import JobSet
 from repro.datasets.synthetic import event_schedule
+from repro.obs.timing import LatencyHistogram
 from repro.systems.config import SystemConfig
 
 WIRE_VERSION = 1
@@ -166,7 +167,30 @@ class SchedulerBridge:
     peer: "ExternalScheduler"
     config: BridgeConfig = field(default_factory=BridgeConfig)
     reconnects: int = 0
+    # flight-recorder counters (monotonic; surfaced via stats())
+    polls: int = 0               # poll() calls answered successfully
+    poll_failures: int = 0       # transport-style failures across attempts
+    budget_exceeded: int = 0     # over-budget answers discarded post-hoc
+    poll_latency: LatencyHistogram = field(default_factory=LatencyHistogram)
+    on_event: object = None      # optional callable(event: str, fields: dict)
     _args: tuple | None = None
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.on_event is not None:
+            self.on_event(event, fields)
+
+    def stats(self) -> dict:
+        """Monotonic bridge counters + the peer's transport counters (when
+        it exposes ``stats()`` — Socket/SubprocessPeer do), manifest- and
+        ``fig7_external``-ready."""
+        out = {"polls": self.polls, "poll_failures": self.poll_failures,
+               "budget_exceeded": self.budget_exceeded,
+               "reconnects": self.reconnects,
+               "poll_latency": self.poll_latency.summary()}
+        peer_stats = getattr(self.peer, "stats", None)
+        if callable(peer_stats):
+            out["peer"] = peer_stats()
+        return out
 
     def reset(self, system: SystemConfig, jobs: JobSet, t0: float) -> None:
         """Resync the peer, retrying transport failures.
@@ -201,6 +225,7 @@ class SchedulerBridge:
         if self._args is None:
             raise BridgeTimeout("cannot reconnect before reset()")
         self.reconnects += 1
+        self._emit("bridge_reconnect", reconnects=self.reconnects)
         try:
             self.peer.reset(*self._args)
             return None
@@ -223,18 +248,22 @@ class SchedulerBridge:
             except ProtocolError:
                 raise                       # malformed speech: not retryable
             except TRANSPORT_ERRORS as e:   # connection-style failure
+                self.poll_failures += 1
                 last = f"poll raised {e!r}"
                 if retryable:               # no pointless trailing respawn
                     last = self._reconnect() or last
                 continue
             took = time.perf_counter() - t_call
+            self.poll_latency.record(took)
             if took > self.config.timeout_s:
                 # in-process peers cannot be preempted: the budget is
                 # enforced post-hoc and the stale answer discarded
+                self.budget_exceeded += 1
                 last = f"poll took {took:.3f}s > {self.config.timeout_s}s"
                 if retryable:
                     last = self._reconnect() or last
                 continue
+            self.polls += 1
             return ids
         raise BridgeTimeout(f"peer unusable after "
                             f"{self.config.max_retries + 1} attempts: {last}")

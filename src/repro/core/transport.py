@@ -119,7 +119,30 @@ def job_digest(jobs: JobSet) -> str:
 # ---------------------------------------------------------------------------
 # NDJSON framing.
 # ---------------------------------------------------------------------------
-def write_frame(wfile: IO[bytes], msg: dict) -> None:
+@dataclass
+class WireCounters:
+    """Monotonic per-connection framing counters (flight-recorder food).
+
+    Counted at the framing layer so every peer kind (socket, subprocess,
+    metrics sink) shares one definition of a frame/byte. ``bytes_in``
+    counts delivered frames only — a rejected over-long or truncated line
+    bumps ``frames_rejected`` instead, so in/out byte counts stay
+    comparable across the twin and a compliant peer.
+    """
+    frames_out: int = 0
+    bytes_out: int = 0
+    frames_in: int = 0
+    bytes_in: int = 0
+    frames_rejected: int = 0
+
+    def as_dict(self) -> dict:
+        return {"frames_out": self.frames_out, "bytes_out": self.bytes_out,
+                "frames_in": self.frames_in, "bytes_in": self.bytes_in,
+                "frames_rejected": self.frames_rejected}
+
+
+def write_frame(wfile: IO[bytes], msg: dict,
+                counters: WireCounters | None = None) -> None:
     """Write one envelope as a newline-terminated JSON frame and flush.
 
     Enforces ``MAX_FRAME_BYTES`` outbound too: a compliant peer would
@@ -127,14 +150,20 @@ def write_frame(wfile: IO[bytes], msg: dict) -> None:
     remote parse error into a local, diagnosable one."""
     line = json.dumps(msg, separators=(",", ":")).encode("utf-8") + b"\n"
     if len(line) > MAX_FRAME_BYTES:
+        if counters is not None:
+            counters.frames_rejected += 1
         raise ProtocolError(
             f"outbound {msg.get('kind')!r} frame is {len(line)} bytes, "
             f"over the {MAX_FRAME_BYTES}-byte protocol cap")
     wfile.write(line)
     wfile.flush()
+    if counters is not None:
+        counters.frames_out += 1
+        counters.bytes_out += len(line)
 
 
-def read_frame(rfile: IO[bytes]) -> dict:
+def read_frame(rfile: IO[bytes],
+               counters: WireCounters | None = None) -> dict:
     """Read one envelope; classify every way a peer can get it wrong.
 
     EOF (peer died) raises ``ConnectionError`` — a transport failure the
@@ -148,16 +177,26 @@ def read_frame(rfile: IO[bytes]) -> dict:
     if not line:
         raise ConnectionError("peer closed the connection (EOF)")
     if len(line) > MAX_FRAME_BYTES:
+        if counters is not None:
+            counters.frames_rejected += 1
         raise ProtocolError(f"frame exceeds {MAX_FRAME_BYTES} bytes")
-    if not line.endswith(b"\n"):
-        raise ProtocolError("truncated frame: EOF before newline")
     try:
-        msg = json.loads(line)
-    except (json.JSONDecodeError, UnicodeDecodeError) as e:
-        raise ProtocolError(f"frame is not JSON: {e}") from e
-    if not isinstance(msg, dict):
-        raise ProtocolError(f"frame must be a JSON object, got "
-                            f"{type(msg).__name__}")
+        if not line.endswith(b"\n"):
+            raise ProtocolError("truncated frame: EOF before newline")
+        try:
+            msg = json.loads(line)
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise ProtocolError(f"frame is not JSON: {e}") from e
+        if not isinstance(msg, dict):
+            raise ProtocolError(f"frame must be a JSON object, got "
+                                f"{type(msg).__name__}")
+    except ProtocolError:
+        if counters is not None:
+            counters.frames_rejected += 1
+        raise
+    if counters is not None:
+        counters.frames_in += 1
+        counters.bytes_in += len(line)
     return msg
 
 
@@ -237,6 +276,8 @@ class SocketPeer:
     timeout_s: float = 30.0            # per-reply socket budget
     handshake_timeout_s: float = 20.0  # connect + hello + reset_ack budget
     peer_hello: dict | None = None
+    counters: WireCounters = field(default_factory=WireCounters)
+    dials: int = 0                     # connection (re)establishments
     _sock: socket.socket | None = None
     _rfile: IO[bytes] | None = None
     _wfile: IO[bytes] | None = None
@@ -250,6 +291,7 @@ class SocketPeer:
         sock = socket.socket(family, socket.SOCK_STREAM)
         sock.settimeout(self.handshake_timeout_s)
         sock.connect(sockaddr)
+        self.dials += 1
         return sock
 
     def _attach(self, sock: socket.socket) -> None:
@@ -257,7 +299,7 @@ class SocketPeer:
         self._sock = sock
         self._rfile = sock.makefile("rb")
         self._wfile = sock.makefile("wb")
-        hello = read_frame(self._rfile)
+        hello = read_frame(self._rfile, self.counters)
         if hello.get("kind") != "hello":
             raise ProtocolError(f"expected hello, got "
                                 f"{hello.get('kind')!r}")
@@ -361,12 +403,17 @@ class SocketPeer:
     def _send(self, msg: dict) -> None:
         if self._wfile is None:
             raise ConnectionError("not connected (reset first)")
-        write_frame(self._wfile, msg)
+        write_frame(self._wfile, msg, self.counters)
 
     def _recv(self) -> dict:
         if self._rfile is None:
             raise ConnectionError("not connected (reset first)")
-        return read_frame(self._rfile)
+        return read_frame(self._rfile, self.counters)
+
+    def stats(self) -> dict:
+        """Monotonic transport counters for the flight recorder."""
+        return {"kind": type(self).__name__, "dials": self.dials,
+                **self.counters.as_dict()}
 
     def close(self) -> None:
         """Best-effort ``bye``, then drop the connection."""
@@ -448,7 +495,15 @@ class SubprocessPeer(SocketPeer):
         finally:
             listener.close()
         conn.settimeout(self.handshake_timeout_s)
+        self.dials += 1
         self._attach(conn)
+
+    def stats(self) -> dict:
+        """Transport counters + process lifecycle (spawns/respawns)."""
+        out = super().stats()
+        out["spawns"] = len(self.spawned)
+        out["respawns"] = max(len(self.spawned) - 1, 0)
+        return out
 
     def _reap(self) -> None:
         """Terminate (escalating to kill) and wait() the child, if any;

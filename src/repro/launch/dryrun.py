@@ -27,10 +27,12 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
+from repro.obs.reporter import get_logger
 from repro.roofline import analysis as roofline
 from repro.training import train_step as ts
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+_log = get_logger()
 
 
 def input_specs(arch: str, shape: str):
@@ -109,9 +111,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
                memory=mem_detail, roofline=rf.as_dict(),
                hlo_bytes=len(hlo))
     if verbose:
-        print(json.dumps({k: v for k, v in rec.items()
-                          if k not in ("memory",)}, indent=None,
-                         default=str)[:600], flush=True)
+        _log.info(json.dumps({k: v for k, v in rec.items()
+                              if k not in ("memory",)}, indent=None,
+                             default=str)[:600])
     return rec
 
 
@@ -231,9 +233,8 @@ def run_cell_extrapolated(arch: str, shape: str, multi_pod: bool,
                compile_s=round(t1 + t2, 1), memory=mem_detail,
                roofline=rf.as_dict())
     if verbose:
-        print(json.dumps({k: v for k, v in rec.items()
-                          if k not in ("memory",)}, default=str)[:500],
-              flush=True)
+        _log.info(json.dumps({k: v for k, v in rec.items()
+                              if k not in ("memory",)}, default=str)[:500])
     return rec
 
 
@@ -288,7 +289,7 @@ def run_twin_cell(multi_pod: bool, n_scenarios: int = 512,
                argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
                collectives=collective_bytes(compiled.as_text()))
     if verbose:
-        print(json.dumps(rec, default=str)[:400], flush=True)
+        _log.info(json.dumps(rec, default=str)[:400])
     return rec
 
 
@@ -314,7 +315,12 @@ def main():
     ap.add_argument("--twin", action="store_true",
                     help="dry-run the twin scenario sweep instead of LM archs")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-cell progress lines on stderr")
     args = ap.parse_args()
+    if args.quiet:
+        import logging
+        _log.setLevel(logging.WARNING)
 
     if args.list:
         for a in ARCHS:
@@ -357,7 +363,7 @@ def main():
                                                     f"{e}",
                                trace=traceback.format_exc()[-2000:])
                     n_fail += 1
-                    print(rec["cell"], "FAIL", rec["error"], flush=True)
+                    _log.warning("%s FAIL %s", rec["cell"], rec["error"])
                 save(rec)
     sys.exit(1 if n_fail else 0)
 

@@ -107,6 +107,19 @@ def main(argv=None):
                     help="policy[:backfill] list to run as one batch")
     ap.add_argument("-o", "--output", default=None, nargs="?",
                     const="simulation_results")
+    # flight recorder (docs/observability.md)
+    ap.add_argument("--manifest", default=None, metavar="FILE",
+                    help="write a schema-versioned run manifest JSON")
+    ap.add_argument("--events", default=None, metavar="FILE",
+                    help="write lifecycle events (compile/scan/checkpoint/"
+                         "respawn) as NDJSON")
+    ap.add_argument("--metrics", default=None, metavar="TARGET",
+                    help="stream per-interval telemetry as NDJSON frames "
+                         "to a file path, tcp:host:port, or unix:/path")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the run into DIR")
+    from repro.obs.reporter import add_output_flags
+    add_output_flags(ap)
     args = ap.parse_args(argv)
 
     sys_ = get_system(args.system)
@@ -163,8 +176,104 @@ def main(argv=None):
     if args.accounts_json:
         accounts = acct_mod.load_json(args.accounts_json)
 
+    from repro import obs
+    rep = obs.Reporter.from_flags(args)
+    recorder = None
+    if args.manifest or args.events:
+        recorder = obs.RunRecorder(manifest_path=args.manifest,
+                                   events_path=args.events)
+        recorder.begin(
+            sys_, command="sweep" if args.sweep else "simulate", argv=argv,
+            scenario={"policy": args.policy,
+                      "backfill": args.backfill or "none",
+                      "scheduler": args.scheduler, "sweep": args.sweep,
+                      "external_cmd": args.external_cmd,
+                      "external_socket": args.external_socket,
+                      "external_mode": args.external_mode,
+                      "halls": args.halls,
+                      "cells_offline": args.cells_offline,
+                      "t0_s": t0, "duration_s": t1 - t0},
+            seed=args.seed, jobs=js)
+        recorder.event("run_start")
+    timer = obs.SpanTimer(listener=recorder.span_listener
+                          if recorder else None)
+    if args.profile:
+        import jax
+        jax.profiler.start_trace(args.profile)
+
     wall0 = time.perf_counter()
+    with obs.use(timer):
+        runs, bridge = _run(args, sys_, js, table, accounts, t0, t1,
+                            cells_offline, recorder)
+    wall = time.perf_counter() - wall0
+    if args.profile:
+        import jax
+        jax.profiler.stop_trace()
+        rep.info(f"profiler trace -> {args.profile}")
+
+    sink = obs.MetricsSink(args.metrics) if args.metrics else None
+    summaries = {}
+    for (p, b), final, hist in runs:
+        s = stats_mod.summarize(sys_, table, final, hist)
+        label = f"{p}:{b}"
+        summaries[label] = s
+        if sink is not None:
+            obs.stream_history(sink, recorder.run_id if recorder
+                               else "anonymous", sys_, table, final, hist,
+                               label=label, summary=s)
+        rep.result(f"=== {args.system} policy={p} backfill={b} "
+                   f"(sim {t1 - t0:.0f}s in {wall:.1f}s wall, "
+                   f"{(t1 - t0) / wall:.0f}x realtime) ===\n" +
+                   stats_mod.format_stats(s),
+                   key=label, value=s)
+        if args.output:
+            out = pathlib.Path(args.output) / secrets.token_hex(4)
+            out.mkdir(parents=True, exist_ok=True)
+            np.savez(out / "history.npz",
+                     **{k: np.asarray(getattr(hist, k))
+                        for k in vars(hist) if not k.startswith("_")})
+            (out / "stats.out").write_text(stats_mod.format_stats(s))
+            with open(out / "job_history.csv", "w") as f:
+                f.write("job,submit,start,end,nodes,account,state\n")
+                st_ = np.asarray(final.start)
+                en_ = np.asarray(final.end)
+                js_ = np.asarray(final.jstate)
+                for j in range(len(js)):
+                    f.write(f"{j},{js.submit[j]:.0f},{st_[j]:.0f},"
+                            f"{en_[j]:.0f},{js.nodes[j]},{js.account[j]},"
+                            f"{js_[j]}\n")
+            if args.accounts:
+                acct_mod.save_json(final.accounts,
+                                   str(out / "accounts.json"))
+            rep.info(f"output -> {out}")
+            rep.result_json("output_dir", str(out))
+    if sink is not None:
+        sink.close()
+        rep.info(f"metrics: {sink.n_frames} frames -> {args.metrics}")
+    if bridge is not None:
+        rep.result_json("bridge", bridge.stats())
+    if recorder is not None:
+        recorder.event("run_end", wall_s=wall)
+        counters = {"sweep_cache": dict(eng.SWEEP_CACHE_STATS)}
+        if bridge is not None:
+            counters["bridge"] = bridge.stats()
+        if sink is not None:
+            counters["metrics_frames"] = sink.n_frames
+        recorder.finalize(spans=timer.summary(), counters=counters,
+                          wall_s=wall, summaries=summaries)
+        rep.info(f"manifest -> {args.manifest}" if args.manifest
+                 else f"events -> {args.events}")
+    rep.flush_json()
+
+
+def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
+    """Dispatch one CLI invocation to the right engine path.
+
+    Returns (runs, bridge): ``runs`` is a list of ((policy, backfill),
+    final, hist) and ``bridge`` the SchedulerBridge when an external
+    coupling ran in plugin mode (its counters feed the manifest)."""
     backfill_cli = args.backfill or "none"
+    bridge = None
     if args.external_cmd or args.external_socket:
         from repro.core import transport as tr
         policy = args.policy if args.policy != "replay" else "fcfs"
@@ -180,6 +289,7 @@ def main(argv=None):
                                  policy=policy, backfill=backfill,
                                  timeout_s=args.external_timeout)
         ext_scen = T.Scenario.make("replay", cells_offline=cells_offline)
+        on_event = recorder.span_listener if recorder else None
         try:
             if args.external_mode == "sequential":
                 # one-shot coupling: the peer is driven directly (the
@@ -188,7 +298,8 @@ def main(argv=None):
                                                       t0, t1, scen=ext_scen)
             else:
                 bridge = ext.SchedulerBridge(
-                    peer, ext.BridgeConfig(timeout_s=args.external_timeout))
+                    peer, ext.BridgeConfig(timeout_s=args.external_timeout),
+                    on_event=on_event)
                 final, hist, _ = ext.run_plugin_mode(sys_, js, bridge,
                                                      t0, t1, scen=ext_scen)
         finally:
@@ -197,16 +308,19 @@ def main(argv=None):
             hist = types.SimpleNamespace(**hist)
         runs = [((policy, f"external:{args.external_mode}"), final, hist)]
     elif args.scheduler in ("fastsim", "scheduleflow"):
-        sched = ext.FastSimLike(policy=args.policy if args.policy != "replay"
-                                else "fcfs") \
-            if args.scheduler == "fastsim" else ext.ScheduleFlowLike()
         ext_scen = T.Scenario.make("replay", cells_offline=cells_offline)
-        final, hist = \
-            ext.run_sequential_mode(sys_, js, sched, t0, t1,
-                                    scen=ext_scen) \
-            if args.scheduler == "fastsim" else \
-            ext.run_plugin_mode(sys_, js, sched, t0, t1,
-                                scen=ext_scen)[:2]
+        if args.scheduler == "fastsim":
+            sched = ext.FastSimLike(policy=args.policy
+                                    if args.policy != "replay" else "fcfs")
+            final, hist = ext.run_sequential_mode(sys_, js, sched, t0, t1,
+                                                  scen=ext_scen)
+        else:
+            # explicit bridge so its poll counters reach the manifest
+            bridge = ext.SchedulerBridge(
+                ext.ScheduleFlowLike(),
+                on_event=recorder.span_listener if recorder else None)
+            final, hist = ext.run_plugin_mode(sys_, js, bridge, t0, t1,
+                                              scen=ext_scen)[:2]
         if isinstance(hist, dict):  # plugin mode returns a dict of arrays
             hist = types.SimpleNamespace(**hist)
         runs = [((args.policy, "external"), final, hist)]
@@ -238,34 +352,7 @@ def main(argv=None):
         final, hist = eng.simulate_static(sys_, table, args.policy,
                                           backfill_cli, t0, t1, accounts)
         runs = [((args.policy, backfill_cli), final, hist)]
-    wall = time.perf_counter() - wall0
-
-    for (p, b), final, hist in runs:
-        s = stats_mod.summarize(sys_, table, final, hist)
-        print(f"=== {args.system} policy={p} backfill={b} "
-              f"(sim {t1 - t0:.0f}s in {wall:.1f}s wall, "
-              f"{(t1 - t0) / wall:.0f}x realtime) ===")
-        print(stats_mod.format_stats(s))
-        if args.output:
-            out = pathlib.Path(args.output) / secrets.token_hex(4)
-            out.mkdir(parents=True, exist_ok=True)
-            np.savez(out / "history.npz",
-                     **{k: np.asarray(getattr(hist, k))
-                        for k in vars(hist) if not k.startswith("_")})
-            (out / "stats.out").write_text(stats_mod.format_stats(s))
-            with open(out / "job_history.csv", "w") as f:
-                f.write("job,submit,start,end,nodes,account,state\n")
-                st_ = np.asarray(final.start)
-                en_ = np.asarray(final.end)
-                js_ = np.asarray(final.jstate)
-                for j in range(len(js)):
-                    f.write(f"{j},{js.submit[j]:.0f},{st_[j]:.0f},"
-                            f"{en_[j]:.0f},{js.nodes[j]},{js.account[j]},"
-                            f"{js_[j]}\n")
-            if args.accounts:
-                acct_mod.save_json(final.accounts,
-                                   str(out / "accounts.json"))
-            print(f"output -> {out}")
+    return runs, bridge
 
 
 if __name__ == "__main__":

@@ -91,7 +91,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="results/ckpt")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    from repro.obs.reporter import Reporter, add_output_flags
+    add_output_flags(ap)
     args = ap.parse_args(argv)
+    rep = Reporter.from_flags(args)
 
     cfg = get_config(args.arch)
     api = get_api(cfg)
@@ -112,12 +115,12 @@ def main(argv=None):
                 moment_dtype=cfg.moment_dtype), params)
         else:
             params, opt_state = restored
-            print(f"resumed from step {start_step}")
+            rep.info(f"resumed from step {start_step}")
 
         n_params = sum(int(np.prod(p.shape))
                        for p in jax.tree_util.tree_leaves(params))
-        print(f"arch={args.arch} params={n_params / 1e6:.1f}M "
-              f"tokens/step={args.batch * args.seq}")
+        rep.info(f"arch={args.arch} params={n_params / 1e6:.1f}M "
+                 f"tokens/step={args.batch * args.seq}")
         t_hist, losses = [], []
         for step in range(start_step, args.steps):
             key, sub = jax.random.split(key)
@@ -130,15 +133,19 @@ def main(argv=None):
             losses.append(loss)
             if step % args.log_every == 0 or step == args.steps - 1:
                 tps = args.batch * args.seq / np.mean(t_hist[-10:])
-                print(f"step {step:5d}  loss {loss:8.4f}  "
-                      f"gnorm {float(metrics['grad_norm']):8.3f}  "
-                      f"{tps:,.0f} tok/s  {dt * 1e3:.0f} ms/step",
-                      flush=True)
+                rep.info(f"step {step:5d}  loss {loss:8.4f}  "
+                         f"gnorm {float(metrics['grad_norm']):8.3f}  "
+                         f"{tps:,.0f} tok/s  {dt * 1e3:.0f} ms/step")
             if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
                 save_ckpt(ckpt_dir, step + 1, params, opt_state)
         if losses:
-            print(f"final loss {losses[-1]:.4f} "
-                  f"(delta {losses[-1] - losses[0]:+.4f})")
+            rep.result(f"final loss {losses[-1]:.4f} "
+                       f"(delta {losses[-1] - losses[0]:+.4f})",
+                       key="train",
+                       value={"arch": args.arch, "steps": args.steps,
+                              "final_loss": losses[-1],
+                              "loss_delta": losses[-1] - losses[0]})
+    rep.flush_json()
     return losses
 
 

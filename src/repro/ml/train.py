@@ -45,6 +45,7 @@ import numpy as np
 from repro.core import engine as eng
 from repro.core import types as T
 from repro.ml import scoring
+from repro.obs import timing as obs_timing
 from repro.systems.config import SystemConfig
 
 # ---------------------------------------------------------------------------
@@ -255,7 +256,8 @@ def train(system: SystemConfig, table: T.JobTable, t0: float, t1: float,
           signals=None, weather=None, seed: int = 0,
           checkpoint: str | pathlib.Path | None = None,
           resume: bool = False, sharded: bool = True,
-          log: Callable[[str], None] | None = print) -> TrainResult:
+          log: Callable[[str], None] | None = print,
+          recorder=None) -> TrainResult:
     """ES-train the scoring alpha against batched twin rollouts.
 
     Args:
@@ -283,10 +285,17 @@ def train(system: SystemConfig, table: T.JobTable, t0: float, t1: float,
       resume: load ``checkpoint`` and continue to ``generations``.
       sharded: use ``simulate_sweep_sharded`` (population axis across
         devices); identical to ``simulate_sweep`` on one device.
+      log: per-generation progress line sink; the default routes through
+        the ``repro`` logger (stderr); ``None`` silences.
+      recorder: optional ``obs.RunRecorder`` — gets a ``generation``
+        event per generation and a ``checkpoint`` event per save.
     Returns:
       ``TrainResult`` with the elite alpha (never worse than the baseline
       on this reward, since the baseline is evaluated in-band).
     """
+    if log is print:    # route the default through logging, not stdout
+        from repro.obs.reporter import get_logger
+        log = get_logger().info
     if table.ml_basis is None:
         raise ValueError("table has no ml_basis; call "
                          "ml.pipeline.attach_basis(js, model) before "
@@ -332,12 +341,19 @@ def train(system: SystemConfig, table: T.JobTable, t0: float, t1: float,
         stack = np.concatenate(
             [cands, mu[None].astype(np.float32),
              base_alpha[None].astype(np.float32)], 0)
+        cache0 = dict(eng.SWEEP_CACHE_STATS)
         wall = time.perf_counter()
-        finals, hists = _rollout(system, table, stack, t0, t1,
-                                 backfill=backfill, scen_kw=scen_kw,
-                                 signals=signals, weather=weather,
-                                 sharded=sharded)
+        with obs_timing.maybe_span("train.generation", generation=gen):
+            finals, hists = _rollout(system, table, stack, t0, t1,
+                                     backfill=backfill, scen_kw=scen_kw,
+                                     signals=signals, weather=weather,
+                                     sharded=sharded)
         wall = time.perf_counter() - wall
+        # per-generation sweep-runner cache deltas: steady state is all
+        # hits after generation 0 — a miss later means a shape changed
+        # and the generation silently recompiled
+        cache_hits = eng.SWEEP_CACHE_STATS["hits"] - cache0["hits"]
+        cache_misses = eng.SWEEP_CACHE_STATS["misses"] - cache0["misses"]
         metrics = rollout_metrics(
             system, table, finals, hists,
             float((scen_kw or {}).get("setpoint_delta_c", 0.0)))
@@ -359,7 +375,14 @@ def train(system: SystemConfig, table: T.JobTable, t0: float, t1: float,
             "reward_baseline": float(r_base),
             "reward_pop_mean": float(r_pop.mean()),
             "wall_s": wall, "mu": [float(x) for x in mu],
+            "cache_hits": cache_hits, "cache_misses": cache_misses,
         })
+        if recorder is not None:
+            recorder.event("generation", generation=gen,
+                           reward_mu=float(r_mu),
+                           reward_best=float(best_reward),
+                           wall_s=wall, cache_hits=cache_hits,
+                           cache_misses=cache_misses)
         if log:
             log(f"gen {gen:3d}  r(mu)={r_mu:+.4f}  "
                 f"r(best)={best_reward:+.4f}  r(base)={r_base:+.4f}  "
@@ -371,6 +394,9 @@ def train(system: SystemConfig, table: T.JobTable, t0: float, t1: float,
                              history=history, best_alpha=best_alpha,
                              best_reward=best_reward, refs=refs,
                              reward=reward.spec, seed=seed)
+            if recorder is not None:
+                recorder.event("checkpoint", path=str(checkpoint),
+                               generation=gen + 1)
 
     # the baseline reward is deterministic: read it off the last generation
     # (== -sum of weights when every normalizer is nonzero)
@@ -445,6 +471,12 @@ def main(argv=None) -> TrainResult:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny seeded config; asserts the trained reward "
                          "improves on the default alpha")
+    ap.add_argument("--manifest", default=None, metavar="FILE",
+                    help="write a schema-versioned run manifest JSON")
+    ap.add_argument("--events", default=None, metavar="FILE",
+                    help="write lifecycle events as NDJSON")
+    from repro.obs.reporter import add_output_flags
+    add_output_flags(ap)
     import sys as _sys
     argv = list(_sys.argv[1:]) if argv is None else list(argv)
     if "--smoke" in argv:
@@ -487,23 +519,58 @@ def main(argv=None) -> TrainResult:
     if args.cells_offline:
         scen_kw["cells_offline"] = args.cells_offline
 
-    res = train(sys_, table, 0.0, t1, reward=args.reward,
-                generations=args.generations, population=args.population,
-                sigma=args.sigma, lr=args.lr, backfill=args.backfill,
-                scen_kw=scen_kw, weather=weather, seed=args.seed,
-                checkpoint=args.checkpoint, resume=args.resume)
+    from repro import obs
+    rep = obs.Reporter.from_flags(args)
+    recorder = None
+    if args.manifest or args.events:
+        recorder = obs.RunRecorder(manifest_path=args.manifest,
+                                   events_path=args.events)
+        recorder.begin(sys_, command="train", argv=argv,
+                       scenario={"reward": args.reward,
+                                 "generations": args.generations,
+                                 "population": args.population,
+                                 "sigma": args.sigma, "lr": args.lr,
+                                 "backfill": args.backfill,
+                                 "heat_wave_c": args.heat_wave_c,
+                                 "cells_offline": args.cells_offline},
+                       seed=args.seed, jobs=js)
+        recorder.event("run_start", command="train")
+    timer = obs.SpanTimer(listener=recorder.span_listener
+                          if recorder else None)
+    with obs.use(timer):
+        res = train(sys_, table, 0.0, t1, reward=args.reward,
+                    generations=args.generations,
+                    population=args.population,
+                    sigma=args.sigma, lr=args.lr, backfill=args.backfill,
+                    scen_kw=scen_kw, weather=weather, seed=args.seed,
+                    checkpoint=args.checkpoint, resume=args.resume,
+                    log=rep.log_fn(), recorder=recorder)
     gain = res.reward_best - res.reward_default
-    print(f"trained alpha: {np.round(res.alpha, 4).tolist()}  "
-          f"reward {res.reward_best:+.4f} vs default "
-          f"{res.reward_default:+.4f}  (gain {gain:+.4f})")
+    rep.result(f"trained alpha: {np.round(res.alpha, 4).tolist()}  "
+               f"reward {res.reward_best:+.4f} vs default "
+               f"{res.reward_default:+.4f}  (gain {gain:+.4f})",
+               key="train",
+               value={"alpha": res.alpha, "reward_best": res.reward_best,
+                      "reward_default": res.reward_default, "gain": gain,
+                      "generations": res.generations})
     if args.checkpoint:
-        print(f"checkpoint -> {args.checkpoint}")
+        rep.info(f"checkpoint -> {args.checkpoint}")
+        rep.result_json("checkpoint", str(args.checkpoint))
+    if recorder is not None:
+        recorder.event("run_end", generations=res.generations)
+        recorder.finalize(
+            spans=timer.summary(),
+            counters={"sweep_cache": dict(eng.SWEEP_CACHE_STATS)},
+            result={"reward_best": res.reward_best,
+                    "reward_default": res.reward_default, "gain": gain,
+                    "generations": res.generations})
+    rep.flush_json()
     if args.smoke:
         assert gain > 0.0, (
             f"smoke training failed to improve on the default alpha "
             f"(gain {gain:+.5f})")
-        print("smoke OK: trained policy improves the reward "
-              f"by {gain:+.4f} over the default alpha")
+        rep.info("smoke OK: trained policy improves the reward "
+                 f"by {gain:+.4f} over the default alpha")
     return res
 
 

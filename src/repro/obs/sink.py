@@ -1,0 +1,152 @@
+"""Streaming metrics sink: StepRecord telemetry → NDJSON frames.
+
+Converts the engine's per-interval ``StepRecord`` history into
+``obs.schema.metrics_frame`` NDJSON frames — power, PUE, utilization,
+queue depth, per-hall basin temperatures — and writes them to a file or
+a listening socket, reusing the PR 5 transport framing
+(``core.transport.write_frame``, same ``MAX_FRAME_BYTES`` cap and
+versioned envelopes as the scheduler wire). This is the dashboard-ready
+stream for twin-as-a-service: a consumer reads lines of JSON, no
+repro import required.
+
+Target syntax (``--metrics`` on the CLIs):
+
+* ``out.ndjson`` (any plain path) — append-less truncating file write;
+* ``tcp:host:port`` — dial a TCP listener and stream frames to it;
+* ``unix:/path/sock`` — same over a Unix-domain socket.
+
+Note ``transport.parse_address`` is *not* reused for classification: it
+treats any string containing "/" as AF_UNIX, which would eat relative
+file paths. Here the rule is explicit: a ``tcp:``/``unix:`` prefix means
+socket, anything else is a file.
+"""
+from __future__ import annotations
+
+import pathlib
+import socket
+from typing import IO, Iterator, Optional
+
+import numpy as np
+
+from repro.obs import schema
+
+# StepRecord scalar fields streamed per interval (field name -> frame key)
+SCALAR_FIELDS = (
+    "power_it", "power_loss", "power_cooling", "power_total", "pue",
+    "util", "n_queued", "n_running", "throttle_frac", "cap_w",
+    "t_tower_return", "t_basin", "t_supply_max", "t_wetbulb",
+    "emissions_kg", "energy_cost",
+)
+# per-hall vector fields (f32[H] per step)
+HALL_FIELDS = ("power_it_hall", "t_basin_hall", "t_supply_max_hall",
+               "cells_online")
+
+
+class MetricsSink:
+    """Writes schema-versioned NDJSON frames to a file or socket.
+
+    One sink per run; ``emit`` takes an already-built frame dict so the
+    recorder/CLI can interleave metrics and summary frames on the same
+    wire. Frames are validated on the way out — a producer bug fails
+    loudly at the twin, not as a consumer parse error.
+    """
+
+    def __init__(self, target: str, connect_timeout_s: float = 10.0):
+        self.target = str(target)
+        self.n_frames = 0
+        self._sock: Optional[socket.socket] = None
+        if self.target.startswith(("tcp:", "unix:")):
+            if self.target.startswith("unix:"):
+                family, sockaddr = socket.AF_UNIX, self.target[len("unix:"):]
+            else:
+                rest = self.target[len("tcp:"):]
+                host, _, port = rest.rpartition(":")
+                if not host or not port.isdigit():
+                    raise ValueError(f"metrics target must be tcp:host:port,"
+                                     f" got {self.target!r}")
+                family, sockaddr = socket.AF_INET, (host, int(port))
+            self._sock = socket.socket(family, socket.SOCK_STREAM)
+            self._sock.settimeout(connect_timeout_s)
+            self._sock.connect(sockaddr)
+            self._file: IO[bytes] = self._sock.makefile("wb")
+        else:
+            p = pathlib.Path(self.target)
+            if p.parent != pathlib.Path(""):
+                p.parent.mkdir(parents=True, exist_ok=True)
+            self._file = open(p, "wb")
+
+    def emit(self, frame: dict) -> None:
+        from repro.core.transport import write_frame
+        write_frame(self._file, schema.validate_frame(frame))
+        self.n_frames += 1
+
+    def close(self) -> None:
+        if self._file is not None:
+            try:
+                self._file.close()
+            finally:
+                self._file = None  # type: ignore[assignment]
+        if self._sock is not None:
+            self._sock.close()
+            self._sock = None
+
+    def __enter__(self) -> "MetricsSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def history_frames(run_id: str, hist, label: Optional[str] = None,
+                   seq0: int = 0) -> Iterator[dict]:
+    """Yield one metrics frame per simulated interval of ``hist``.
+
+    ``hist`` is the engine's ``StepRecord`` pytree with a leading time
+    axis (the ``ys`` of the scan); each frame carries the scalar
+    telemetry plus the per-hall vectors for that interval. Non-finite
+    values (e.g. the uncapped ``cap_w = +inf``) arrive as ``null``.
+    """
+    t = np.asarray(hist.t, np.float64)
+    scalars = {k: np.asarray(getattr(hist, k), np.float64)
+               for k in SCALAR_FIELDS}
+    halls = {k: np.asarray(getattr(hist, k), np.float64)
+             for k in HALL_FIELDS}
+    for i in range(t.shape[0]):
+        data = {k: float(v[i]) for k, v in scalars.items()}
+        data.update({k: v[i].tolist() for k, v in halls.items()})
+        yield schema.metrics_frame(run_id, seq0 + i, float(t[i]), data,
+                                   label=label)
+
+
+def stream_history(sink: MetricsSink, run_id: str, system, table, final,
+                   hist, label: Optional[str] = None,
+                   summary: Optional[dict] = None) -> int:
+    """Stream a whole run: per-interval frames + one summary frame.
+
+    ``summary`` defaults to ``stats.summarize`` over the run (the same
+    reductions the CLI prints), so a dashboard tailing the stream gets
+    the final scorecard on the same wire. Returns the frame count.
+    """
+    n = 0
+    for frame in history_frames(run_id, hist, label=label):
+        sink.emit(frame)
+        n += 1
+    if summary is None:
+        from repro.core import stats as stats_mod
+        summary = stats_mod.summarize(system, table, final, hist)
+    sink.emit(schema.summary_frame(run_id, summary, label=label))
+    return n + 1
+
+
+def read_frames(path) -> list[dict]:
+    """Load and validate every NDJSON frame from a file (test/consumer
+    convenience; the stream itself needs no repro code to parse)."""
+    from repro.core.transport import read_frame
+    frames = []
+    with open(path, "rb") as f:
+        while True:
+            try:
+                frames.append(schema.validate_frame(read_frame(f)))
+            except ConnectionError:   # clean EOF
+                break
+    return frames

@@ -89,6 +89,49 @@ def test_stats_summary_fields(small_system, small_table):
     assert "avg_pue" in out
 
 
+def test_stats_empty_job_set(small_system, small_jobs):
+    """An all-padding table (zero real jobs) summarizes to finite zeros."""
+    empty = small_jobs.select(np.zeros(len(small_jobs), dtype=bool))
+    table = empty.to_table(16)
+    final, hist = eng.simulate(small_system, table,
+                               T.Scenario.make("fcfs", "first-fit"),
+                               0.0, 10 * small_system.dt)
+    s = stats_mod.summarize(small_system, table, final, hist)
+    assert s["jobs_completed"] == 0.0
+    assert s["avg_wait_s"] == 0.0 and s["avg_turnaround_s"] == 0.0
+    assert s["hist_small"] + s["hist_medium"] + s["hist_large"] == 0
+    for v in s.values():
+        assert np.isfinite(v)
+
+
+def test_stats_all_unfinished_jobs(small_system, small_table):
+    """A window shorter than any job's runtime: nothing completes, and
+    the per-job means must not divide by an empty set."""
+    final, hist = eng.simulate(small_system, small_table,
+                               T.Scenario.make("fcfs", "first-fit"),
+                               0.0, 2 * small_system.dt)
+    s = stats_mod.summarize(small_system, small_table, final, hist)
+    assert s["jobs_completed"] == 0.0
+    assert s["avg_job_energy_j"] == 0.0 and s["avg_job_nodes"] == 0.0
+    assert s["edp"] == 0.0
+    assert s["avg_system_power_mw"] >= 0.0
+    for v in s.values():
+        assert np.isfinite(v)
+
+
+def test_stats_single_interval_run(small_system, small_table):
+    """One engine step: telemetry reductions over a length-1 history."""
+    final, hist = eng.simulate(small_system, small_table,
+                               T.Scenario.make("fcfs", "first-fit"),
+                               0.0, small_system.dt)
+    assert np.asarray(hist.power_total).shape[-1] == 1
+    s = stats_mod.summarize(small_system, small_table, final, hist)
+    assert s["power_swing_mw"] == 0.0  # max == min over one sample
+    assert s["throughput_per_hour"] >= 0.0
+    for v in s.values():
+        assert np.isfinite(v)
+
+
 def test_lm_workload_from_roofline_artifacts():
     """The AI-workload dataset ties the twin to the compiled LM layer:
     per-node power comes from each cell's roofline utilization."""

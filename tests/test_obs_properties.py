@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis) for the flight-recorder frames.
+
+The metrics/event streams ride the same transport framing as the
+scheduler wire, so the invariants are the same: every frame the obs
+layer can construct must survive a ``write_frame``/``read_frame`` round
+trip byte-for-byte, stay strict-JSON (no NaN/Infinity on the wire), and
+fit ``MAX_FRAME_BYTES`` even at Frontier-scale hall counts.
+"""
+import io
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import transport as tr  # noqa: E402
+from repro.obs import schema  # noqa: E402
+
+# scalar telemetry: any float the engine can emit, including the
+# non-finite values (+inf cap_w, NaN from a masked reduction)
+any_float = st.floats(allow_nan=True, allow_infinity=True, width=64)
+field_names = st.text(
+    alphabet="abcdefghijklmnopqrstuvwxyz_", min_size=1, max_size=24)
+
+# per-hall vectors up to well past Frontier scale (Frontier's topology
+# is O(10) halls; 512 leaves margin for synthetic what-ifs)
+hall_vectors = st.lists(any_float, min_size=1, max_size=512)
+
+telemetry = st.dictionaries(
+    field_names,
+    st.one_of(any_float, hall_vectors, st.integers(-2**40, 2**40)),
+    max_size=24)
+
+
+def _roundtrip(frame: dict) -> dict:
+    buf = io.BytesIO()
+    tr.write_frame(buf, frame)
+    assert buf.tell() <= tr.MAX_FRAME_BYTES
+    buf.seek(0)
+    return tr.read_frame(buf)
+
+
+def _assert_finite(x):
+    if isinstance(x, float):
+        assert math.isfinite(x)
+    elif isinstance(x, list):
+        for v in x:
+            _assert_finite(v)
+    elif isinstance(x, dict):
+        for v in x.values():
+            _assert_finite(v)
+
+
+@given(telemetry, st.integers(0, 2**31), any_float)
+@settings(max_examples=200, deadline=None)
+def test_metrics_frame_roundtrips_and_is_strict_json(data, seq, t_sim):
+    t_sim = t_sim if math.isfinite(t_sim) else 0.0
+    frame = schema.metrics_frame("run-prop", seq, t_sim, data,
+                                 label="fcfs:easy")
+    schema.validate_frame(frame)
+    back = _roundtrip(frame)
+    assert back == frame          # byte-faithful wire trip
+    _assert_finite(back["data"])  # NaN/inf never reach the wire
+
+
+@given(field_names, telemetry, st.integers(0, 2**31))
+@settings(max_examples=100, deadline=None)
+def test_event_frame_roundtrips(event, fields, seq):
+    fields.pop("run_id", None)  # envelope keys are the frame's own
+    fields.pop("kind", None)
+    fields.pop("v", None)
+    fields.pop("seq", None)
+    fields.pop("event", None)
+    fields.pop("t_wall", None)
+    frame = schema.event_frame("run-prop", seq, 1.5, event, **fields)
+    back = _roundtrip(schema.validate_frame(frame))
+    assert back == frame
+    assert back["event"] == event and back["seq"] == seq
+
+
+@given(st.integers(1, 512), st.integers(1, 40))
+@settings(max_examples=50, deadline=None)
+def test_frontier_scale_frames_fit_the_wire(n_halls, n_fields):
+    """A full StepRecord frame with every hall vector at width
+    ``n_halls`` stays far below MAX_FRAME_BYTES."""
+    data = {f"scalar_{i}": 1.0e6 for i in range(n_fields)}
+    for name in ("power_it_hall", "t_basin_hall", "t_supply_max_hall",
+                 "cells_online"):
+        data[name] = [293.15] * n_halls
+    frame = schema.metrics_frame("run-prop", 0, 0.0, data)
+    buf = io.BytesIO()
+    tr.write_frame(buf, frame)
+    assert buf.tell() <= tr.MAX_FRAME_BYTES
+    assert _roundtrip(frame) == frame

@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: diff a BENCH_*.json against its committed history.
+
+The smoke benchmarks (``benchmarks/engine_throughput.py --smoke``,
+``benchmarks/fig10_ml.py --smoke``) write ``BENCH_engine.json`` /
+``BENCH_ml.json``. This tool extracts every throughput metric from such a
+file — any numeric JSON leaf whose key ends in ``_per_s``, named by its
+path (``engine/smoke.steps_per_s``, ``train.generations_per_s``) — and
+compares it against the median of the most recent history entries recorded
+on the *same backend* (a laptop-CPU run never gates a GPU baseline; the
+``meta`` block written by ``benchmarks.common.bench_meta`` carries the
+backend).
+
+History lives in ``benchmarks/baselines/*.ndjson``, one JSON object per
+line::
+
+    {"ts": ..., "git_sha": ..., "backend": "cpu", "device": ...,
+     "metrics": {"engine/smoke.steps_per_s": 123.4, ...}}
+
+Exit codes: 0 = within threshold (or no comparable history — first run on
+a backend is a free pass, noted on stderr); 1 = at least one metric
+regressed by more than ``--threshold`` (default 30%) vs its baseline
+median; 2 = bad invocation / unreadable input.
+
+``--append`` adds the current run to the history file after the
+comparison, so CI extends the trajectory on every green run. See
+docs/observability.md for the full workflow.
+
+Usage:
+  python tools/bench_compare.py BENCH_engine.json \
+      --history benchmarks/baselines/engine_history.ndjson --append
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import subprocess
+import sys
+import time
+
+WINDOW = 5  # baseline = median over the last <= WINDOW same-backend runs
+
+
+def extract_metrics(obj, prefix: str = "") -> dict:
+    """Numeric leaves whose key ends in ``_per_s``, keyed by JSON path."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (dict, list)):
+                out.update(extract_metrics(v, path))
+            elif (isinstance(v, (int, float)) and not isinstance(v, bool)
+                  and str(k).endswith("_per_s")):
+                out[path] = float(v)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(extract_metrics(v, f"{prefix}[{i}]"))
+    return out
+
+
+def load_history(path: pathlib.Path) -> list[dict]:
+    entries = []
+    if not path.exists():
+        return entries
+    for n, line in enumerate(path.read_text().splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            e = json.loads(line)
+        except json.JSONDecodeError as exc:
+            print(f"{path}:{n}: skipping unparseable history line ({exc})",
+                  file=sys.stderr)
+            continue
+        if isinstance(e, dict) and isinstance(e.get("metrics"), dict):
+            entries.append(e)
+    return entries
+
+
+def _git_sha() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except OSError:
+        return None
+
+
+def compare(current: dict, history: list[dict], backend: str,
+            threshold: float) -> tuple[list[str], list[str]]:
+    """Return (report lines, regression lines)."""
+    same = [e for e in history if e.get("backend") == backend]
+    report, regressions = [], []
+    if not same:
+        report.append(f"no history for backend={backend!r} "
+                      f"({len(history)} entries total) — nothing to gate")
+        return report, regressions
+    window = same[-WINDOW:]
+    for name, cur in sorted(current.items()):
+        vals = [e["metrics"][name] for e in window
+                if isinstance(e["metrics"].get(name), (int, float))]
+        if not vals:
+            report.append(f"  {name}: {cur:.3f} (new metric, no baseline)")
+            continue
+        base = statistics.median(vals)
+        ratio = cur / base if base else float("inf")
+        line = (f"  {name}: {cur:.3f} vs median({len(vals)})="
+                f"{base:.3f}  ({ratio * 100:.0f}% of baseline)")
+        if base > 0 and cur < base * (1.0 - threshold):
+            regressions.append(
+                f"REGRESSION {name}: {cur:.3f} < {base:.3f} "
+                f"* (1 - {threshold:.0%})")
+            line += "  <-- REGRESSION"
+        report.append(line)
+    return report, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate a BENCH_*.json against its committed history")
+    ap.add_argument("bench", help="current BENCH_*.json to gate")
+    ap.add_argument("--history", required=True,
+                    help="NDJSON history file (benchmarks/baselines/...)")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional drop vs baseline median")
+    ap.add_argument("--append", action="store_true",
+                    help="append this run to the history after comparing")
+    args = ap.parse_args(argv)
+
+    bench_path = pathlib.Path(args.bench)
+    try:
+        payload = json.loads(bench_path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"cannot read {bench_path}: {exc}", file=sys.stderr)
+        return 2
+    meta = payload.get("meta", {}) if isinstance(payload, dict) else {}
+    backend = meta.get("backend", "unknown")
+    current = extract_metrics(payload)
+    if not current:
+        print(f"{bench_path}: no *_per_s metrics found", file=sys.stderr)
+        return 2
+
+    hist_path = pathlib.Path(args.history)
+    history = load_history(hist_path)
+    report, regressions = compare(current, history, backend, args.threshold)
+    print(f"{bench_path.name} [backend={backend}] vs {hist_path}:")
+    for line in report:
+        print(line)
+    for line in regressions:
+        print(line, file=sys.stderr)
+
+    if args.append:
+        hist_path.parent.mkdir(parents=True, exist_ok=True)
+        entry = {"ts": time.time(), "git_sha": _git_sha(),
+                 "backend": backend, "device": meta.get("device"),
+                 "metrics": current}
+        with hist_path.open("a") as f:
+            f.write(json.dumps(entry, sort_keys=True) + "\n")
+        print(f"appended run to {hist_path} "
+              f"({len(history) + 1} entries)")
+
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
