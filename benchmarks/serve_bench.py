@@ -1,0 +1,116 @@
+"""Twin-service throughput: fork rate, coalesced advance rate, and wire
+round-trips against a live server — the serving-layer companion to
+``engine_throughput.py``.
+
+The serve stack's perf claims (docs/serving.md): forks are O(1) (carry
+shared by reference, no replay), concurrent branch advances coalesce
+into one batched sweep per tick, and the NDJSON wire adds negligible
+latency on top. The smoke mode measures all three and writes
+``BENCH_serve.json`` (``*_per_s`` leaves + backend meta) for the CI
+perf-trajectory gate (tools/bench_compare.py vs
+benchmarks/baselines/serve_history.ndjson).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/serve_bench.py`
+    import pathlib
+    import sys
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
+from repro.core import types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.serve.server import TwinServer
+from repro.serve.session import TwinSession
+from repro.systems.config import get_system
+
+INTERVAL = 8
+
+
+def make_session(n_steps: int) -> TwinSession:
+    system = get_system("marconi100").scaled(64)
+    js = generate(system, WorkloadSpec(
+        n_jobs=64, duration_s=n_steps * system.dt, load=1.2,
+        trace_len=8, n_accounts=8, mean_wall_s=1200.0, seed=1))
+    js.assign_prepop_placement(0.0, system.n_nodes)
+    return TwinSession(system, js.to_table(80),
+                       T.Scenario.make("fcfs", "easy"), 0.0,
+                       n_steps * system.dt, interval_steps=INTERVAL,
+                       num_accounts=8)
+
+
+def smoke(bench_json: str = "BENCH_serve.json", n_forks: int = 200,
+          n_roundtrips: int = 200):
+    rows = []
+
+    # -- fork rate: O(1) branch creation, no prefix replay ------------------
+    sess = make_session(n_steps=INTERVAL * 12)
+    sess.advance_many({0: 2})           # give the root a checkpoint or two
+    t0 = time.perf_counter()
+    for i in range(n_forks):
+        sess.fork(0, {"setpoint_delta_c": 0.01 * (i + 1)})
+    wall = time.perf_counter() - t0
+    rows.append({"name": "serve/forks", "wall_s": wall,
+                 "forks_per_s": n_forks / wall, "count": n_forks})
+
+    # -- coalesced advance: 4 divergent branches, one sweep per tick --------
+    sess = make_session(n_steps=INTERVAL * 12)
+    sess.advance_many({0: 1})
+    for d in ({"setpoint_delta_c": 2.0}, {"cap_scale": 0.9},
+              {"cells_offline": 1.0}):
+        sess.fork(0, d)
+    ids = list(sess.branches)
+    sess.advance_many({b: 1 for b in ids})      # compile the 4-wide sweep
+    n_intervals = 8
+    t0 = time.perf_counter()
+    sess.advance_many({b: n_intervals for b in ids})
+    wall = time.perf_counter() - t0
+    steps = len(ids) * n_intervals * INTERVAL
+    rows.append({"name": "serve/advance-coalesced", "wall_s": wall,
+                 "advance_steps_per_s": steps / wall,
+                 "branches": len(ids), "steps": steps,
+                 "coalesced_batches": sess.counters["coalesced_batches"]})
+
+    # -- wire round-trips: state requests against a live server ------------
+    from tools.twin_client import TwinClient
+    sess = make_session(n_steps=INTERVAL * 4)
+    with TwinServer(sess, f"unix:{tempfile.mkdtemp()}/bench.sock") as srv:
+        with TwinClient(srv.address) as client:
+            client.state()              # warm the path
+            t0 = time.perf_counter()
+            for _ in range(n_roundtrips):
+                client.state()
+            wall = time.perf_counter() - t0
+    rows.append({"name": "serve/wire-roundtrip", "wall_s": wall,
+                 "roundtrips_per_s": n_roundtrips / wall,
+                 "count": n_roundtrips})
+
+    for row in rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k not in ("name",))
+        print(f"{row['name']},{derived}")
+    if bench_json:
+        import json
+
+        from benchmarks.common import bench_meta
+        payload = {r["name"]: {k: v for k, v in r.items() if k != "name"}
+                   for r in rows}
+        payload["meta"] = bench_meta()
+        with open(bench_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {bench_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI canary (currently the only mode)")
+    ap.add_argument("--bench-json", default="BENCH_serve.json")
+    args = ap.parse_args()
+    smoke(args.bench_json)

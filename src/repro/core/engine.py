@@ -28,6 +28,7 @@ external scheduler decides placements between compiled steps.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Tuple
@@ -391,7 +392,8 @@ def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
              accounts: T.AccountStats | None = None,
              num_accounts: int = 64,
              signals: gsig.GridSignals | None = None,
-             weather: wsig.WeatherSignals | None = None
+             weather: wsig.WeatherSignals | None = None,
+             carry: T.SimState | None = None
              ) -> Tuple[T.SimState, T.StepRecord]:
     """Run the twin from ``t0`` to ``t1`` (seconds).
 
@@ -408,11 +410,16 @@ def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
         uncapped).
       weather: per-step ambient conditions (°C) driving the cooling tower.
         ``None`` = the static ``CoolingConfig.t_wetbulb_c``.
+      carry: start from this scan carry instead of ``init_state`` (the
+        resume-from-checkpoint path, repro.serve). ``t0``/``t1`` still
+        size the window: ``n_steps = (t1 - t0) / dt`` steps run *from
+        the carry's own clock*.
     Returns:
       (final SimState, StepRecord history with one row per step).
     """
     n_steps = int(round((t1 - t0) / system.dt))
-    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    st0 = (init_state(system, table, t0, t1, accounts, num_accounts)
+           if carry is None else carry)
     timer = obs_timing.current()
     if timer is not None:
         return _simulate_observed(system, table, st0, scen, signals,
@@ -428,11 +435,15 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
                     accounts: T.AccountStats | None = None,
                     num_accounts: int = 64,
                     signals: gsig.GridSignals | None = None,
-                    weather: wsig.WeatherSignals | None = None):
+                    weather: wsig.WeatherSignals | None = None,
+                    carry: T.SimState | None = None):
     """Single-scenario fast path: policy/backfill are *compile-time*
     constants, so only the selected priority key is computed, non-EASY runs
     skip the reservation machinery entirely, and all policy selects fold
-    away (docs/architecture.md, "The engine is a single lax.scan")."""
+    away (docs/architecture.md, "The engine is a single lax.scan").
+
+    ``carry`` starts the scan from an arbitrary checkpointed state
+    instead of ``init_state`` (see ``simulate``)."""
     n_steps = int(round((t1 - t0) / system.dt))
     # keyword/default construction with raw Python values (-> static in
     # the closure): every knob past policy/backfill takes its declared
@@ -452,7 +463,8 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
             return jax.lax.scan(body, st0_, None, length=n_steps)
         fn = jax.jit(run)
         _STATIC_CACHE[key] = fn
-    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    st0 = (init_state(system, table, t0, t1, accounts, num_accounts)
+           if carry is None else carry)
     if timer is None:
         return fn(table, st0, signals, weather)
     # observed path (opt-in): split compile from execute via AOT on a cache
@@ -472,12 +484,39 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
         return jax.block_until_ready(compiled(table, st0, signals, weather))
 
 
-_SWEEP_CACHE: dict = {}
-# Monotonic hit/miss counters over the jitted sweep-runner cache (both
-# _sweep_fn and the sharded variant). A steady-state training loop should
-# show hits only after generation 0; ``ml.train`` snapshots the deltas per
-# generation and the run manifest embeds the totals.
-SWEEP_CACHE_STATS = {"hits": 0, "misses": 0}
+# Jitted-runner cache shared by the sweep, sharded-sweep and segment
+# paths, keyed on (kind, system, n_steps, ...). Bounded: a long-lived
+# server (repro.serve) advancing many distinct segment lengths would
+# otherwise grow it without limit — least-recently-used entries are
+# evicted past ``SWEEP_CACHE_LIMIT`` (dropping a compiled runner is
+# safe: the next same-shape call re-jits and re-enters the cache).
+_SWEEP_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+SWEEP_CACHE_LIMIT = 32
+# Monotonic hit/miss/eviction counters over the jitted runner cache. A
+# steady-state training loop should show hits only after generation 0;
+# ``ml.train`` snapshots the deltas per generation and the run manifest
+# embeds the totals.
+SWEEP_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _cache_lookup(key):
+    """LRU lookup in the runner cache; bumps the hit/miss counters."""
+    fn = _SWEEP_CACHE.get(key)
+    if fn is not None:
+        _SWEEP_CACHE.move_to_end(key)
+    SWEEP_CACHE_STATS["hits" if fn is not None else "misses"] += 1
+    return fn
+
+
+def _cache_store(key, fn):
+    """Insert a runner, evicting least-recently-used entries past the
+    bound (counted in ``SWEEP_CACHE_STATS["evictions"]``)."""
+    _SWEEP_CACHE[key] = fn
+    _SWEEP_CACHE.move_to_end(key)
+    while len(_SWEEP_CACHE) > SWEEP_CACHE_LIMIT:
+        _SWEEP_CACHE.popitem(last=False)
+        SWEEP_CACHE_STATS["evictions"] += 1
+    return fn
 
 
 def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
@@ -489,8 +528,7 @@ def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
     of the ES training loop (repro.ml.train) — compile once and then run
     at steady-state throughput."""
     key = (system, n_steps, w_axis)
-    fn = _SWEEP_CACHE.get(key)
-    SWEEP_CACHE_STATS["hits" if fn is not None else "misses"] += 1
+    fn = _cache_lookup(key)
     if fn is None:
         @jax.jit
         def fn(table_, st0_, scen_, signals_, weather_):
@@ -500,7 +538,7 @@ def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
                                        weather1)
                 return jax.lax.scan(body, st0_, None, length=n_steps)
             return jax.vmap(one, in_axes=(0, w_axis))(scen_, weather_)
-        _SWEEP_CACHE[key] = fn
+        _cache_store(key, fn)
     return fn
 
 
@@ -585,8 +623,7 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
     # compiled-program cache, same rationale as _sweep_fn: per-generation
     # training rollouts re-enter here with identical shapes
     key = ("sharded", system, n_steps, w_axis, n_dev)
-    run = _SWEEP_CACHE.get(key)
-    SWEEP_CACHE_STATS["hits" if run is not None else "misses"] += 1
+    run = _cache_lookup(key)
     if run is None:
         mesh = psh.sweep_mesh()
         scen_spec = psh.scenario_spec()
@@ -606,9 +643,99 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
                              in_specs=(rep, rep, scen_spec, rep, w_spec),
                              out_specs=scen_spec)(
                 table_, st0_, scen_, signals_, weather_)
-        _SWEEP_CACHE[key] = run
+        _cache_store(key, run)
 
     final, hist = run(table, st0, batched, signals, weather_b)
     trim = lambda x: x[:S]
     return (jax.tree_util.tree_map(trim, final),
             jax.tree_util.tree_map(trim, hist))
+
+
+# ---------------------------------------------------------------------------
+# Segment simulation (resume-from-checkpoint; repro.serve).
+# ---------------------------------------------------------------------------
+def simulate_segment(system: SystemConfig, table: T.JobTable,
+                     carry: T.SimState, scen: T.Scenario, n_steps: int,
+                     signals: gsig.GridSignals | None = None,
+                     weather: wsig.WeatherSignals | None = None
+                     ) -> Tuple[T.SimState, T.StepRecord]:
+    """Advance the twin ``n_steps`` from an arbitrary scan carry.
+
+    The carry IS the complete simulation state (``SimState`` holds the
+    job lifecycle, node occupancy, account ledgers, the transient
+    ``CoolingState`` and the step cursor), so chaining segments is
+    bit-identical to one uninterrupted ``simulate`` scan: the per-step
+    body is the same ``engine_step`` and per-step environment inputs
+    (grid signals, weather) are gathered at the carry's *absolute*
+    ``step`` cursor — pass the same full-horizon arrays to every
+    segment. This is the persistent-server primitive: checkpoint the
+    carry at interval boundaries, resume or fork later without
+    re-simulating the prefix (``repro.serve``, docs/serving.md).
+
+    Args:
+      system: static machine description (compile-time constant).
+      table: padded job table shared by every segment.
+      carry: the scan carry to start from — ``init_state(...)`` for a
+        fresh trajectory, or any previously returned carry.
+      scen: traced scenario knobs for *this* segment (a fork changes
+        them mid-trajectory).
+      n_steps: number of engine steps to advance.
+      signals / weather: full-horizon per-step inputs (indexed by the
+        carry's absolute step, clamped LOCF past the end).
+    Returns:
+      (carry after ``n_steps``, StepRecord history of the segment).
+    """
+    key = ("segment", system, int(n_steps))
+    fn = _cache_lookup(key)
+    if fn is None:
+        @jax.jit
+        def fn(table_, carry_, scen_, signals_, weather_):
+            def body(st, _):
+                return engine_step(system, table_, st, scen_, signals_,
+                                   weather_)
+            return jax.lax.scan(body, carry_, None, length=int(n_steps))
+        _cache_store(key, fn)
+    return fn(table, carry, scen, signals, weather)
+
+
+def simulate_segment_sweep(system: SystemConfig, table: T.JobTable,
+                           carries, scens, n_steps: int,
+                           signals: gsig.GridSignals | None = None,
+                           weather: wsig.WeatherSignals | None = None
+                           ) -> Tuple[T.SimState, T.StepRecord]:
+    """Batched ``simulate_segment``: B divergent branches as one program.
+
+    Unlike ``simulate_sweep`` (one shared ``init_state`` broadcast), the
+    *carry* rides the batch axis too, so branches that have already
+    diverged — different fork points, different histories — advance
+    together: one compiled program per (system, segment length), B
+    lock-stepped scans inside. This is what lets a serving session
+    coalesce concurrent client what-ifs into a single dispatch
+    (repro.serve.session).
+
+    Args:
+      carries: list of ``SimState`` carries (stacked on axis 0), one per
+        branch. All must come from the same (system, table) lineage.
+      scens: list of ``Scenario``, one per branch.
+      n_steps: segment length shared by the batch.
+    Returns:
+      (stacked carries after ``n_steps``, stacked StepRecord histories).
+    """
+    if len(carries) != len(scens):
+        raise ValueError(f"need one carry per scenario: "
+                         f"{len(carries)} != {len(scens)}")
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+    batched = T.stack_scenarios(list(scens))
+    key = ("segment_sweep", system, int(n_steps))
+    fn = _cache_lookup(key)
+    if fn is None:
+        @jax.jit
+        def fn(table_, carries_, scen_, signals_, weather_):
+            def one(carry1, scen1):
+                def body(st, _):
+                    return engine_step(system, table_, st, scen1, signals_,
+                                       weather_)
+                return jax.lax.scan(body, carry1, None, length=int(n_steps))
+            return jax.vmap(one, in_axes=(0, 0))(carries_, scen_)
+        _cache_store(key, fn)
+    return fn(table, stacked, batched, signals, weather)

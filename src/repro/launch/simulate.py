@@ -45,6 +45,37 @@ def _parse_time(s: str) -> float:
     return float(s)
 
 
+def build_system(name: str, scale: int = 0, halls: int = 0):
+    """Resolve a system config with optional node scaling and a hall
+    split (capacity-preserving re-rate so every hall gets >= 1 CDU
+    group and >= 1 tower cell). Shared by the CLI entry points."""
+    sys_ = get_system(name)
+    if scale:
+        sys_ = sys_.scaled(scale)
+    if halls:
+        cool = sys_.cooling
+        # every hall needs >= 1 CDU group and >= 1 tower cell: re-rate the
+        # fleet capacity-preservingly (more, smaller cells/CDUs — total
+        # rated heat, flow, pump power and HX conductance unchanged) when
+        # a scaled config is too coarse for the requested hall count
+        cells = max(cool.n_tower_cells, halls)
+        groups = max(cool.n_groups, halls)
+        cell_k = cool.n_tower_cells / cells
+        group_k = cool.n_groups / groups
+        sys_ = dataclasses.replace(
+            sys_, cooling=dataclasses.replace(
+                cool,
+                n_groups=groups,
+                mdot_kg_s=cool.mdot_kg_s * group_k,
+                ua_w_k=cool.ua_w_k * group_k,
+                pump_w_per_group=cool.pump_w_per_group * group_k,
+                n_tower_cells=cells,
+                cell_rated_heat_w=cool.cell_rated_heat_w * cell_k,
+                fan_rated_w=cool.fan_rated_w * cell_k,
+                topology=FacilityTopology(n_halls=halls)))
+    return sys_
+
+
 def main(argv=None):
     import sys as _sys
     argv = list(_sys.argv[1:]) if argv is None else list(argv)
@@ -53,6 +84,11 @@ def main(argv=None):
         # twin rollouts; everything after "train" is its own arg set
         from repro.ml import train as ml_train
         return ml_train.main(argv[1:])
+    if argv[:1] == ["serve"]:
+        # twin-as-a-service (repro.serve, docs/serving.md): persistent
+        # session with snapshot/fork branching over a socket
+        from repro.serve import cli as serve_cli
+        return serve_cli.main(argv[1:])
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--system", default="marconi100")
     ap.add_argument("--scheduler", default="default",
@@ -122,30 +158,7 @@ def main(argv=None):
     add_output_flags(ap)
     args = ap.parse_args(argv)
 
-    sys_ = get_system(args.system)
-    if args.scale:
-        sys_ = sys_.scaled(args.scale)
-    if args.halls:
-        cool = sys_.cooling
-        # every hall needs >= 1 CDU group and >= 1 tower cell: re-rate the
-        # fleet capacity-preservingly (more, smaller cells/CDUs — total
-        # rated heat, flow, pump power and HX conductance unchanged) when
-        # a scaled config is too coarse for the requested hall count
-        cells = max(cool.n_tower_cells, args.halls)
-        groups = max(cool.n_groups, args.halls)
-        cell_k = cool.n_tower_cells / cells
-        group_k = cool.n_groups / groups
-        sys_ = dataclasses.replace(
-            sys_, cooling=dataclasses.replace(
-                cool,
-                n_groups=groups,
-                mdot_kg_s=cool.mdot_kg_s * group_k,
-                ua_w_k=cool.ua_w_k * group_k,
-                pump_w_per_group=cool.pump_w_per_group * group_k,
-                n_tower_cells=cells,
-                cell_rated_heat_w=cool.cell_rated_heat_w * cell_k,
-                fan_rated_w=cool.fan_rated_w * cell_k,
-                topology=FacilityTopology(n_halls=args.halls)))
+    sys_ = build_system(args.system, args.scale, args.halls)
     cells_offline = 0.0
     if args.cells_offline:
         parts = [float(x) for x in args.cells_offline.split(",")]

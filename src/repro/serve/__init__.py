@@ -1,0 +1,30 @@
+"""Twin-as-a-service: persistent simulation sessions with snapshot/fork
+what-if branching (docs/serving.md).
+
+Layers, bottom up:
+
+* ``snapshot`` — byte-faithful codec for the scan carry (checkpoint and
+  download format) + the Scenario delta wire form;
+* ``session``  — the branch manager: interval checkpoints, forks from
+  any checkpoint, per-tick coalescing of concurrent advances into one
+  batched sweep;
+* ``protocol`` — the NDJSON request dialect over the PR 5 transport;
+* ``server``   — sockets, threads, the coalescing executor, obs;
+* ``cli``      — ``python -m repro.launch.simulate serve ...``.
+
+The stdlib-only client lives outside the package on purpose
+(``tools/twin_client.py``): anything that reads lines of JSON can talk
+to the twin, no repro import required.
+"""
+from repro.serve.session import Branch, SessionError, TwinSession
+from repro.serve.server import TwinServer
+from repro.serve.snapshot import (SNAPSHOT_VERSION, SnapshotError,
+                                  apply_scenario_delta, decode_carry,
+                                  encode_carry, encode_scenario,
+                                  snapshot_digest)
+from repro.serve.protocol import SERVE_VERSION
+
+__all__ = ["Branch", "SessionError", "TwinSession", "TwinServer",
+           "SNAPSHOT_VERSION", "SnapshotError", "apply_scenario_delta",
+           "decode_carry", "encode_carry", "encode_scenario",
+           "snapshot_digest", "SERVE_VERSION"]

@@ -1,0 +1,292 @@
+"""Branch/session manager for the persistent twin (repro.serve).
+
+A ``TwinSession`` owns one (system, job table, horizon) and a tree of
+**branches**. Branch 0 is the root trajectory; any branch can be forked
+at any of its interval checkpoints into a child with a modified
+``Scenario`` — the child inherits the parent's scan carry at the fork
+point, so its prefix costs nothing to "re-simulate" (it never is).
+
+Time is discrete: the horizon is split into *intervals* of
+``interval_steps`` engine steps, and every advance lands on an interval
+boundary, where the full carry is checkpointed. This is what makes the
+service deterministic and the parity oracle exact — a branch's state at
+step k does not depend on the segmentation that produced it
+(``engine.simulate_segment`` chains are bit-identical to one scan;
+tests/test_serve_checkpoint.py).
+
+Coalescing: ``advance_many`` moves any set of branches forward
+tick-by-tick, and every tick dispatches ALL branches that still need
+work as ONE ``engine.simulate_segment_sweep`` batch — the batched scan
+is bitwise identical to running them serially (vmap over carries and
+scenarios; proven by the soak test's decision-identity assertion), so
+coalescing concurrent client what-ifs is pure throughput, never a
+semantics change. Branches at different absolute steps batch fine:
+grid/weather inputs are gathered at each carry's own ``step`` cursor
+inside the scan.
+
+Thread-safety: one re-entrant lock around all mutating entry points.
+The server (repro.serve.server) funnels advances through a single
+executor thread anyway; the lock makes direct library use safe too.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import engine
+from repro.core import types as T
+from repro.obs import sink as obs_sink
+from repro.serve import snapshot as snap
+
+
+class SessionError(RuntimeError):
+    """Semantically invalid request (unknown branch, bad fork point, ...).
+
+    Distinct from ``transport.ProtocolError`` (malformed speech): a
+    SessionError is answered with an error envelope and the connection
+    stays up; the session itself is never corrupted by one.
+    """
+
+
+@dataclass
+class Branch:
+    """One trajectory in the fork tree."""
+    branch_id: int
+    parent: Optional[int]          # parent branch id (None for the root)
+    scenario: T.Scenario           # knobs this branch simulates under
+    delta: dict                    # sparse knob delta vs the parent
+    carry: T.SimState              # scan carry at ``step``
+    step: int                      # absolute engine step of ``carry``
+    born_step: int                 # fork point (0 for the root)
+    # carry at every interval boundary visited since birth (includes the
+    # birth checkpoint) — any of these is a legal fork/snapshot point
+    checkpoints: Dict[int, T.SimState] = field(default_factory=dict)
+    # StepRecord history per advanced segment (host numpy, in step order)
+    history: List[T.StepRecord] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.checkpoints.setdefault(self.step, self.carry)
+
+
+class TwinSession:
+    """A persistent simulation session: one system, a tree of branches."""
+
+    def __init__(self, system, table, scen: T.Scenario, t0: float,
+                 t1: float, interval_steps: int,
+                 signals=None, weather=None, num_accounts: int = 64):
+        if interval_steps < 1:
+            raise ValueError(f"interval_steps must be >= 1, got "
+                             f"{interval_steps}")
+        self.system = system
+        self.table = table
+        self.t0 = float(t0)
+        self.t1 = float(t1)
+        self.interval_steps = int(interval_steps)
+        self.horizon_steps = int(round((t1 - t0) / system.dt))
+        self.signals = signals
+        self.weather = weather
+        self._lock = threading.RLock()
+        self.counters = {"advances": 0, "segments": 0, "forks": 0,
+                         "snapshots": 0, "fetches": 0, "errors": 0,
+                         "coalesced_batches": 0, "batched_branches": 0}
+        root_carry = engine.init_state(system, table, t0, t1,
+                                       num_accounts=num_accounts)
+        # the root carry doubles as the decode template for snapshots of
+        # any branch (same (system, table) lineage => same pytree shapes)
+        self.carry_template = root_carry
+        self._next_id = 1
+        self.branches: Dict[int, Branch] = {
+            0: Branch(branch_id=0, parent=None, scenario=scen, delta={},
+                      carry=root_carry, step=0, born_step=0)}
+
+    # -- lookup --------------------------------------------------------------
+    def _branch(self, branch_id) -> Branch:
+        try:
+            br = self.branches[int(branch_id)]
+        except (KeyError, TypeError, ValueError):
+            self.counters["errors"] += 1
+            raise SessionError(
+                f"unknown branch id {branch_id!r} (known: "
+                f"{sorted(self.branches)})") from None
+        return br
+
+    # -- advance (the hot path) ----------------------------------------------
+    def advance_many(self, requests: Dict[int, int]) -> Dict[int, dict]:
+        """Advance several branches, coalescing per interval tick.
+
+        Args:
+          requests: branch id -> number of intervals to advance. Branches
+            are clamped at the horizon (advancing a finished branch is a
+            no-op, not an error — clients polling "advance 1" race the
+            horizon benignly).
+        Returns:
+          branch id -> {"step", "t", "advanced_steps"} after the advance.
+        """
+        with self._lock:
+            remaining = {self._branch(b).branch_id: int(n)
+                         for b, n in requests.items()}
+            if any(n < 0 for n in remaining.values()):
+                raise SessionError("advance count must be >= 0")
+            advanced = {b: 0 for b in remaining}
+            while True:
+                live = [b for b, n in remaining.items() if n > 0 and
+                        self.branches[b].step + self.interval_steps
+                        <= self.horizon_steps]
+                if not live:
+                    break
+                self._tick(live)
+                for b in live:
+                    remaining[b] -= 1
+                    advanced[b] += self.interval_steps
+            self.counters["advances"] += 1
+            return {b: {"step": self.branches[b].step,
+                        "t": self.t0 + self.branches[b].step
+                        * float(self.system.dt),
+                        "advanced_steps": advanced[b]}
+                    for b in remaining}
+
+    def _tick(self, branch_ids: List[int]) -> None:
+        """One interval for every listed branch — one dispatch total."""
+        n = self.interval_steps
+        if len(branch_ids) == 1:
+            br = self.branches[branch_ids[0]]
+            carry, hist = engine.simulate_segment(
+                self.system, self.table, br.carry, br.scenario, n,
+                self.signals, self.weather)
+            self._commit(br, carry, hist)
+        else:
+            brs = [self.branches[b] for b in branch_ids]
+            carries, hists = engine.simulate_segment_sweep(
+                self.system, self.table, [b.carry for b in brs],
+                [b.scenario for b in brs], n, self.signals, self.weather)
+            self.counters["coalesced_batches"] += 1
+            self.counters["batched_branches"] += len(brs)
+            for i, br in enumerate(brs):
+                self._commit(br, _tree_index(carries, i),
+                             _tree_index(hists, i))
+        self.counters["segments"] += len(branch_ids)
+
+    def _commit(self, br: Branch, carry, hist) -> None:
+        br.carry = carry
+        br.step += self.interval_steps
+        br.checkpoints[br.step] = carry
+        br.history.append(_to_host(hist))
+
+    # -- fork ----------------------------------------------------------------
+    def fork(self, parent_id, delta: Optional[dict] = None,
+             at_step: Optional[int] = None) -> Branch:
+        """Branch ``parent_id`` at one of its checkpoints.
+
+        Args:
+          parent_id: branch to fork from.
+          delta: sparse Scenario knob delta (``{}``/None = neutral fork,
+            bit-identical to the parent from the fork point on).
+          at_step: fork point; must be an interval checkpoint the parent
+            has visited (default: its current step).
+        Returns:
+          the new ``Branch`` (its id is ``branch_id``).
+        """
+        with self._lock:
+            parent = self._branch(parent_id)
+            step = parent.step if at_step is None else int(at_step)
+            if step not in parent.checkpoints:
+                self.counters["errors"] += 1
+                raise SessionError(
+                    f"branch {parent.branch_id} has no checkpoint at step "
+                    f"{step} (available: {sorted(parent.checkpoints)})")
+            try:
+                scen = snap.apply_scenario_delta(parent.scenario,
+                                                 delta or {})
+            except snap.SnapshotError as e:
+                self.counters["errors"] += 1
+                raise SessionError(str(e)) from e
+            child = Branch(branch_id=self._next_id, parent=parent.branch_id,
+                           scenario=scen, delta=dict(delta or {}),
+                           carry=parent.checkpoints[step], step=step,
+                           born_step=step)
+            self._next_id += 1
+            self.branches[child.branch_id] = child
+            self.counters["forks"] += 1
+            return child
+
+    # -- snapshot / fetch / state -------------------------------------------
+    def snapshot(self, branch_id, at_step: Optional[int] = None) -> dict:
+        """Encode a branch checkpoint for the wire (see serve.snapshot)."""
+        with self._lock:
+            br = self._branch(branch_id)
+            step = br.step if at_step is None else int(at_step)
+            if step not in br.checkpoints:
+                self.counters["errors"] += 1
+                raise SessionError(
+                    f"branch {br.branch_id} has no checkpoint at step "
+                    f"{step} (available: {sorted(br.checkpoints)})")
+            payload = snap.encode_carry(br.checkpoints[step])
+            self.counters["snapshots"] += 1
+            return {"branch": br.branch_id, "step": step,
+                    "snapshot": payload,
+                    "digest": snap.snapshot_digest(payload)}
+
+    def fetch(self, branch_id, start: Optional[int] = None,
+              stop: Optional[int] = None) -> dict:
+        """Scalar telemetry rows of a branch (since its fork point).
+
+        ``start``/``stop`` are absolute step bounds (default: everything
+        the branch has simulated itself — a child's history starts at its
+        ``born_step``; the prefix lives on its ancestors).
+        """
+        with self._lock:
+            br = self._branch(branch_id)
+            lo = br.born_step if start is None else int(start)
+            hi = br.step if stop is None else int(stop)
+            lo = max(lo, br.born_step)
+            hi = min(hi, br.step)
+            rows = []
+            if br.history and hi > lo:
+                cat = {k: np.concatenate(
+                    [np.asarray(getattr(h, k), np.float64)
+                     for h in br.history])
+                    for k in ("t",) + obs_sink.SCALAR_FIELDS}
+                for i in range(lo - br.born_step, hi - br.born_step):
+                    row = {"step": br.born_step + i}
+                    row.update({k: float(v[i]) for k, v in cat.items()})
+                    rows.append(row)
+            self.counters["fetches"] += 1
+            return {"branch": br.branch_id, "start": lo, "stop": hi,
+                    "fields": ["step", "t", *obs_sink.SCALAR_FIELDS],
+                    "rows": rows}
+
+    def describe(self) -> dict:
+        """Session + branch-tree summary (the ``state`` reply body)."""
+        with self._lock:
+            return {
+                "system": self.system.name,
+                "n_nodes": int(self.system.n_nodes),
+                "dt": float(self.system.dt),
+                "t0": self.t0, "t1": self.t1,
+                "interval_steps": self.interval_steps,
+                "horizon_steps": self.horizon_steps,
+                "branches": [
+                    {"branch": b.branch_id, "parent": b.parent,
+                     "step": b.step, "born_step": b.born_step,
+                     "delta": b.delta,
+                     "checkpoints": sorted(b.checkpoints)}
+                    for b in sorted(self.branches.values(),
+                                    key=lambda b: b.branch_id)],
+                "counters": dict(self.counters),
+            }
+
+
+def _tree_index(tree, i: int):
+    """Row ``i`` of every leaf of a stacked pytree."""
+    import jax
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def _to_host(hist) -> T.StepRecord:
+    """Move a StepRecord history to host numpy (frees device memory for
+    long-lived sessions; fetch slices it without device syncs)."""
+    import jax
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), hist)

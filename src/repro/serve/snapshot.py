@@ -1,0 +1,225 @@
+"""Byte-faithful snapshot codec for the scan carry (checkpoint/fork wire).
+
+A *snapshot* is the serialized form of one branch's scan carry — the
+complete ``SimState`` pytree (job lifecycle arrays, node occupancy,
+account ledgers, the transient ``CoolingState``, global accumulators and
+the absolute step cursor). Resuming a simulation from a decoded snapshot
+is bit-identical to never having stopped (``engine.simulate_segment``;
+proven by tests/test_serve_checkpoint.py), so a snapshot is both the
+server's checkpoint format and the client-visible "download this branch"
+payload.
+
+Encoding: every leaf becomes ``{"dtype": "<f4", "shape": [...],
+"data": "<base64 raw bytes>"}`` keyed by its pytree path (e.g.
+``"accounts.energy"``). Raw bytes — not JSON floats — because JSON
+number round-trips are not bit-faithful for float32 and a checkpoint
+that perturbs the last ulp is not a checkpoint. Envelopes are strict
+JSON and ride the PR 5 NDJSON transport framing unchanged
+(``core.transport.write_frame``), staying far below ``MAX_FRAME_BYTES``
+even at Frontier scale (tests/test_serve_properties.py measures it).
+
+The scenario codec here is the *wire* form of ``types.Scenario``: plain
+floats/lists per knob, so a fork request can carry a sparse delta
+(``{"setpoint_delta_c": 2.0}``) that ``apply_scenario_delta`` merges
+over the parent branch's knobs.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import json
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import types as T
+
+SNAPSHOT_VERSION = 1
+
+# Scenario knobs a fork delta may touch (every traced field; policy and
+# backfill accept the names from types.POLICY_NAMES / BACKFILL_NAMES).
+SCENARIO_FIELDS = tuple(f.name for f in
+                        __import__("dataclasses").fields(T.Scenario))
+
+
+class SnapshotError(ValueError):
+    """A snapshot payload is malformed or does not match the template."""
+
+
+# ---------------------------------------------------------------------------
+# Pytree paths.
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    """Render a jax keypath as a dotted field path ("accounts.energy")."""
+    parts = []
+    for entry in path:
+        name = getattr(entry, "name", None)
+        if name is None:
+            name = getattr(entry, "key", None)
+        if name is None:
+            name = getattr(entry, "idx", None)
+        parts.append(str(name))
+    return ".".join(parts)
+
+
+def _flatten(carry):
+    """(path string, leaf) pairs in canonical pytree order + treedef."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(carry)
+    return [(_path_str(p), leaf) for p, leaf in leaves], treedef
+
+
+# ---------------------------------------------------------------------------
+# Array leaf codec (raw little-endian bytes, base64).
+# ---------------------------------------------------------------------------
+def encode_array(x) -> dict:
+    """One leaf → ``{"dtype", "shape", "data"}`` with base64 raw bytes."""
+    # NOT ascontiguousarray: that promotes 0-d arrays to 1-d, and
+    # tobytes() below makes its own C-order copy anyway
+    a = np.asarray(x)
+    if a.dtype.byteorder == ">":  # pragma: no cover - big-endian host
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def decode_array(payload: dict) -> np.ndarray:
+    """Inverse of ``encode_array``; validates dtype/shape/size."""
+    if not isinstance(payload, dict):
+        raise SnapshotError(f"leaf must be an object, got "
+                            f"{type(payload).__name__}")
+    try:
+        dtype = np.dtype(payload["dtype"])
+        shape = tuple(int(s) for s in payload["shape"])
+        raw = base64.b64decode(payload["data"], validate=True)
+    except (KeyError, TypeError, ValueError) as e:
+        raise SnapshotError(f"malformed array leaf: {e}") from e
+    want = dtype.itemsize * int(np.prod(shape, dtype=np.int64)) \
+        if shape else dtype.itemsize
+    if len(raw) != want:
+        raise SnapshotError(f"array leaf carries {len(raw)} bytes, "
+                            f"dtype/shape imply {want}")
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+
+
+# ---------------------------------------------------------------------------
+# Carry codec.
+# ---------------------------------------------------------------------------
+def encode_carry(carry: T.SimState) -> dict:
+    """Serialize a scan carry to a strict-JSON payload.
+
+    The payload is self-describing (``v``, per-leaf dtype/shape) but
+    decoding requires a structural *template* (any carry of the same
+    (system, table) lineage — ``engine.init_state`` builds one) because
+    the pytree treedef itself is not serialized.
+    """
+    leaves, _ = _flatten(carry)
+    return {"v": SNAPSHOT_VERSION,
+            "leaves": {path: encode_array(leaf) for path, leaf in leaves}}
+
+
+def decode_carry(payload: dict, template: T.SimState) -> T.SimState:
+    """Rebuild a carry from ``encode_carry`` output, byte-faithfully.
+
+    ``template`` supplies the pytree structure; every leaf's dtype and
+    shape must match the template's (a snapshot from a different system
+    or job-table shape fails loudly instead of mis-resuming).
+    """
+    if not isinstance(payload, dict):
+        raise SnapshotError(f"snapshot must be an object, got "
+                            f"{type(payload).__name__}")
+    if payload.get("v") != SNAPSHOT_VERSION:
+        raise SnapshotError(f"snapshot version mismatch: "
+                            f"{payload.get('v')!r} != {SNAPSHOT_VERSION}")
+    leaves = payload.get("leaves")
+    if not isinstance(leaves, dict):
+        raise SnapshotError("snapshot missing 'leaves' object")
+    t_leaves, treedef = _flatten(template)
+    missing = [p for p, _ in t_leaves if p not in leaves]
+    extra = [p for p in leaves if p not in {q for q, _ in t_leaves}]
+    if missing or extra:
+        raise SnapshotError(
+            f"snapshot leaves do not match the template: "
+            f"missing {missing or '[]'}, unknown {extra or '[]'}")
+    out = []
+    for path, ref in t_leaves:
+        a = decode_array(leaves[path])
+        ref = np.asarray(ref)
+        if a.dtype != ref.dtype or a.shape != ref.shape:
+            raise SnapshotError(
+                f"leaf {path!r}: snapshot is {a.dtype}{list(a.shape)}, "
+                f"template needs {ref.dtype}{list(ref.shape)}")
+        out.append(jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def snapshot_digest(payload: dict) -> str:
+    """sha256 over the canonical JSON of a snapshot payload.
+
+    Stable across processes/hosts (sorted keys, no whitespace), so a
+    client can verify a download and the parity tests can assert two
+    encodes of the same carry are byte-identical."""
+    blob = json.dumps(payload, separators=(",", ":"), sort_keys=True)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Scenario wire codec.
+# ---------------------------------------------------------------------------
+def encode_scenario(scen: T.Scenario) -> dict:
+    """Scenario → plain floats/ints/lists (the fork-request wire form)."""
+    out = {}
+    for name in SCENARIO_FIELDS:
+        a = np.asarray(getattr(scen, name))
+        if name in ("policy", "backfill"):
+            out[name] = int(a)
+        else:
+            out[name] = a.tolist() if a.ndim else float(a)
+    return out
+
+
+def apply_scenario_delta(parent: T.Scenario, delta: dict) -> T.Scenario:
+    """Merge a sparse knob delta over a parent branch's scenario.
+
+    ``delta`` keys must be Scenario fields; ``policy``/``backfill``
+    accept wire names ("fcfs", "easy") or raw ints, every other knob a
+    number or list (``cells_offline`` per hall, ``alpha`` vector). An
+    empty delta returns a scenario equal to the parent — the *neutral
+    fork* whose branch must stay bit-identical to its parent
+    (tests/test_serve_checkpoint.py).
+    """
+    if not isinstance(delta, dict):
+        raise SnapshotError(f"scenario delta must be an object, got "
+                            f"{type(delta).__name__}")
+    unknown = sorted(set(delta) - set(SCENARIO_FIELDS))
+    if unknown:
+        raise SnapshotError(f"unknown scenario knob(s): "
+                            f"{', '.join(unknown)}; valid: "
+                            f"{', '.join(SCENARIO_FIELDS)}")
+    merged = encode_scenario(parent)
+    for k, v in delta.items():
+        if k in ("policy", "backfill"):
+            names = T.POLICY_NAMES if k == "policy" else T.BACKFILL_NAMES
+            if isinstance(v, str):
+                if v not in names:
+                    raise SnapshotError(f"unknown {k} {v!r}")
+                v = names[v]
+            elif not isinstance(v, int) or isinstance(v, bool) or \
+                    v not in names.values():
+                raise SnapshotError(f"{k} must be a name or known id, "
+                                    f"got {v!r}")
+            merged[k] = int(v)
+        else:
+            ok_num = isinstance(v, (int, float)) and not isinstance(v, bool)
+            ok_vec = (isinstance(v, list) and v and
+                      all(isinstance(x, (int, float)) and
+                          not isinstance(x, bool) for x in v))
+            if not (ok_num or ok_vec):
+                raise SnapshotError(f"scenario knob {k!r} must be a "
+                                    f"number or list of numbers, got {v!r}")
+            merged[k] = v
+    return T.Scenario(
+        policy=jnp.int32(merged["policy"]),
+        backfill=jnp.int32(merged["backfill"]),
+        **{k: jnp.asarray(merged[k], jnp.float32)
+           for k in SCENARIO_FIELDS if k not in ("policy", "backfill")})

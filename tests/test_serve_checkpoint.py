@@ -1,0 +1,246 @@
+"""Checkpoint-parity oracle for the twin service (repro.serve).
+
+The serving architecture rests on one claim: a trajectory advanced in
+interval-sized segments — with the carry serialized to JSON and decoded
+back between every pair of segments — is **bit-identical** to the same
+trajectory as one uninterrupted ``lax.scan``. Not "close", identical:
+the scan body is the same ``engine_step`` and grid/weather inputs are
+gathered at the carry's absolute step cursor, so segmentation must be
+unobservable. These tests assert exact equality (``np.array_equal``, no
+tolerances) on every telemetry field and every final-carry leaf, for a
+flat plant and a 4-hall topology, with time-varying grid signals and
+weather in the loop so the absolute-step gather is actually exercised
+across segment boundaries.
+
+Also here: the neutral-delta fork oracle (a fork that changes nothing
+must *be* its parent, row for row) and the LRU regression test for the
+runner cache a long-lived server leans on.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.cooling import weather as wsig
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.grid import signals as gsig
+from repro.launch.simulate import build_system
+from repro.serve import session as serve_session
+from repro.serve import snapshot as snap
+
+INTERVAL = 8          # engine steps per segment
+N_INTERVALS = 6
+HORIZON = INTERVAL * N_INTERVALS
+
+
+def make_case(system, seed=3, n_jobs=64, pad=80):
+    js = generate(system, WorkloadSpec(
+        n_jobs=n_jobs, duration_s=4 * 3600.0, load=1.2, trace_len=8,
+        n_accounts=8, mean_wall_s=1800.0, seed=seed))
+    js.assign_prepop_placement(0.0, system.n_nodes)
+    return js, js.to_table(pad)
+
+
+def make_signals(system, n_steps, seed=11):
+    """Time-varying carbon + a cap schedule (above the idle floor so the
+    run is throttled sometimes, never starved)."""
+    rng = np.random.default_rng(seed)
+    floor = system.n_nodes * system.power.idle_node_w
+    sig = gsig.constant_signals(n_steps, carbon_gkwh=300.0, price_kwh=0.1)
+    carbon = (300.0 + 200.0 * np.sin(np.linspace(0, 6.0, n_steps))
+              ).astype(np.float32)
+    cap = rng.uniform(1.5 * floor, 6.0 * floor, n_steps).astype(np.float32)
+    return gsig.GridSignals(**{**vars(sig), "carbon_gkwh": carbon,
+                               "cap_w": cap})
+
+
+def assert_trees_equal(a, b, what=""):
+    """Bitwise equality of two pytrees, leaf by leaf, path in the diff."""
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (path, la), (_, lb) in zip(fa, fb):
+        la, lb = np.asarray(la), np.asarray(lb)
+        eq = (np.array_equal(la, lb, equal_nan=True)
+              if np.issubdtype(la.dtype, np.floating)
+              else np.array_equal(la, lb))
+        assert eq, (f"{what}: leaf {jax.tree_util.keystr(path)} diverges "
+                    f"(max |d| = "
+                    f"{np.max(np.abs(la.astype(np.float64) - lb.astype(np.float64)))})")
+
+
+def concat_hists(hists):
+    return jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *hists)
+
+
+@pytest.fixture(scope="module", params=["flat", "halls"])
+def topo_case(request):
+    """(system, table, scenario, signals, weather) for both plant shapes."""
+    if request.param == "flat":
+        system = build_system("marconi100", scale=64)
+        scen = T.Scenario.make("fcfs", "easy", setpoint_delta_c=1.0)
+    else:
+        system = build_system("marconi100", scale=64, halls=4)
+        scen = T.Scenario.make("thermal_aware", "firstfit",
+                               cells_offline=(1.0, 0.0, 0.0, 0.0))
+    js, table = make_case(system)
+    signals = make_signals(system, HORIZON)
+    weather = wsig.synthetic_weather(HORIZON, system.dt, seed=5)
+    return system, table, scen, signals, weather
+
+
+@pytest.mark.timeout(300)
+def test_segmented_resume_is_bit_identical(topo_case):
+    """Segment at EVERY interval boundary, serialize/deserialize the
+    carry between segments, and require the concatenated telemetry and
+    the final carry to match one uninterrupted ``simulate`` bitwise."""
+    system, table, scen, signals, weather = topo_case
+    t1 = HORIZON * system.dt
+    ref_final, ref_hist = eng.simulate(system, table, scen, 0.0, t1,
+                                       num_accounts=8, signals=signals,
+                                       weather=weather)
+
+    carry = eng.init_state(system, table, 0.0, t1, num_accounts=8)
+    hists = []
+    for _ in range(N_INTERVALS):
+        # the wire trip a served checkpoint takes: encode -> JSON text ->
+        # decode against the template (strict JSON, byte-faithful)
+        payload = json.loads(json.dumps(snap.encode_carry(carry)))
+        carry = snap.decode_carry(payload, carry)
+        carry, hist = eng.simulate_segment(system, table, carry, scen,
+                                           INTERVAL, signals, weather)
+        hists.append(hist)
+
+    assert_trees_equal(concat_hists(hists), ref_hist, "telemetry")
+    assert_trees_equal(carry, ref_final, "final carry")
+
+
+@pytest.mark.timeout(300)
+def test_neutral_fork_equals_parent(topo_case):
+    """A fork with an empty Scenario delta IS its parent: same rows,
+    same checkpoints, same snapshot digests, from the fork point on."""
+    system, table, scen, signals, weather = topo_case
+    t1 = HORIZON * system.dt
+    sess = serve_session.TwinSession(system, table, scen, 0.0, t1,
+                                     interval_steps=INTERVAL,
+                                     signals=signals, weather=weather,
+                                     num_accounts=8)
+    sess.advance_many({0: 2})
+    child = sess.fork(0, {})                    # neutral delta
+    sess.advance_many({0: N_INTERVALS - 2,
+                       child.branch_id: N_INTERVALS - 2})
+
+    parent_rows = {r["step"]: r for r in sess.fetch(0)["rows"]}
+    child_rows = sess.fetch(child.branch_id)["rows"]
+    assert len(child_rows) == HORIZON - child.born_step
+    for row in child_rows:
+        assert row == parent_rows[row["step"]], f"step {row['step']}"
+
+    for step in sess.branches[child.branch_id].checkpoints:
+        assert (sess.snapshot(0, at_step=step)["digest"]
+                == sess.snapshot(child.branch_id, at_step=step)["digest"])
+
+
+@pytest.mark.timeout(300)
+def test_divergent_fork_shares_prefix_and_diverges(topo_case):
+    """Sanity for the other direction: a *non*-neutral delta must match
+    the parent before the fork point and actually change the physics
+    after it (a delta the engine ignores would make every parity test
+    above pass vacuously)."""
+    system, table, scen, signals, weather = topo_case
+    t1 = HORIZON * system.dt
+    sess = serve_session.TwinSession(system, table, scen, 0.0, t1,
+                                     interval_steps=INTERVAL,
+                                     signals=signals, weather=weather,
+                                     num_accounts=8)
+    sess.advance_many({0: 3})
+    child = sess.fork(0, {"setpoint_delta_c": 4.0})
+    sess.advance_many({0: 3, child.branch_id: 3})
+    parent = {r["step"]: r for r in sess.fetch(0)["rows"]}
+    child_rows = sess.fetch(child.branch_id)["rows"]
+    assert any(row != parent[row["step"]] for row in child_rows), \
+        "setpoint_delta_c=4.0 produced bit-identical telemetry"
+    # and the shared prefix stayed shared: fork point checkpoint digests
+    assert (sess.snapshot(0, at_step=child.born_step)["digest"]
+            == sess.snapshot(child.branch_id,
+                             at_step=child.born_step)["digest"])
+
+
+@pytest.mark.timeout(120)
+def test_fork_from_earlier_checkpoint(topo_case):
+    """Forking at a historical boundary resumes from *that* carry: the
+    child's first telemetry rows equal the parent's rows at those steps
+    (neutral delta), even though the parent is far ahead by then."""
+    system, table, scen, signals, weather = topo_case
+    t1 = HORIZON * system.dt
+    sess = serve_session.TwinSession(system, table, scen, 0.0, t1,
+                                     interval_steps=INTERVAL,
+                                     signals=signals, weather=weather,
+                                     num_accounts=8)
+    sess.advance_many({0: N_INTERVALS})        # run the root to the end
+    child = sess.fork(0, {}, at_step=INTERVAL)  # rewind to boundary 1
+    assert child.step == INTERVAL
+    sess.advance_many({child.branch_id: 2})
+    parent = {r["step"]: r for r in sess.fetch(0)["rows"]}
+    for row in sess.fetch(child.branch_id)["rows"]:
+        assert row == parent[row["step"]], f"step {row['step']}"
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the runner cache must stay bounded under a long-lived server.
+# ---------------------------------------------------------------------------
+def test_sweep_cache_lru_bound(monkeypatch):
+    """Regression: ``_SWEEP_CACHE`` evicts least-recently-used runners
+    past ``SWEEP_CACHE_LIMIT`` (counted), instead of growing forever."""
+    import collections
+    monkeypatch.setattr(eng, "_SWEEP_CACHE", collections.OrderedDict())
+    monkeypatch.setattr(eng, "SWEEP_CACHE_LIMIT", 4)
+    monkeypatch.setattr(eng, "SWEEP_CACHE_STATS",
+                        {"hits": 0, "misses": 0, "evictions": 0})
+
+    for i in range(10):
+        assert eng._cache_lookup(("k", i)) is None
+        eng._cache_store(("k", i), f"runner{i}")
+    assert len(eng._SWEEP_CACHE) == 4
+    assert eng.SWEEP_CACHE_STATS["evictions"] == 6
+    assert eng.SWEEP_CACHE_STATS["misses"] == 10
+    # survivors are the most recently stored
+    assert list(eng._SWEEP_CACHE) == [("k", i) for i in range(6, 10)]
+
+    # a hit refreshes recency: ("k", 6) must now outlive ("k", 7)
+    assert eng._cache_lookup(("k", 6)) == "runner6"
+    assert eng.SWEEP_CACHE_STATS["hits"] == 1
+    eng._cache_store(("k", 99), "runner99")
+    assert ("k", 6) in eng._SWEEP_CACHE
+    assert ("k", 7) not in eng._SWEEP_CACHE
+
+
+@pytest.mark.timeout(300)
+def test_sweep_cache_lru_bound_end_to_end(monkeypatch):
+    """Same bound through the public API: many distinct segment lengths
+    (what a server with many interval configs would compile) never hold
+    more than the limit, and evicted runners re-compile on demand."""
+    import collections
+    monkeypatch.setattr(eng, "_SWEEP_CACHE", collections.OrderedDict())
+    monkeypatch.setattr(eng, "SWEEP_CACHE_LIMIT", 3)
+    monkeypatch.setattr(eng, "SWEEP_CACHE_STATS",
+                        {"hits": 0, "misses": 0, "evictions": 0})
+    system = build_system("marconi100", scale=64)
+    _, table = make_case(system, n_jobs=16, pad=24)
+    scen = T.Scenario.make("fcfs")
+    carry = eng.init_state(system, table, 0.0, 64 * system.dt,
+                           num_accounts=8)
+    for n in (1, 2, 3, 4, 5):
+        eng.simulate_segment(system, table, carry, scen, n)
+    assert len(eng._SWEEP_CACHE) == 3
+    assert eng.SWEEP_CACHE_STATS["evictions"] == 2
+    # the evicted n=1 runner comes back transparently (a fresh miss)
+    misses_before = eng.SWEEP_CACHE_STATS["misses"]
+    out, _ = eng.simulate_segment(system, table, carry, scen, 1)
+    assert int(out.step) == int(carry.step) + 1
+    assert eng.SWEEP_CACHE_STATS["misses"] == misses_before + 1

@@ -1,0 +1,239 @@
+"""Multi-client conformance + fault-injection soak for the twin server.
+
+The serving claims under test, in the style of the PR 5 transport
+conformance suite:
+
+* N concurrent ``tools/twin_client`` subprocesses can advance and fork
+  one shared session, each driving its own what-if branch, and every
+  one of them exits cleanly;
+* misbehaving clients — dying mid-stream, sending garbage, requesting
+  branches that don't exist, hanging silently — get the documented
+  error envelopes (or are reaped by the read timeout) and NEVER take
+  the server down or corrupt the session for well-behaved clients;
+* the zero-zombie ledger holds: every spawned client subprocess is
+  ``wait()``ed, and the server's connection ledger is fully closed
+  after ``close()`` (``n_open == 0``, no live handler threads — the
+  ``SubprocessPeer.spawned`` pattern, applied to the serving side);
+* the coalescing executor is a pure throughput optimization: branches
+  advanced as one batched sweep are **bitwise identical** to the same
+  branches advanced one at a time.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import types as T
+from repro.serve.server import TwinServer
+from repro.serve.session import SessionError, TwinSession
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+INTERVAL = 8
+HORIZON_S = 2 * 3600.0
+
+
+@pytest.fixture()
+def session(small_system, small_table):
+    return TwinSession(small_system, small_table,
+                       T.Scenario.make("fcfs", "easy"), 0.0, HORIZON_S,
+                       interval_steps=INTERVAL, num_accounts=8)
+
+
+def spawn_client(addr, script=None, fault=None, timeout=30.0):
+    cmd = [sys.executable, "-m", "tools.twin_client", "--connect", addr,
+           "--timeout", str(timeout)]
+    if script is not None:
+        cmd += ["--script", script]
+    if fault is not None:
+        cmd += ["--fault", fault]
+    return subprocess.Popen(cmd, cwd=REPO, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+
+
+def drain(procs, deadline_s=120.0):
+    """wait() every spawned client; return (rc, stdout-lines) per proc."""
+    out = []
+    t_end = time.monotonic() + deadline_s
+    for p in procs:
+        left = max(1.0, t_end - time.monotonic())
+        stdout, stderr = p.communicate(timeout=left)
+        out.append((p.returncode, stdout.splitlines(), stderr))
+    return out
+
+
+def assert_reaped(procs, server_stats):
+    """Zero zombies: every client wait()ed, every connection closed."""
+    for p in procs:
+        assert p.poll() is not None, f"client pid {p.pid} not reaped"
+    assert server_stats["n_open"] == 0, \
+        f"server ledger leaked connections: {server_stats['clients']}"
+
+
+@pytest.mark.timeout(300)
+def test_concurrent_clients_fork_and_advance(session, small_jobs,
+                                             tmp_path):
+    """Four clients, one session: each forks its own what-if and drives
+    it to a different depth; all succeed, the fork count is exact, and
+    the obs manifest records the traffic."""
+    addr = f"unix:{tmp_path}/twin.sock"
+    n_clients = 4
+    with TwinServer(session, addr, jobs=small_jobs,
+                    batch_window_s=0.05, obs_dir=tmp_path) as srv:
+        procs = [spawn_client(
+            addr,
+            script=(f"advance 0 1; "
+                    f"fork 0 setpoint_delta_c={0.5 * (i + 1)}; "
+                    f"advance last {1 + i % 3}; fetch last; "
+                    f"snapshot last; bye"))
+            for i in range(n_clients)]
+        results = drain(procs)
+        stats = srv.stats()
+    final = srv.close()
+
+    for rc, lines, stderr in results:
+        assert rc == 0, stderr
+        kinds = [json.loads(l)["kind"] for l in lines]
+        assert kinds[0] == "hello"
+        assert "error" not in kinds, lines
+        assert kinds[-1] == "bye_ok"
+    assert stats["session"]["forks"] == n_clients
+    assert final["n_clients"] == n_clients
+    assert_reaped(procs, final)
+
+    # flight recorder: manifest + event log exist and saw the traffic
+    manifest = json.loads((tmp_path / "serve_manifest.json").read_text())
+    assert manifest["command"] == "serve"
+    assert manifest["counters"]["session"]["forks"] == n_clients
+    events = (tmp_path / "serve_events.ndjson").read_text().splitlines()
+    what = [json.loads(e)["event"] for e in events]
+    assert what.count("client_connect") == n_clients
+    assert what.count("client_disconnect") == n_clients
+    assert "advance_batch" in what and "fork" in what
+
+
+@pytest.mark.timeout(300)
+def test_fault_injection_never_kills_the_server(session, small_jobs,
+                                                tmp_path):
+    """Every documented client misbehavior at once, against one server:
+    the faults get their envelopes, the session survives, and a healthy
+    client arriving *after* the chaos still gets full service."""
+    addr = f"unix:{tmp_path}/twin.sock"
+    with TwinServer(session, addr, jobs=small_jobs,
+                    batch_window_s=0.02,
+                    client_timeout_s=2.0) as srv:   # reap hangers fast
+        procs = [
+            spawn_client(addr, script="advance 0 1; fork 0 cap_scale=0.9;"
+                                      " advance last 2; bye"),   # healthy
+            spawn_client(addr, fault="die:2",
+                         script="advance 0 1; state; state; state"),
+            spawn_client(addr, fault="garbage"),
+            spawn_client(addr, fault="badbranch"),
+            spawn_client(addr, fault="hang", timeout=10.0),
+        ]
+        results = drain(procs)
+        # a session error on a live connection must not end it: the
+        # same connection keeps working after the error envelope
+        late = spawn_client(addr, script="advance 999999 1; state; "
+                                         "advance 0 1; bye")
+        late_rc, late_lines, late_err = drain([late])[0]
+        final_state = session.describe()
+    stats = srv.close()
+
+    healthy_rc, healthy_lines, healthy_err = results[0]
+    assert healthy_rc == 0, healthy_err
+    assert "error" not in [json.loads(l)["kind"] for l in healthy_lines]
+
+    die_rc = results[1][0]
+    assert die_rc == 1                      # os._exit(1), mid-stream
+
+    garbage_lines = results[2][1]
+    garbage_reply = json.loads(garbage_lines[-1])
+    assert garbage_reply["kind"] == "error"
+    assert garbage_reply["error"] == "protocol"
+
+    bad_lines = results[3][1]
+    bad_reply = json.loads(bad_lines[-1])
+    assert bad_reply == {"version": 1, "kind": "error",
+                         "error": "session", "id": 0,
+                         "message": bad_reply["message"]}
+    assert "unknown branch" in bad_reply["message"]
+
+    assert results[4][0] == 0               # hanger reaped by timeout
+
+    assert late_rc == 0, late_err
+    late_kinds = [json.loads(l)["kind"] for l in late_lines]
+    assert late_kinds == ["hello", "error", "state_ok", "advance_ok",
+                          "bye_ok"]
+
+    # the chaos left a coherent session: healthy fork exists, advanced
+    branches = {b["branch"]: b for b in final_state["branches"]}
+    assert len(branches) == 2               # root + the healthy fork
+    fork_id = max(branches)
+    assert branches[fork_id]["delta"] == {"cap_scale": 0.9}
+    assert branches[fork_id]["step"] > branches[fork_id]["born_step"]
+    assert stats["session"]["errors"] >= 2  # badbranch + late client
+    assert_reaped(procs + [late], stats)
+    # the ledger kept one row per connection, each with its ending;
+    # badbranch says bye too — its session error did not end the
+    # connection, so its polite close still goes through
+    reasons = sorted(c["reason"] for c in stats["clients"])
+    assert reasons.count("bye") == 3        # healthy, badbranch, late
+    assert "protocol-error" in reasons      # the garbage speaker
+
+
+@pytest.mark.timeout(300)
+def test_coalesced_advance_is_bitwise_identical_to_serial(
+        small_system, small_table):
+    """The executor's batching must be unobservable: the same fork tree
+    advanced (a) with all branches coalesced per tick and (b) one branch
+    at a time produces identical telemetry and snapshot digests."""
+    deltas = [{}, {"setpoint_delta_c": 2.0}, {"cap_scale": 0.85},
+              {"cells_offline": 1.0}]
+
+    def build(coalesce: bool) -> TwinSession:
+        sess = TwinSession(small_system, small_table,
+                           T.Scenario.make("fcfs", "easy"), 0.0,
+                           HORIZON_S, interval_steps=INTERVAL,
+                           num_accounts=8)
+        sess.advance_many({0: 2})
+        for d in deltas:
+            sess.fork(0, d)
+        ids = list(sess.branches)
+        if coalesce:
+            sess.advance_many({b: 3 for b in ids})
+        else:
+            for b in ids:
+                sess.advance_many({b: 3})
+        return sess
+
+    batched, serial = build(True), build(False)
+    assert batched.counters["coalesced_batches"] >= 3
+    assert serial.counters["coalesced_batches"] == 0
+    for b in batched.branches:
+        rows_a = batched.fetch(b)["rows"]
+        rows_b = serial.fetch(b)["rows"]
+        assert rows_a == rows_b, f"branch {b} diverged under batching"
+        assert (batched.snapshot(b)["digest"]
+                == serial.snapshot(b)["digest"]), f"branch {b} carry"
+
+
+@pytest.mark.timeout(120)
+def test_session_error_taxonomy(session):
+    """Library-level error contract: unknown ids, bad fork points and
+    bad knobs raise ``SessionError`` and corrupt nothing."""
+    session.advance_many({0: 1})
+    with pytest.raises(SessionError, match="unknown branch"):
+        session.advance_many({42: 1})
+    with pytest.raises(SessionError, match="no checkpoint"):
+        session.fork(0, {}, at_step=3)      # not an interval boundary
+    with pytest.raises(SessionError, match="unknown scenario knob"):
+        session.fork(0, {"flux_capacitor": 1.21})
+    with pytest.raises(SessionError, match="no checkpoint"):
+        session.snapshot(0, at_step=999)
+    # the session still works after every rejection
+    assert session.advance_many({0: 1})[0]["advanced_steps"] == INTERVAL
+    assert len(session.branches) == 1
+    assert session.counters["errors"] == 4

@@ -1,0 +1,298 @@
+#!/usr/bin/env python
+"""Stdlib-only client for the twin service (stdlib only — no repro).
+
+Speaks the ``simulate serve`` dialect documented in docs/serving.md:
+newline-delimited JSON frames over a Unix-domain or TCP socket, one
+request/reply pair at a time, after reading the server's ``hello``
+greeting. Because it only needs the standard library it doubles as the
+porting template for driving the twin from any language — and as the
+fault-injection vehicle for the serve soak test.
+
+Library use::
+
+    from tools.twin_client import TwinClient
+    with TwinClient("unix:/tmp/twin.sock") as c:
+        c.advance(0, intervals=3)
+        child = c.fork(0, {"setpoint_delta_c": 2.0})
+        rows = c.fetch(child["branch"])["rows"]
+
+Scripted CLI (one command per ``;``)::
+
+    python -m tools.twin_client --connect unix:/tmp/twin.sock \\
+        --script "advance 0 3; fork 0 setpoint_delta_c=2.0; \\
+                  advance 1 2; fetch 1; state; shutdown"
+
+Script grammar: ``advance BRANCH [INTERVALS]`` · ``fork BRANCH
+[at=STEP] [knob=value ...]`` · ``snapshot BRANCH [at=STEP]`` ·
+``fetch BRANCH [START STOP]`` · ``state`` · ``shutdown`` · ``bye`` ·
+``sleep SECONDS``. ``BRANCH`` is an id or ``last`` (the branch created
+by this client's most recent fork). Every reply prints as one JSON
+line on stdout.
+
+``--fault MODE`` injects client misbehavior (for the soak test):
+``die:N`` (exit abruptly after N requests, socket left dangling),
+``garbage`` (send a non-JSON line, print the error reply), ``badbranch``
+(request a branch id that cannot exist, print the error envelope),
+``hang`` (connect, then send nothing until the server drops us).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import sys
+import time
+
+WIRE_VERSION = 1
+MAX_FRAME_BYTES = 256 << 20  # keep equal to repro.core.transport's cap
+
+
+def parse_address(addr):
+    """``unix:/path`` or a bare path -> AF_UNIX; ``host:port`` -> TCP."""
+    if addr.startswith("unix:"):
+        return socket.AF_UNIX, addr[len("unix:"):]
+    if addr.startswith("tcp:"):
+        addr = addr[len("tcp:"):]
+    if "/" in addr:
+        return socket.AF_UNIX, addr
+    host, _, port = addr.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"address must be unix:/path or host:port, "
+                         f"got {addr!r}")
+    return socket.AF_INET, (host, int(port))
+
+
+class TwinError(RuntimeError):
+    """The twin answered with an ``error`` envelope."""
+
+    def __init__(self, frame):
+        super().__init__(frame.get("message", "twin error"))
+        self.frame = frame
+        self.error = frame.get("error")   # "protocol" | "session"
+
+
+class TwinClient:
+    """One connection to a ``simulate serve`` twin."""
+
+    def __init__(self, address, timeout_s=30.0):
+        family, sockaddr = parse_address(address)
+        self.sock = socket.socket(family, socket.SOCK_STREAM)
+        self.sock.settimeout(timeout_s)
+        self.sock.connect(sockaddr)
+        self.rfile = self.sock.makefile("rb")
+        self.wfile = self.sock.makefile("wb")
+        self.n_requests = 0
+        self.hello = self._read()
+        if self.hello.get("kind") != "hello":
+            raise TwinError({"error": "protocol",
+                             "message": f"expected hello, got "
+                                        f"{self.hello.get('kind')!r}"})
+
+    # -- framing ------------------------------------------------------------
+    def _write(self, msg):
+        line = json.dumps(msg, separators=(",", ":")).encode() + b"\n"
+        self.wfile.write(line)
+        self.wfile.flush()
+
+    def _read(self):
+        line = self.rfile.readline(MAX_FRAME_BYTES + 1)
+        if not line:
+            raise ConnectionError("twin closed the connection (EOF)")
+        return json.loads(line)
+
+    def write_raw(self, data: bytes):
+        """Ship arbitrary bytes (the ``garbage`` fault)."""
+        self.wfile.write(data)
+        self.wfile.flush()
+
+    def request(self, kind, **fields):
+        """One request/reply roundtrip; raises ``TwinError`` on an
+        error envelope (connection-fatal "protocol" errors also close)."""
+        msg = {"version": WIRE_VERSION, "kind": kind,
+               "id": self.n_requests}
+        msg.update({k: v for k, v in fields.items() if v is not None})
+        self.n_requests += 1
+        self._write(msg)
+        reply = self._read()
+        if reply.get("kind") == "error":
+            raise TwinError(reply)
+        return reply
+
+    # -- verbs --------------------------------------------------------------
+    def advance(self, branch, intervals=1):
+        return self.request("advance", branch=branch, intervals=intervals)
+
+    def fork(self, branch, delta=None, at_step=None):
+        return self.request("fork", branch=branch, delta=delta or {},
+                            at_step=at_step)
+
+    def snapshot(self, branch, at_step=None):
+        return self.request("snapshot", branch=branch, at_step=at_step)
+
+    def fetch(self, branch, start=None, stop=None):
+        return self.request("fetch", branch=branch, start=start, stop=stop)
+
+    def state(self):
+        return self.request("state")
+
+    def shutdown(self):
+        return self.request("shutdown")
+
+    def close(self, polite=True):
+        try:
+            if polite:
+                self.request("bye")
+        except (OSError, ConnectionError, TwinError, ValueError):
+            pass
+        for f in (self.wfile, self.rfile):
+            try:
+                f.close()
+            except OSError:
+                pass
+        self.sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Scripted CLI.
+# ---------------------------------------------------------------------------
+def _parse_value(text):
+    """Knob value: number, comma list of numbers, or bare word."""
+    if "," in text:
+        return [float(x) for x in text.split(",")]
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    return text
+
+
+def run_command(client, words):
+    """Execute one script command; return the reply (or None)."""
+    verb, args = words[0], words[1:]
+
+    def branch(tok):
+        if tok == "last":
+            if getattr(client, "last_branch", None) is None:
+                raise ValueError("'last' before any fork in this script")
+            return client.last_branch
+        return int(tok)
+
+    if verb == "advance":
+        return client.advance(branch(args[0]),
+                              int(args[1]) if len(args) > 1 else 1)
+    if verb == "fork":
+        at_step, delta = None, {}
+        for tok in args[1:]:
+            key, _, val = tok.partition("=")
+            if key == "at":
+                at_step = int(val)
+            else:
+                delta[key] = _parse_value(val)
+        reply = client.fork(branch(args[0]), delta, at_step)
+        client.last_branch = reply["branch"]
+        return reply
+    if verb == "snapshot":
+        at_step = None
+        for tok in args[1:]:
+            key, _, val = tok.partition("=")
+            if key == "at":
+                at_step = int(val)
+        return client.snapshot(branch(args[0]), at_step)
+    if verb == "fetch":
+        return client.fetch(branch(args[0]),
+                            int(args[1]) if len(args) > 1 else None,
+                            int(args[2]) if len(args) > 2 else None)
+    if verb == "state":
+        return client.state()
+    if verb == "shutdown":
+        return client.shutdown()
+    if verb == "bye":
+        client.close(polite=True)
+        return {"kind": "bye_ok"}
+    if verb == "sleep":
+        time.sleep(float(args[0]))
+        return None
+    raise ValueError(f"unknown script verb {verb!r}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse
+                                 .RawDescriptionHelpFormatter)
+    ap.add_argument("--connect", required=True,
+                    help="twin address: unix:/path or host:port")
+    ap.add_argument("--script", default="state; bye",
+                    help="';'-separated commands (see module docstring)")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="run the script this many times on one "
+                         "connection")
+    ap.add_argument("--timeout", type=float, default=30.0)
+    ap.add_argument("--fault", default=None,
+                    help="die:N | garbage | badbranch | hang")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress reply JSON on stdout")
+    args = ap.parse_args(argv)
+
+    fault = args.fault or ""
+    client = TwinClient(args.connect, timeout_s=args.timeout)
+    emit = (lambda obj: None) if args.quiet else (
+        lambda obj: print(json.dumps(obj), flush=True))
+    emit(client.hello)
+
+    if fault == "hang":
+        # send nothing; the server's read timeout reaps us
+        try:
+            client._read()
+        except (ConnectionError, OSError, ValueError):
+            pass
+        return 0
+    if fault == "garbage":
+        client.write_raw(b"this is not json\n")
+        try:
+            emit(client._read())
+        except (ConnectionError, OSError, ValueError):
+            pass
+        client.close(polite=False)
+        return 0
+    if fault == "badbranch":
+        try:
+            client.advance(999999, 1)
+        except TwinError as e:
+            emit(e.frame)
+        client.close()
+        return 0
+    die_after = int(fault.split(":", 1)[1]) if fault.startswith("die") \
+        else None
+
+    commands = [c.split() for c in args.script.split(";") if c.split()]
+    for _ in range(args.repeat):
+        for words in commands:
+            if die_after is not None and client.n_requests >= die_after:
+                os._exit(1)   # abrupt: no bye, no socket shutdown
+            try:
+                reply = run_command(client, words)
+            except TwinError as e:
+                emit(e.frame)
+                if e.error == "protocol":
+                    return 2
+                continue
+            if reply is not None:
+                emit(reply)
+            if words[0] in ("bye", "shutdown"):
+                if words[0] == "shutdown":
+                    client.close(polite=False)
+                return 0
+    client.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
