@@ -67,8 +67,20 @@ def main(argv=None):
 
     from repro.launch.simulate import _parse_time, build_system
     sys_ = build_system(args.system, args.scale, args.halls)
+    if args.interval_steps < 1:
+        ap.error(f"--interval-steps must be >= 1, got "
+                 f"{args.interval_steps}")
     t0 = _parse_time(args.fastforward)
-    t1 = t0 + _parse_time(args.time)
+    # advances land on interval boundaries, so the session rejects a
+    # horizon with a trailing partial interval — round the requested
+    # duration down to a whole number of intervals (the effective
+    # horizon_steps is reported in the startup line and every hello)
+    steps = int(round(_parse_time(args.time) / sys_.dt))
+    steps -= steps % args.interval_steps
+    if steps < args.interval_steps:
+        ap.error(f"-t {args.time} is shorter than one interval "
+                 f"({args.interval_steps} steps x {sys_.dt:g}s)")
+    t1 = t0 + steps * float(sys_.dt)
     days = args.days or max((t1 / 86400.0) * 1.25, 0.5)
     js = loaders.load(args.system, n_jobs=args.jobs, days=days,
                       seed=args.seed)

@@ -221,12 +221,23 @@ class TwinServer:
 
     # -- coalescing executor -------------------------------------------------
     def _advance(self, branch: int, intervals: int) -> dict:
-        """Enqueue an advance and block until the executor answers it."""
+        """Enqueue an advance and block until the executor answers it.
+
+        The shutdown check happens under the queue condition — the same
+        lock the executor's exit check holds — so a request can never be
+        enqueued after the executor decided to exit (which would strand
+        this handler on ``done.wait`` forever). The executor-liveness
+        poll is the backstop for the executor dying some way the
+        dispatch guard did not foresee."""
         pending = _Pending(branch=int(branch), intervals=int(intervals))
         with self._queue_cv:
+            if self._shutdown.is_set():
+                raise SessionError("server is shutting down")
             self._queue.append(pending)
             self._queue_cv.notify()
-        pending.done.wait()
+        while not pending.done.wait(timeout=1.0):
+            if not self._exec_thread.is_alive():
+                raise SessionError("server executor is gone")
         if pending.error is not None:
             raise pending.error
         return pending.result
@@ -244,13 +255,14 @@ class TwinServer:
                 batch, self._queue = self._queue, []
             # an unknown branch id fails ONLY its own requester — it must
             # not poison the coalesced batch for well-behaved clients
+            unknown, known_ids = self.session.unknown_branches(
+                {p.branch for p in batch})
             known = []
             for p in batch:
-                if p.branch not in self.session.branches:
+                if p.branch in unknown:
                     p.error = SessionError(
                         f"unknown branch id {p.branch!r} (known: "
-                        f"{sorted(self.session.branches)})")
-                    self.session.counters["errors"] += 1
+                        f"{known_ids})")
                     p.done.set()
                 else:
                     known.append(p)
@@ -263,6 +275,15 @@ class TwinServer:
                 err = None
             except SessionError as e:   # defense in depth (races)
                 results, err = {}, e
+            except Exception as e:      # noqa: BLE001
+                # a dispatch blowing up (e.g. a shape error that slipped
+                # past fork-time validation) must fail THIS batch, not
+                # kill the executor — a dead executor strands every
+                # later advance on done.wait and breaks the "server
+                # never dies on client behavior" guarantee
+                results, err = {}, SessionError(f"advance failed: {e!r}")
+                self.session.count_error()
+                self._event("advance_batch_error", message=repr(e))
             self._event("advance_batch", branches=sorted(merged),
                         requests=len(batch),
                         coalesced=len(merged) > 1)

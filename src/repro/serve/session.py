@@ -62,13 +62,18 @@ class Branch:
     step: int                      # absolute engine step of ``carry``
     born_step: int                 # fork point (0 for the root)
     # carry at every interval boundary visited since birth (includes the
-    # birth checkpoint) — any of these is a legal fork/snapshot point
+    # birth checkpoint) — any of these is a legal fork/snapshot point.
+    # Stored as HOST numpy pytrees: a long-lived session accumulates one
+    # per tick per branch, and only the live ``carry`` needs to stay on
+    # device (forking moves the chosen checkpoint back; the numpy<->jnp
+    # roundtrip is byte-exact, so parity is unaffected)
     checkpoints: Dict[int, T.SimState] = field(default_factory=dict)
     # StepRecord history per advanced segment (host numpy, in step order)
     history: List[T.StepRecord] = field(default_factory=list)
 
     def __post_init__(self):
-        self.checkpoints.setdefault(self.step, self.carry)
+        if self.step not in self.checkpoints:
+            self.checkpoints[self.step] = _to_host(self.carry)
 
 
 class TwinSession:
@@ -86,6 +91,15 @@ class TwinSession:
         self.t1 = float(t1)
         self.interval_steps = int(interval_steps)
         self.horizon_steps = int(round((t1 - t0) / system.dt))
+        if self.horizon_steps % self.interval_steps:
+            # advances always land on interval boundaries, so a trailing
+            # partial interval could never be simulated — reject loudly
+            # instead of silently stopping short of t1
+            raise ValueError(
+                f"horizon ({self.horizon_steps} steps) must be a "
+                f"multiple of interval_steps ({self.interval_steps}): "
+                f"the {self.horizon_steps % self.interval_steps}-step "
+                f"tail would be unreachable")
         self.signals = signals
         self.weather = weather
         self._lock = threading.RLock()
@@ -112,6 +126,25 @@ class TwinSession:
                 f"unknown branch id {branch_id!r} (known: "
                 f"{sorted(self.branches)})") from None
         return br
+
+    def unknown_branches(self, branch_ids):
+        """Partition ids into (unknown set, known-ids list), atomically.
+
+        The server's coalescing executor screens each batch with this so
+        one client's stale id fails only its own request and never
+        poisons the shared sweep — and does so under the session lock,
+        honoring the one-lock contract while handler threads fork
+        concurrently. Each unknown id counts as one error.
+        """
+        with self._lock:
+            unknown = {b for b in branch_ids if b not in self.branches}
+            self.counters["errors"] += len(unknown)
+            return unknown, sorted(self.branches)
+
+    def count_error(self) -> None:
+        """Count one server-side failure under the session lock."""
+        with self._lock:
+            self.counters["errors"] += 1
 
     # -- advance (the hot path) ----------------------------------------------
     def advance_many(self, requests: Dict[int, int]) -> Dict[int, dict]:
@@ -172,7 +205,9 @@ class TwinSession:
     def _commit(self, br: Branch, carry, hist) -> None:
         br.carry = carry
         br.step += self.interval_steps
-        br.checkpoints[br.step] = carry
+        # checkpoints and history live on host: only the live carry is
+        # hot, and a session holds one checkpoint per tick per branch
+        br.checkpoints[br.step] = _to_host(carry)
         br.history.append(_to_host(hist))
 
     # -- fork ----------------------------------------------------------------
@@ -205,8 +240,9 @@ class TwinSession:
                 raise SessionError(str(e)) from e
             child = Branch(branch_id=self._next_id, parent=parent.branch_id,
                            scenario=scen, delta=dict(delta or {}),
-                           carry=parent.checkpoints[step], step=step,
-                           born_step=step)
+                           carry=_to_device(parent.checkpoints[step]),
+                           step=step, born_step=step,
+                           checkpoints={step: parent.checkpoints[step]})
             self._next_id += 1
             self.branches[child.branch_id] = child
             self.counters["forks"] += 1
@@ -285,8 +321,17 @@ def _tree_index(tree, i: int):
     return jax.tree_util.tree_map(lambda x: x[i], tree)
 
 
-def _to_host(hist) -> T.StepRecord:
-    """Move a StepRecord history to host numpy (frees device memory for
-    long-lived sessions; fetch slices it without device syncs)."""
+def _to_host(tree):
+    """Move a pytree (StepRecord history, checkpoint carry) to host
+    numpy — frees device memory for long-lived sessions; fetch slices
+    host history without device syncs."""
     import jax
-    return jax.tree_util.tree_map(lambda x: np.asarray(x), hist)
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+
+def _to_device(tree):
+    """Put a host checkpoint back on device (byte-exact inverse of
+    ``_to_host``; forking resumes from the result bit-identically)."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree_util.tree_map(jnp.asarray, tree)

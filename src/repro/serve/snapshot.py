@@ -187,6 +187,14 @@ def apply_scenario_delta(parent: T.Scenario, delta: dict) -> T.Scenario:
     empty delta returns a scenario equal to the parent — the *neutral
     fork* whose branch must stay bit-identical to its parent
     (tests/test_serve_checkpoint.py).
+
+    Every merged leaf must keep the **parent's shape**: coalesced sweeps
+    stack branch scenarios leaf-wise, so a fork that reshaped a knob
+    (vector where the session uses a scalar, or the wrong vector length)
+    would blow up as a JAX trace error *inside the server's executor*,
+    on behalf of every batched client. That failure is rejected here, at
+    fork time, as a ``SnapshotError`` the requester alone pays for. A
+    scalar delta on a vector knob is broadcast explicitly.
     """
     if not isinstance(delta, dict):
         raise SnapshotError(f"scenario delta must be an object, got "
@@ -217,7 +225,25 @@ def apply_scenario_delta(parent: T.Scenario, delta: dict) -> T.Scenario:
             if not (ok_num or ok_vec):
                 raise SnapshotError(f"scenario knob {k!r} must be a "
                                     f"number or list of numbers, got {v!r}")
-            merged[k] = v
+            ref = np.asarray(getattr(parent, k))
+            if ok_vec:
+                if ref.ndim == 0:
+                    raise SnapshotError(
+                        f"scenario knob {k!r} is a scalar in this "
+                        f"session; a {len(v)}-element vector would "
+                        f"change the traced leaf shape")
+                if len(v) != int(ref.shape[0]):
+                    raise SnapshotError(
+                        f"scenario knob {k!r} must have length "
+                        f"{int(ref.shape[0])} in this session, got "
+                        f"{len(v)}")
+                merged[k] = [float(x) for x in v]
+            elif ref.ndim:
+                # scalar onto a vector knob: broadcast explicitly so the
+                # child's leaf keeps the parent's shape
+                merged[k] = [float(v)] * int(ref.shape[0])
+            else:
+                merged[k] = v
     return T.Scenario(
         policy=jnp.int32(merged["policy"]),
         backfill=jnp.int32(merged["backfill"]),

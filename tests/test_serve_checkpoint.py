@@ -191,6 +191,40 @@ def test_fork_from_earlier_checkpoint(topo_case):
         assert row == parent[row["step"]], f"step {row['step']}"
 
 
+@pytest.mark.timeout(120)
+def test_checkpoints_live_on_host(topo_case):
+    """Interval checkpoints are moved to host numpy on commit — a
+    long-lived session holds one per tick per branch, and only the live
+    carry should pin device memory. Forking from a host checkpoint is
+    still bit-identical (the parity tests above run through this path)."""
+    system, table, scen, signals, weather = topo_case
+    t1 = HORIZON * system.dt
+    sess = serve_session.TwinSession(system, table, scen, 0.0, t1,
+                                     interval_steps=INTERVAL,
+                                     signals=signals, weather=weather,
+                                     num_accounts=8)
+    sess.advance_many({0: 2})
+    child = sess.fork(0, {})
+    sess.advance_many({child.branch_id: 1})
+    for br in sess.branches.values():
+        assert len(br.checkpoints) >= 2
+        for step, ck in br.checkpoints.items():
+            for leaf in jax.tree_util.tree_leaves(ck):
+                assert isinstance(leaf, np.ndarray), \
+                    f"branch {br.branch_id} step {step}: device leaf"
+
+
+def test_rejects_partial_interval_horizon(topo_case):
+    """A horizon that is not a whole number of intervals has an
+    unreachable tail (advances land on interval boundaries) — the
+    session must refuse it loudly instead of silently stopping short."""
+    system, table, scen, signals, weather = topo_case
+    with pytest.raises(ValueError, match="multiple of interval_steps"):
+        serve_session.TwinSession(system, table, scen, 0.0,
+                                  (HORIZON + 1) * system.dt,
+                                  interval_steps=INTERVAL)
+
+
 # ---------------------------------------------------------------------------
 # Satellite: the runner cache must stay bounded under a long-lived server.
 # ---------------------------------------------------------------------------

@@ -273,6 +273,34 @@ def test_scenario_delta_rejects_unknown_knobs():
     assert float(scen.cap_scale) == pytest.approx(0.9)
 
 
+def test_scenario_delta_validates_vector_shapes():
+    """A delta that would reshape a traced knob must fail at fork time
+    with ``SnapshotError`` — not escape into the server's coalesced
+    sweep and kill the executor as a JAX trace error (the batch stacks
+    every branch's scenario leaf-wise, so shapes must agree)."""
+    flat = T.Scenario.make("fcfs")                          # scalar knobs
+    halls = T.Scenario.make("fcfs",
+                            cells_offline=(0.0, 0.0, 0.0, 0.0))
+    with pytest.raises(snap.SnapshotError, match="scalar in this session"):
+        snap.apply_scenario_delta(flat, {"cells_offline": [1.0, 0.0]})
+    with pytest.raises(snap.SnapshotError, match="length 4"):
+        snap.apply_scenario_delta(halls, {"cells_offline": [1.0]})
+    with pytest.raises(snap.SnapshotError, match="length 4"):
+        snap.apply_scenario_delta(
+            halls, {"cells_offline": [1.0, 0.0, 0.0, 0.0, 0.0]})
+    with pytest.raises(snap.SnapshotError, match="scalar in this session"):
+        snap.apply_scenario_delta(flat, {"alpha": [0.1, 0.2, 0.3]})
+    # a matching-length vector keeps the shape ...
+    out = snap.apply_scenario_delta(halls,
+                                    {"cells_offline": [1.0, 0.0, 0.0, 0.0]})
+    assert out.cells_offline.shape == (4,)
+    # ... and a scalar broadcasts explicitly over a vector knob
+    out = snap.apply_scenario_delta(halls, {"cells_offline": 2.0})
+    assert out.cells_offline.shape == (4,)
+    assert np.array_equal(np.asarray(out.cells_offline),
+                          np.full(4, 2.0, np.float32))
+
+
 @pytest.mark.timeout(300)
 def test_frontier_scale_snapshot_fits_one_frame():
     """A full Frontier-scale carry (9408-node class system, 1k-job padded

@@ -135,9 +135,12 @@ def test_fault_injection_never_kills_the_server(session, small_jobs,
         ]
         results = drain(procs)
         # a session error on a live connection must not end it: the
-        # same connection keeps working after the error envelope
-        late = spawn_client(addr, script="advance 999999 1; state; "
-                                         "advance 0 1; bye")
+        # same connection keeps working after the error envelope —
+        # including a wrong-shape fork delta, which must be rejected at
+        # fork time instead of crashing the shared executor later
+        late = spawn_client(addr, script="advance 999999 1; "
+                                         "fork 0 cells_offline=1,2; "
+                                         "state; advance 0 1; bye")
         late_rc, late_lines, late_err = drain([late])[0]
         final_state = session.describe()
     stats = srv.close()
@@ -165,8 +168,11 @@ def test_fault_injection_never_kills_the_server(session, small_jobs,
 
     assert late_rc == 0, late_err
     late_kinds = [json.loads(l)["kind"] for l in late_lines]
-    assert late_kinds == ["hello", "error", "state_ok", "advance_ok",
-                          "bye_ok"]
+    assert late_kinds == ["hello", "error", "error", "state_ok",
+                          "advance_ok", "bye_ok"]
+    shape_reply = json.loads(late_lines[2])
+    assert shape_reply["error"] == "session"
+    assert "scalar in this session" in shape_reply["message"]
 
     # the chaos left a coherent session: healthy fork exists, advanced
     branches = {b["branch"]: b for b in final_state["branches"]}
@@ -233,7 +239,48 @@ def test_session_error_taxonomy(session):
         session.fork(0, {"flux_capacitor": 1.21})
     with pytest.raises(SessionError, match="no checkpoint"):
         session.snapshot(0, at_step=999)
+    # a delta that would reshape a traced knob is a fork-time error,
+    # not a later trace error inside the coalesced sweep
+    with pytest.raises(SessionError, match="scalar in this session"):
+        session.fork(0, {"cells_offline": [1.0, 0.0]})
     # the session still works after every rejection
     assert session.advance_many({0: 1})[0]["advanced_steps"] == INTERVAL
     assert len(session.branches) == 1
-    assert session.counters["errors"] == 4
+    assert session.counters["errors"] == 5
+
+
+@pytest.mark.timeout(120)
+def test_executor_survives_unexpected_dispatch_failure(session, tmp_path,
+                                                       monkeypatch):
+    """Defense in depth: if a batch dispatch blows up with something
+    that is NOT a ``SessionError`` (e.g. a shape error that slipped
+    past fork-time validation), the batch gets error envelopes and the
+    executor keeps serving — it must never die and strand every later
+    advance on an unanswered queue."""
+    addr = f"unix:{tmp_path}/twin.sock"
+    with TwinServer(session, addr) as srv:
+        real = session.advance_many
+        monkeypatch.setattr(
+            session, "advance_many",
+            lambda requests: (_ for _ in ()).throw(
+                RuntimeError("synthetic trace error")))
+        with pytest.raises(SessionError, match="synthetic trace error"):
+            srv._advance(0, 1)
+        assert srv._exec_thread.is_alive()
+        monkeypatch.setattr(session, "advance_many", real)
+        out = srv._advance(0, 1)
+        assert out["advanced_steps"] == INTERVAL
+    assert session.counters["errors"] == 1
+
+
+@pytest.mark.timeout(120)
+def test_advance_racing_shutdown_fails_fast(session, tmp_path):
+    """An advance that arrives once shutdown is underway gets a
+    ``SessionError`` immediately instead of enqueueing a request the
+    executor will never answer (which would hang the handler thread
+    and break close()'s zero-zombie assertion)."""
+    addr = f"unix:{tmp_path}/twin.sock"
+    srv = TwinServer(session, addr)
+    srv.close()
+    with pytest.raises(SessionError, match="shutting down"):
+        srv._advance(0, 1)
