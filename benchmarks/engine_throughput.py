@@ -77,13 +77,217 @@ def run(quick: bool = False):
     return rows
 
 
-def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
+def wire_bench(big: bool = False, seed: int = 0):
+    """Scheduler-wire codec throughput over a local socketpair: the reset
+    envelope (the big one — six f64/i64 job columns) and poll roundtrips,
+    NDJSON vs RBW1 binary frames, plus the batched ``poll_batch``
+    envelope. ``big=True`` adds a ~1e6-job reset (one shot per dialect —
+    the JSON spelling alone is tens of MB). Returns rows whose
+    ``bytes_per_s`` / ``roundtrips_per_s`` leaves feed the perf gate."""
+    import socket
+    import threading
+
+    from repro.core import external as ext
+    from repro.core import transport as tr
+
+    rng = np.random.default_rng(seed)
+
+    def job_cols(n):
+        return {
+            "submit": np.sort(rng.uniform(0, 1e5, n)),
+            "limit": rng.uniform(60.0, 86400.0, n),
+            "wall": rng.uniform(30.0, 43200.0, n),
+            "nodes": rng.integers(1, 64, n).astype(np.int64),
+            "priority": rng.uniform(0.0, 1.0, n),
+            "account": rng.integers(0, 16, n).astype(np.int64),
+        }
+
+    def peer_loop(rfile, wfile, binary, n_running):
+        """Minimal scheduler peer: ack resets, answer polls/batches."""
+        ids = np.arange(n_running, dtype=np.int64)
+        write = tr.write_bin_frame if binary else tr.write_frame
+        while True:
+            try:
+                msg = tr.read_any_frame(rfile, as_arrays=True)
+            except (ConnectionError, ext.ProtocolError, OSError,
+                    ValueError):
+                return
+            kind = msg.get("kind")
+            if kind == "reset":
+                reply = {"version": tr.WIRE_VERSION, "kind": "reset_ack",
+                         "n_jobs": int(np.asarray(
+                             msg["jobs"]["submit"]).shape[0])}
+            elif kind == "poll":
+                reply = {"version": tr.WIRE_VERSION, "kind": "running",
+                         "job_ids": ids if binary else ids.tolist()}
+            elif kind == "poll_batch":
+                sets = [ids if binary else ids.tolist()
+                        for _ in msg["ts"]]
+                reply = {"version": tr.WIRE_VERSION,
+                         "kind": ext.WIRE_KIND_RUNNING_SETS, "sets": sets}
+            else:  # "bye"
+                return
+            write(wfile, reply)
+
+    def session(binary, n_running=200):
+        """(counters, send, recv, close) over a fresh socketpair peer."""
+        a, b = socket.socketpair()
+        rf_a, wf_a = a.makefile("rb"), a.makefile("wb")
+        rf_b, wf_b = b.makefile("rb"), b.makefile("wb")
+        t = threading.Thread(target=peer_loop,
+                             args=(rf_b, wf_b, binary, n_running),
+                             daemon=True)
+        t.start()
+        counters = tr.WireCounters()
+        write = tr.write_bin_frame if binary else tr.write_frame
+
+        def send(msg):
+            write(wf_a, msg, counters)
+
+        def recv():
+            return tr.read_any_frame(rf_a, counters)
+
+        def close():
+            try:
+                send({"version": tr.WIRE_VERSION, "kind": "bye"})
+            except (OSError, ext.ProtocolError):
+                pass
+            for f in (wf_a, rf_a, wf_b, rf_b):
+                try:
+                    f.close()
+                except OSError:
+                    pass
+            a.close()
+            b.close()
+            t.join(timeout=5)
+
+        return counters, send, recv, close
+
+    rows = []
+    scales = [("pm100", 4_000, 20)] + ([("1m", 1_000_000, 2)] if big else [])
+    for tag, n_jobs, reps in scales:
+        cols = job_cols(n_jobs)
+        for dialect, binary in (("ndjson", False), ("binary", True)):
+            payload = cols if binary else \
+                {k: v.tolist() for k, v in cols.items()}
+            msg = {"version": tr.WIRE_VERSION, "kind": "reset", "t0": 0.0,
+                   "policy": "fcfs", "backfill": "firstfit",
+                   "system": {"n_nodes": 1024, "dt": 30.0, "name": tag},
+                   "system_digest": "bench", "job_digest": "bench",
+                   "jobs": payload}
+            counters, send, recv, close = session(binary)
+            send(msg)          # warm the pipe (and the peer thread)
+            recv()
+            envelope_bytes = counters.bytes_out
+            best = 0.0         # best-of per rep: scheduling noise on a
+            for _ in range(reps):   # sub-ms envelope would swamp a sum
+                t0 = time.perf_counter()
+                send(msg)
+                recv()
+                best = max(best, envelope_bytes
+                           / (time.perf_counter() - t0))
+            close()
+            rows.append({
+                "name": f"wire/reset-{dialect}-{tag}",
+                "bytes_per_s": best,
+                "envelope_mb": envelope_bytes / 1e6,
+                "envelopes": reps, "jobs": n_jobs,
+            })
+
+    n_polls, batch = 200, 20
+    for dialect, binary in (("ndjson", False), ("binary", True)):
+        counters, send, recv, close = session(binary)
+        poll = {"version": tr.WIRE_VERSION, "kind": "poll", "t": 0.0}
+        send(poll)
+        recv()
+        t0 = time.perf_counter()
+        for i in range(n_polls):
+            send(dict(poll, t=float(i)))
+            recv()
+        wall = time.perf_counter() - t0
+        rows.append({"name": f"wire/poll-{dialect}",
+                     "roundtrips_per_s": n_polls / wall,
+                     "polls": n_polls})
+        if binary:   # the batched envelope rides the binary session
+            t0 = time.perf_counter()
+            for i in range(n_polls // batch):
+                send({"version": tr.WIRE_VERSION, "kind": "poll_batch",
+                      "ts": [float(i * batch + j) for j in range(batch)]})
+                recv()
+            wall = time.perf_counter() - t0
+            rows.append({"name": "wire/poll-batch",
+                         "roundtrips_per_s": n_polls / wall,
+                         "polls": n_polls, "batch": batch})
+        close()
+    return rows
+
+
+def kernel_bench(n_iters: int | None = None):
+    """Power-topology kernel throughput at Frontier scale: the Pallas
+    fused cooling pass vs the unfused XLA reference, plus the bare
+    segment-reduce. On GPU/TPU the Pallas rows run compiled
+    (``interpret=False``); on CPU they take the interpreter with a
+    scaled-down plant (same code path, far slower — the row records
+    which, and the perf gate only compares same-backend entries)."""
+    import jax.numpy as jnp
+
+    from repro.cooling import model as cool
+    from repro.kernels.power_topo import ops
+
+    compiled = jax.default_backend() in ("gpu", "tpu")
+    interpret = not compiled
+    sys_ = get_system("frontier") if compiled else \
+        get_system("frontier").scaled(512)
+    if n_iters is None:
+        n_iters = 100 if compiled else 50
+    cfg = sys_.cooling
+    N, G, H = sys_.n_nodes, cfg.n_groups, cfg.topology.n_halls
+    rng = np.random.default_rng(0)
+    node_pw = jnp.asarray(rng.uniform(100.0, 1000.0, N), jnp.float32)
+    t_supply = jnp.full((G,), 25.0, jnp.float32)
+    mdot = jnp.full((G,), cfg.mdot_kg_s, jnp.float32)
+    t_basin = jnp.full((H,), 22.0, jnp.float32)
+    hog = cfg.hall_of_group()
+    params = cool.cdu_params(cfg, sys_.dt)
+
+    variants = {
+        "kernel/group-power": jax.jit(lambda p: ops.group_power(
+            p, G, use_pallas=True, interpret=interpret)),
+        "kernel/fused": jax.jit(lambda p: ops.fused_cooling_hier(
+            p, t_supply, mdot, t_basin, jnp.float32(24.0), hog, G,
+            params, use_pallas=True, interpret=interpret)),
+        "kernel/unfused": jax.jit(lambda p: ops.fused_cooling_hier(
+            p, t_supply, mdot, t_basin, jnp.float32(24.0), hog, G,
+            params, use_pallas=False)),
+    }
+    rows = []
+    for name, fn in variants.items():
+        jax.block_until_ready(fn(node_pw))   # compile
+        wall = float("inf")                  # best-of-3: dodge CI noise
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(n_iters):
+                out = fn(node_pw)
+            jax.block_until_ready(out)
+            wall = min(wall, time.perf_counter() - t0)
+        rows.append({"name": name, "calls_per_s": n_iters / wall,
+                     "us_per_call": wall / n_iters * 1e6,
+                     "nodes": N, "groups": G, "iters": n_iters,
+                     "interpret": interpret,
+                     "backend": jax.default_backend()})
+    return rows
+
+
+def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json",
+          wire_big: bool = False):
     """CI perf canary: a tiny 2-scenario sweep (grid signals active) plus a
     flat-vs-multi-hall topology comparison at the same scaled config, for
-    ``n_steps`` engine steps each. Fails loudly on compile errors, emits
-    CSV rows so perf regressions surface in PR logs, and writes
-    ``BENCH_engine.json`` (steps/s per variant) — the artifact the CI
-    workflow uploads so the perf trajectory is tracked across PRs."""
+    ``n_steps`` engine steps each, then the wire-codec and power-topology
+    kernel sections (``wire/*``, ``kernel/*``). Fails loudly on compile
+    errors, emits CSV rows so perf regressions surface in PR logs, and
+    writes ``BENCH_engine.json`` (throughput per variant) — the artifact
+    the CI workflow uploads so the perf trajectory is tracked across
+    PRs. ``wire_big`` adds the ~1e6-job reset-envelope rows."""
     import dataclasses
     import json
 
@@ -105,10 +309,13 @@ def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
         tc = time.perf_counter()
         eng.simulate_sweep(system, table, scens, 0.0, t1, **kw)  # compile
         compile_s = time.perf_counter() - tc
-        t0 = time.perf_counter()
-        final, _ = eng.simulate_sweep(system, table, scens, 0.0, t1, **kw)
-        jax.block_until_ready(final.t)
-        wall = time.perf_counter() - t0
+        wall = float("inf")     # best-of-2: least-disturbed run counts
+        for _ in range(2):
+            t0 = time.perf_counter()
+            final, _ = eng.simulate_sweep(system, table, scens, 0.0, t1,
+                                          **kw)
+            jax.block_until_ready(final.t)
+            wall = min(wall, time.perf_counter() - t0)
         return {"name": name, "us_per_call": wall / n_steps * 1e6,
                 "wall_s": wall, "compile_s": compile_s, "steps": n_steps,
                 "scenarios": len(scens),
@@ -139,6 +346,11 @@ def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
         derived = ";".join(f"{k}={v}" for k, v in row.items()
                            if k not in ("name", "us_per_call"))
         print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+    side_rows = wire_bench(big=wire_big) + kernel_bench()
+    for row in side_rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k != "name")
+        print(f"{row['name']},{derived}")
     if bench_json:
         from benchmarks.common import bench_meta
         payload = {r["name"]: {"steps_per_s": r["steps_per_s"],
@@ -146,6 +358,9 @@ def smoke(n_steps: int = 50, bench_json: str = "BENCH_engine.json"):
                                "compile_s": r["compile_s"],
                                "scenarios": r["scenarios"],
                                "steps": r["steps"]} for r in rows}
+        for row in side_rows:
+            payload[row["name"]] = {k: v for k, v in row.items()
+                                    if k != "name"}
         payload["meta"] = bench_meta()
         with open(bench_json, "w") as f:
             json.dump(payload, f, indent=1)
@@ -161,9 +376,11 @@ if __name__ == "__main__":
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--bench-json", default="BENCH_engine.json")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--wire-big", action="store_true",
+                    help="include the ~1e6-job reset-envelope wire rows")
     args = ap.parse_args()
     if args.smoke:
-        smoke(args.steps, args.bench_json)
+        smoke(args.steps, args.bench_json, wire_big=args.wire_big)
     else:
         from benchmarks.common import emit_csv
         emit_csv(run(quick=args.quick))

@@ -76,8 +76,19 @@ def smoke(bench_json: str = "BENCH_serve.json", n_forks: int = 200,
                  "coalesced_batches": sess.counters["coalesced_batches"]})
 
     # -- wire round-trips: state requests against a live server ------------
+    # the roundtrip conflates three costs: session work, JSON codec, and
+    # socket hops. Time the same verb through the inline handler first
+    # (no wire at all) so the row splits session time from wire+codec
+    # overhead instead of burying the codec in one number.
+    from repro.serve import protocol as proto
     from tools.twin_client import TwinClient
     sess = make_session(n_steps=INTERVAL * 4)
+    req = {"version": proto.WIRE_VERSION, "kind": "state", "id": 0}
+    proto.handle_inline(sess, proto.validate_request(req))  # warm
+    t0 = time.perf_counter()
+    for _ in range(n_roundtrips):
+        proto.handle_inline(sess, proto.validate_request(req))
+    inline_wall = time.perf_counter() - t0
     with TwinServer(sess, f"unix:{tempfile.mkdtemp()}/bench.sock") as srv:
         with TwinClient(srv.address) as client:
             client.state()              # warm the path
@@ -85,9 +96,29 @@ def smoke(bench_json: str = "BENCH_serve.json", n_forks: int = 200,
             for _ in range(n_roundtrips):
                 client.state()
             wall = time.perf_counter() - t0
-    rows.append({"name": "serve/wire-roundtrip", "wall_s": wall,
-                 "roundtrips_per_s": n_roundtrips / wall,
-                 "count": n_roundtrips})
+            rows.append({
+                "name": "serve/wire-roundtrip", "wall_s": wall,
+                "roundtrips_per_s": n_roundtrips / wall,
+                "session_per_s": n_roundtrips / inline_wall,
+                "wire_overhead_us":
+                    (wall - inline_wall) / n_roundtrips * 1e6,
+                "count": n_roundtrips})
+
+            # snapshot codec: base64-JSON spelling vs RBW1 binary
+            # leaves, same branch, same live server — the delta is
+            # pure codec (the session hands both the same checkpoint)
+            client.advance(0, 1)        # ensure a checkpoint exists
+            for label, binary in (("json", False), ("binary", True)):
+                client.snapshot(0, binary=binary)   # warm
+                t0 = time.perf_counter()
+                for _ in range(n_roundtrips // 4):
+                    client.snapshot(0, binary=binary)
+                wall = time.perf_counter() - t0
+                rows.append({
+                    "name": f"serve/snapshot-{label}",
+                    "wall_s": wall,
+                    "roundtrips_per_s": (n_roundtrips // 4) / wall,
+                    "count": n_roundtrips // 4})
 
     for row in rows:
         derived = ";".join(f"{k}={v}" for k, v in row.items()

@@ -31,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -87,6 +88,10 @@ def init_state(system: SystemConfig, table: T.JobTable, t0: float,
     free_count = jnp.sum((node_job < 0).astype(jnp.int32))
     if accounts is None:
         accounts = T.AccountStats.zeros(num_accounts)
+    else:
+        # the ledger is embedded in the scan carry, which the AOT runners
+        # donate — copy so the caller's warm-start buffers survive the run
+        accounts = jax.tree_util.tree_map(jnp.copy, accounts)
     # prepopulated jobs ran unthrottled before the window: work-time
     # progress equals their wall-clock elapsed at t0
     progress = jnp.where(running0, jnp.maximum(t0 - table.rec_start, 0.0),
@@ -354,7 +359,26 @@ def external_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
 # ---------------------------------------------------------------------------
 # Full simulation.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0, 6))
+# Buffer donation on the scan-carry runners: the input carry and the
+# output carry are the same SimState pytree, so XLA can write the scan
+# in place instead of allocating a second full copy of the (node map +
+# job lifecycle + ledgers) state per call. Donated *inputs* are
+# consumed — every runner below either builds its carry fresh
+# (init_state / jnp.stack) or its callers treat the passed carry as
+# moved-from (repro.serve reassigns; see docs/serving.md). Only the
+# carry argument is donated: tables/signals are broadcast inputs reused
+# across calls, and the sweep runners' broadcast st0 cannot alias their
+# batched output. REPRO_NO_DONATE=1 disables donation for debugging
+# (e.g. to inspect a carry after a call that consumed it).
+DONATE_CARRIES = not os.environ.get("REPRO_NO_DONATE")
+
+
+def _donate(*argnums: int) -> tuple:
+    return tuple(argnums) if DONATE_CARRIES else ()
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6),
+                   donate_argnums=_donate(2))
 def _simulate_jit(system: SystemConfig, table: T.JobTable, st0: T.SimState,
                   scen: T.Scenario, signals: gsig.GridSignals | None,
                   weather: wsig.WeatherSignals | None, n_steps: int):
@@ -461,7 +485,7 @@ def simulate_static(system: SystemConfig, table: T.JobTable, policy: str,
                 return engine_step(system, table_, st, scen, signals_,
                                    weather_)
             return jax.lax.scan(body, st0_, None, length=n_steps)
-        fn = jax.jit(run)
+        fn = jax.jit(run, donate_argnums=_donate(1))
         _STATIC_CACHE[key] = fn
     st0 = (init_state(system, table, t0, t1, accounts, num_accounts)
            if carry is None else carry)
@@ -688,7 +712,7 @@ def simulate_segment(system: SystemConfig, table: T.JobTable,
     key = ("segment", system, int(n_steps))
     fn = _cache_lookup(key)
     if fn is None:
-        @jax.jit
+        @functools.partial(jax.jit, donate_argnums=_donate(1))
         def fn(table_, carry_, scen_, signals_, weather_):
             def body(st, _):
                 return engine_step(system, table_, st, scen_, signals_,
@@ -729,7 +753,9 @@ def simulate_segment_sweep(system: SystemConfig, table: T.JobTable,
     key = ("segment_sweep", system, int(n_steps))
     fn = _cache_lookup(key)
     if fn is None:
-        @jax.jit
+        # the stacked carries are a fresh jnp.stack buffer every call, so
+        # donating them is always safe and saves the B-branch copy
+        @functools.partial(jax.jit, donate_argnums=_donate(1))
         def fn(table_, carries_, scen_, signals_, weather_):
             def one(carry1, scen1):
                 def body(st, _):

@@ -57,6 +57,7 @@ from repro.systems.config import SystemConfig
 
 WIRE_VERSION = 1
 WIRE_KIND_RUNNING = "running_set"
+WIRE_KIND_RUNNING_SETS = "running_sets"  # batched poll_batch answer
 
 
 class ProtocolError(RuntimeError):
@@ -130,6 +131,40 @@ def decode_running(msg, n_jobs: int) -> np.ndarray:
     if np.unique(arr).size != arr.size:
         raise ProtocolError("duplicate job ids in running set")
     return arr
+
+
+def encode_running_sets(sets: Iterable[Iterable[int]]) -> dict:
+    """Wrap a batched running-set answer (one set per polled timestamp)."""
+    return {"version": WIRE_VERSION, "kind": WIRE_KIND_RUNNING_SETS,
+            "sets": [[int(j) for j in ids] for ids in sets]}
+
+
+def decode_running_sets(msg, n_jobs: int, n_expected: int) -> list[np.ndarray]:
+    """Validate a batched envelope; returns one id array per timestamp.
+
+    Each inner set goes through the exact ``decode_running`` validation
+    (version handled once at the envelope level), so a batched peer
+    cannot sneak anything past the bridge that a per-poll peer could not.
+    """
+    if not isinstance(msg, dict):
+        raise ProtocolError(f"wire message must be a dict envelope, "
+                            f"got {type(msg).__name__}")
+    ver = msg.get("version")
+    if ver != WIRE_VERSION:
+        raise ProtocolError(f"wire version mismatch: peer speaks {ver!r}, "
+                            f"bridge speaks {WIRE_VERSION}")
+    if msg.get("kind") != WIRE_KIND_RUNNING_SETS:
+        raise ProtocolError(f"unexpected message kind {msg.get('kind')!r}")
+    sets = msg.get("sets")
+    if not isinstance(sets, (list, tuple)):
+        raise ProtocolError(f"'sets' must be a list, got "
+                            f"{type(sets).__name__}")
+    if len(sets) != n_expected:
+        raise ProtocolError(f"batched poll answered {len(sets)} sets for "
+                            f"{n_expected} timestamps")
+    return [decode_running({"version": WIRE_VERSION,
+                            "kind": WIRE_KIND_RUNNING, "job_ids": ids},
+                           n_jobs) for ids in sets]
 
 
 # transport-style failures the bridge may heal by reconnecting; anything
@@ -268,6 +303,51 @@ class SchedulerBridge:
         raise BridgeTimeout(f"peer unusable after "
                             f"{self.config.max_retries + 1} attempts: {last}")
 
+    def poll_many(self, ts) -> list[np.ndarray]:
+        """Running-set ids for several timestamps in one exchange.
+
+        Uses the peer's ``poll_wire_batch`` when it both exists and the
+        transport negotiated the batch capability (``batch_capable``);
+        otherwise falls back to one ``poll`` per timestamp so callers
+        never need to care which dialect the peer speaks. The batched
+        path shares the per-call budget/retry machinery: the whole batch
+        counts as one poll against ``timeout_s``.
+        """
+        ts = [float(t) for t in ts]
+        if not ts:
+            return []
+        batch = getattr(self.peer, "poll_wire_batch", None)
+        if batch is None or not getattr(self.peer, "batch_capable", True):
+            return [self.poll(t) for t in ts]
+        n_jobs = len(self._args[1]) if self._args else 1 << 31
+        last = "never polled"
+        for attempt in range(self.config.max_retries + 1):
+            retryable = attempt < self.config.max_retries
+            t_call = time.perf_counter()
+            try:
+                sets = decode_running_sets(batch(ts), n_jobs, len(ts))
+            except ProtocolError:
+                raise                       # malformed speech: not retryable
+            except TRANSPORT_ERRORS as e:
+                self.poll_failures += 1
+                last = f"batched poll raised {e!r}"
+                if retryable:
+                    last = self._reconnect() or last
+                continue
+            took = time.perf_counter() - t_call
+            self.poll_latency.record(took)
+            if took > self.config.timeout_s:
+                self.budget_exceeded += 1
+                last = f"batched poll took {took:.3f}s > " \
+                       f"{self.config.timeout_s}s"
+                if retryable:
+                    last = self._reconnect() or last
+                continue
+            self.polls += 1
+            return sets
+        raise BridgeTimeout(f"peer unusable after "
+                            f"{self.config.max_retries + 1} attempts: {last}")
+
 
 # ---------------------------------------------------------------------------
 @dataclass
@@ -298,6 +378,10 @@ class FastSimLike:
     def poll_wire(self, t: float) -> dict:
         """Versioned wire endpoint (bridge conformance)."""
         return encode_running(self.running_at(t))
+
+    def poll_wire_batch(self, ts) -> dict:
+        """Batched wire endpoint: one envelope for many timestamps."""
+        return encode_running_sets(self.running_at(t) for t in ts)
 
 
 @dataclass

@@ -28,9 +28,17 @@ kind               direction  payload
 ``schedule_req``   twin→peer  sequential mode: ask for the full schedule
 ``schedule``       peer→twin  ``start``: per-job start seconds, ``null``
                               for never-started
+``poll_batch``     twin→peer  ``ts`` — many timestamps, one roundtrip
+``running_sets``   peer→twin  ``sets`` (``external.encode_running_sets``)
 ``bye``            twin→peer  clean shutdown request
 ``error``          peer→twin  ``message`` — surfaced as ``ProtocolError``
 =================  =========  ==============================================
+
+Peers may advertise capabilities in their hello (``caps`` list):
+``bin1`` opts into the length-prefixed RBW1 *binary* frame dialect (see
+the layout comment at ``BIN_MAGIC``) and ``batch1`` into batched polls.
+Both are negotiated — a legacy peer that sends no caps gets plain NDJSON
+frames and per-timestamp polls, bit-identical semantics either way.
 
 The handshake is digest-checked: the twin sends canonical whole-second
 job columns (the SWF contract — ``datasets/swf.py``) and the sha256 the
@@ -61,6 +69,7 @@ import os
 import shlex
 import shutil
 import socket
+import struct
 import subprocess
 import tempfile
 from dataclasses import dataclass, field
@@ -68,7 +77,7 @@ from typing import IO
 
 import numpy as np
 
-from repro.core.external import (WIRE_VERSION, ProtocolError, decode_running)
+from repro.core.external import WIRE_VERSION, ProtocolError, decode_running
 from repro.datasets.base import JobSet
 from repro.systems.config import SystemConfig
 
@@ -78,6 +87,24 @@ from repro.systems.config import SystemConfig
 # and write_frame enforces the same cap outbound, so an oversized twin
 # payload fails loudly here instead of as a peer-side parse error.
 MAX_FRAME_BYTES = 256 << 20
+
+# Binary frame dialect (negotiated — see read_any_frame/write_bin_frame):
+#   magic[4] ("RBW1") | u32 LE header bytes | u32 LE payload bytes |
+#   UTF-8 JSON header | concatenated raw little-endian array bytes.
+# The header is the envelope with every ndarray leaf replaced by a
+# placeholder {"__bin__": index, "dtype": "<f8", "shape": [...]}; the
+# payload carries the arrays' raw bytes in placeholder-index order. A
+# binary frame can never be mistaken for NDJSON (frames there start with
+# "{") and vice versa, so one reader speaks both dialects.
+BIN_MAGIC = b"RBW1"
+_BIN_LENS = struct.Struct("<II")
+# capability tokens a peer may advertise in its hello frame
+CAP_BINARY = "bin1"    # understands RBW1 binary frames
+CAP_BATCH = "batch1"   # understands poll_batch / running_sets envelopes
+
+# dtypes allowed on the binary wire: fixed-width little-endian numerics
+# plus bool. Everything the job tables / schedules / running sets use.
+_BIN_DTYPES = frozenset(["<f4", "<f8", "<i4", "<i8", "<u4", "<u8", "|b1"])
 
 
 # ---------------------------------------------------------------------------
@@ -147,19 +174,33 @@ def write_frame(wfile: IO[bytes], msg: dict,
 
     Enforces ``MAX_FRAME_BYTES`` outbound too: a compliant peer would
     reject an over-long line anyway, so failing here turns a confusing
-    remote parse error into a local, diagnosable one."""
-    line = json.dumps(msg, separators=(",", ":")).encode("utf-8") + b"\n"
-    if len(line) > MAX_FRAME_BYTES:
+    remote parse error into a local, diagnosable one. The size check runs
+    on the JSON *text* before it is encoded and the newline is written
+    separately, so an oversize envelope (a ~1e6-job reset gone wrong)
+    fails fast after one materialization instead of three: UTF-8 output
+    is never shorter than its str, so ``len(text) > cap`` alone proves
+    the frame is over-long."""
+    text = json.dumps(msg, separators=(",", ":"))
+    if len(text) + 1 > MAX_FRAME_BYTES:
         if counters is not None:
             counters.frames_rejected += 1
         raise ProtocolError(
-            f"outbound {msg.get('kind')!r} frame is {len(line)} bytes, "
+            f"outbound {msg.get('kind')!r} frame is >= {len(text) + 1} "
+            f"bytes, over the {MAX_FRAME_BYTES}-byte protocol cap")
+    line = text.encode("utf-8")
+    n = len(line) + 1
+    if n > MAX_FRAME_BYTES:  # pragma: no cover - non-ASCII heavy payload
+        if counters is not None:
+            counters.frames_rejected += 1
+        raise ProtocolError(
+            f"outbound {msg.get('kind')!r} frame is {n} bytes, "
             f"over the {MAX_FRAME_BYTES}-byte protocol cap")
     wfile.write(line)
+    wfile.write(b"\n")
     wfile.flush()
     if counters is not None:
         counters.frames_out += 1
-        counters.bytes_out += len(line)
+        counters.bytes_out += n
 
 
 def read_frame(rfile: IO[bytes],
@@ -200,14 +241,260 @@ def read_frame(rfile: IO[bytes],
     return msg
 
 
+# ---------------------------------------------------------------------------
+# Binary framing (the RBW1 fast path).
+# ---------------------------------------------------------------------------
+def _bin_hoist(obj, arrays: list):
+    """Replace every ndarray leaf with a placeholder, collecting raw bytes.
+
+    Returns the placeholder-bearing copy of ``obj``; ``arrays`` receives
+    the little-endian raw bytes in placeholder-index order."""
+    if isinstance(obj, np.ndarray):
+        a = obj
+        if a.dtype.byteorder == ">":  # pragma: no cover - big-endian host
+            a = a.astype(a.dtype.newbyteorder("<"))
+        dt = np.dtype(a.dtype.str)  # normalize '=' to explicit order
+        if dt.str not in _BIN_DTYPES:
+            raise ProtocolError(f"dtype {dt.str!r} is not a binary-wire "
+                                f"dtype (allowed: {sorted(_BIN_DTYPES)})")
+        arrays.append(np.ascontiguousarray(a).tobytes())
+        return {"__bin__": len(arrays) - 1, "dtype": dt.str,
+                "shape": list(a.shape)}
+    if isinstance(obj, dict):
+        if "__bin__" in obj:
+            raise ProtocolError("'__bin__' is a reserved header key")
+        return {k: _bin_hoist(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_bin_hoist(v, arrays) for v in obj]
+    return obj
+
+
+def _bin_restore(obj, payload: bytes, offsets: list, as_arrays: bool):
+    """Inverse of ``_bin_hoist``: placeholders -> arrays (or lists)."""
+    if isinstance(obj, dict):
+        if "__bin__" in obj:
+            try:
+                idx = int(obj["__bin__"])
+                dtype = np.dtype(obj["dtype"])
+                shape = tuple(int(s) for s in obj["shape"])
+                off, nbytes = offsets[idx]
+            except (KeyError, TypeError, ValueError, IndexError) as e:
+                raise ProtocolError(f"malformed binary placeholder: "
+                                    f"{e}") from e
+            a = np.frombuffer(payload, dtype, count=-1,
+                              offset=off)[:nbytes // dtype.itemsize]
+            a = a.reshape(shape)
+            return a.copy() if as_arrays else a.tolist()
+        return {k: _bin_restore(v, payload, offsets, as_arrays)
+                for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_bin_restore(v, payload, offsets, as_arrays) for v in obj]
+    return obj
+
+
+def encode_bin_frame(msg: dict) -> tuple[bytes, bytes, list[bytes]]:
+    """Encode one envelope as (prefix, header, payload chunks).
+
+    The prefix is magic + both u32 lengths; the payload is returned as
+    the per-array chunks so callers can write without concatenating a
+    256 MB blob. Raises ``ProtocolError`` when the total frame would
+    exceed ``MAX_FRAME_BYTES`` — checked from the chunk sizes *before*
+    any large buffer is joined."""
+    arrays: list[bytes] = []
+    header_obj = _bin_hoist(msg, arrays)
+    header = json.dumps(header_obj, separators=(",", ":")).encode("utf-8")
+    payload_len = sum(len(c) for c in arrays)
+    total = len(BIN_MAGIC) + _BIN_LENS.size + len(header) + payload_len
+    if total > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"outbound {msg.get('kind')!r} binary frame is {total} bytes, "
+            f"over the {MAX_FRAME_BYTES}-byte protocol cap")
+    prefix = BIN_MAGIC + _BIN_LENS.pack(len(header), payload_len)
+    return prefix, header, arrays
+
+
+def decode_bin_frame(header: bytes, payload: bytes,
+                     as_arrays: bool = True) -> dict:
+    """Decode an RBW1 (header, payload) pair back into an envelope.
+
+    ``as_arrays=False`` materializes every array placeholder as nested
+    Python lists — byte-for-byte the values the NDJSON dialect would have
+    produced (float64/int64 JSON round-trips are exact), which is what
+    the cross-dialect equivalence tests assert on."""
+    try:
+        obj = json.loads(header)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ProtocolError(f"binary frame header is not JSON: {e}") from e
+    if not isinstance(obj, dict):
+        raise ProtocolError(f"binary frame header must be a JSON object, "
+                            f"got {type(obj).__name__}")
+    # lay the arrays out: placeholder index -> (offset, nbytes)
+    sizes: dict[int, int] = {}
+
+    def walk(o):
+        if isinstance(o, dict):
+            if "__bin__" in o:
+                try:
+                    idx = int(o["__bin__"])
+                    dtype = np.dtype(o["dtype"])
+                    if dtype.str not in _BIN_DTYPES:
+                        raise ProtocolError(
+                            f"dtype {dtype.str!r} is not a binary-wire "
+                            f"dtype")
+                    shape = tuple(int(s) for s in o["shape"])
+                    if any(s < 0 for s in shape):
+                        raise ProtocolError("negative array dimension")
+                except ProtocolError:
+                    raise
+                except (KeyError, TypeError, ValueError) as e:
+                    raise ProtocolError(f"malformed binary placeholder: "
+                                        f"{e}") from e
+                n = dtype.itemsize * int(np.prod(shape, dtype=np.int64)) \
+                    if shape else dtype.itemsize
+                if idx in sizes:
+                    raise ProtocolError(f"duplicate array index {idx}")
+                sizes[idx] = n
+                return
+            for v in o.values():
+                walk(v)
+        elif isinstance(o, list):
+            for v in o:
+                walk(v)
+
+    walk(obj)
+    if sorted(sizes) != list(range(len(sizes))):
+        raise ProtocolError(f"array indices must be 0..{len(sizes) - 1}, "
+                            f"got {sorted(sizes)}")
+    offsets, off = [], 0
+    for i in range(len(sizes)):
+        offsets.append((off, sizes[i]))
+        off += sizes[i]
+    if off != len(payload):
+        raise ProtocolError(f"binary payload carries {len(payload)} bytes, "
+                            f"header implies {off}")
+    return _bin_restore(obj, payload, offsets, as_arrays)
+
+
+def write_bin_frame(wfile: IO[bytes], msg: dict,
+                    counters: WireCounters | None = None) -> None:
+    """Write one envelope as an RBW1 binary frame and flush."""
+    try:
+        prefix, header, chunks = encode_bin_frame(msg)
+    except ProtocolError:
+        if counters is not None:
+            counters.frames_rejected += 1
+        raise
+    wfile.write(prefix)
+    wfile.write(header)
+    for c in chunks:
+        wfile.write(c)
+    wfile.flush()
+    if counters is not None:
+        counters.frames_out += 1
+        counters.bytes_out += len(prefix) + len(header) \
+            + sum(len(c) for c in chunks)
+
+
+def _read_exact(rfile: IO[bytes], n: int) -> bytes:
+    """Read exactly ``n`` bytes; EOF mid-frame is broken speech."""
+    buf = rfile.read(n)
+    if buf is None or len(buf) < n:  # pragma: no branch
+        raise ProtocolError(f"truncated binary frame: EOF after "
+                            f"{0 if buf is None else len(buf)}/{n} bytes")
+    return buf
+
+
+def read_any_frame(rfile: IO[bytes],
+                   counters: WireCounters | None = None,
+                   as_arrays: bool = True) -> dict:
+    """Read one frame of either dialect (NDJSON line or RBW1 binary).
+
+    The first byte selects the dialect deterministically: NDJSON frames
+    always start with ``{`` (json.dumps of an object), binary frames
+    with the magic. Failure classification matches ``read_frame``: EOF
+    before any byte is ``ConnectionError``; a frame that arrives broken
+    (bad magic continuation, truncated binary body, over-long, non-JSON)
+    is ``ProtocolError``."""
+    first = rfile.read(1)
+    if not first:
+        raise ConnectionError("peer closed the connection (EOF)")
+    if first == BIN_MAGIC[:1]:
+        try:
+            rest = _read_exact(rfile, len(BIN_MAGIC) - 1)
+            if first + rest != BIN_MAGIC:
+                raise ProtocolError(f"bad binary frame magic "
+                                    f"{(first + rest)!r}")
+            header_len, payload_len = _BIN_LENS.unpack(
+                _read_exact(rfile, _BIN_LENS.size))
+            total = len(BIN_MAGIC) + _BIN_LENS.size + header_len \
+                + payload_len
+            if total > MAX_FRAME_BYTES:
+                raise ProtocolError(f"frame exceeds {MAX_FRAME_BYTES} "
+                                    f"bytes")
+            header = _read_exact(rfile, header_len)
+            payload = _read_exact(rfile, payload_len)
+            msg = decode_bin_frame(header, payload, as_arrays)
+        except ProtocolError:
+            if counters is not None:
+                counters.frames_rejected += 1
+            raise
+        if counters is not None:
+            counters.frames_in += 1
+            counters.bytes_in += total
+        return msg
+    # NDJSON: the byte we took is the start of the line
+    line = first + rfile.readline(MAX_FRAME_BYTES + 1)
+    if len(line) > MAX_FRAME_BYTES:
+        if counters is not None:
+            counters.frames_rejected += 1
+        raise ProtocolError(f"frame exceeds {MAX_FRAME_BYTES} bytes")
+    try:
+        if not line.endswith(b"\n"):
+            raise ProtocolError("truncated frame: EOF before newline")
+        try:
+            msg = json.loads(line)
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise ProtocolError(f"frame is not JSON: {e}") from e
+        if not isinstance(msg, dict):
+            raise ProtocolError(f"frame must be a JSON object, got "
+                                f"{type(msg).__name__}")
+    except ProtocolError:
+        if counters is not None:
+            counters.frames_rejected += 1
+        raise
+    if counters is not None:
+        counters.frames_in += 1
+        counters.bytes_in += len(line)
+    return msg
+
+
 def decode_schedule(msg: dict, n_jobs: int) -> np.ndarray:
-    """Validate a ``schedule`` envelope; return start times (inf = never)."""
+    """Validate a ``schedule`` envelope; return start times (inf = never).
+
+    Two spellings, one meaning: the NDJSON dialect lists numbers with
+    ``null`` for never-started; the binary dialect ships a float array
+    where ``+inf`` is never-started (null has no fixed-width encoding).
+    NaN / ``-inf`` are rejected in both."""
     if msg.get("version") != WIRE_VERSION:
         raise ProtocolError(f"wire version mismatch: peer speaks "
                             f"{msg.get('version')!r}")
     if msg.get("kind") != "schedule":
         raise ProtocolError(f"unexpected message kind {msg.get('kind')!r}")
     start = msg.get("start")
+    if isinstance(start, np.ndarray):
+        if start.ndim != 1 or start.shape[0] != n_jobs:
+            raise ProtocolError(f"schedule must carry {n_jobs} start times, "
+                                f"got shape {start.shape}")
+        if not np.issubdtype(start.dtype, np.floating):
+            raise ProtocolError(f"binary schedule must be float, got "
+                                f"dtype={start.dtype}")
+        out = start.astype(np.float64)
+        bad = np.isnan(out) | (out == -np.inf)
+        if bad.any():
+            j = int(np.argmax(bad))
+            raise ProtocolError(f"schedule start[{j}] must be finite or "
+                                f"+inf, got {out[j]!r}")
+        return out
     if not isinstance(start, list) or len(start) != n_jobs:
         raise ProtocolError(f"schedule must list {n_jobs} start times, got "
                             f"{type(start).__name__}"
@@ -273,6 +560,7 @@ class SocketPeer:
     address: str | None = None
     policy: str = "fcfs"
     backfill: str = "firstfit"
+    wire: str = "auto"                 # "auto" | "ndjson" | "binary"
     timeout_s: float = 30.0            # per-reply socket budget
     handshake_timeout_s: float = 20.0  # connect + hello + reset_ack budget
     peer_hello: dict | None = None
@@ -282,6 +570,7 @@ class SocketPeer:
     _rfile: IO[bytes] | None = None
     _wfile: IO[bytes] | None = None
     _n_jobs: int = 0
+    _binary: bool = False              # negotiated per connection
 
     # -- connection lifecycle ----------------------------------------------
     def _dial(self) -> socket.socket:
@@ -308,6 +597,39 @@ class SocketPeer:
                 f"wire version mismatch: peer speaks "
                 f"{hello.get('version')!r}, bridge speaks {WIRE_VERSION}")
         self.peer_hello = hello
+        self._binary = self._negotiate_wire(hello)
+
+    def _negotiate_wire(self, hello: dict) -> bool:
+        """Pick the frame dialect from our policy + the peer's caps.
+
+        ``auto`` upgrades to binary whenever the peer advertises
+        ``CAP_BINARY`` and falls back to NDJSON otherwise (legacy peers
+        send no ``caps`` at all); ``binary`` demands the capability and
+        treats its absence as broken speech; ``ndjson`` pins the legacy
+        dialect regardless of what the peer could do."""
+        caps = hello.get("caps") or []
+        if not isinstance(caps, list):
+            raise ProtocolError(f"hello caps must be a list, got "
+                                f"{type(caps).__name__}")
+        if self.wire == "ndjson":
+            return False
+        if self.wire == "binary":
+            if CAP_BINARY not in caps:
+                raise ProtocolError(
+                    f"wire=binary requested but peer "
+                    f"{hello.get('name')!r} does not advertise "
+                    f"{CAP_BINARY!r} (caps={caps!r})")
+            return True
+        if self.wire != "auto":
+            raise ValueError(f"wire must be auto|ndjson|binary, "
+                             f"got {self.wire!r}")
+        return CAP_BINARY in caps
+
+    @property
+    def batch_capable(self) -> bool:
+        """Whether the connected peer advertised batched polls."""
+        caps = (self.peer_hello or {}).get("caps") or []
+        return CAP_BATCH in caps
 
     def _teardown_connection(self) -> None:
         for f in (self._wfile, self._rfile, self._sock):
@@ -329,25 +651,27 @@ class SocketPeer:
             self._establish()
             self._n_jobs = len(jobs)
             sys_d, job_d = system_digest(system), job_digest(jobs)
+            # the binary dialect ships the columns as raw little-endian
+            # arrays (same values — the digests don't change); NDJSON
+            # spells them as JSON lists via .tolist(), which yields
+            # native floats/ints losslessly without numpy-scalar boxing
+            cols = {
+                "submit": np.asarray(jobs.submit, np.float64),
+                "limit": np.asarray(jobs.limit, np.float64),
+                "wall": np.asarray(jobs.wall, np.float64),
+                "nodes": np.asarray(jobs.nodes, np.int64),
+                "priority": np.asarray(jobs.priority, np.float64),
+                "account": np.asarray(jobs.account, np.int64),
+            }
+            if not self._binary:
+                cols = {k: v.tolist() for k, v in cols.items()}
             self._send({
                 "version": WIRE_VERSION, "kind": "reset", "t0": float(t0),
                 "policy": self.policy, "backfill": self.backfill,
                 "system": {"n_nodes": int(system.n_nodes),
                            "dt": float(system.dt), "name": system.name},
                 "system_digest": sys_d, "job_digest": job_d,
-                "jobs": {
-                    # .tolist() yields native floats/ints losslessly and
-                    # avoids per-element numpy-scalar boxing on big sets
-                    "submit": np.asarray(jobs.submit, np.float64).tolist(),
-                    "limit": np.asarray(jobs.limit, np.float64).tolist(),
-                    "wall": np.asarray(jobs.wall, np.float64).tolist(),
-                    "nodes": np.asarray(jobs.nodes,
-                                        np.int64).tolist(),
-                    "priority": np.asarray(jobs.priority,
-                                           np.float64).tolist(),
-                    "account": np.asarray(jobs.account,
-                                          np.int64).tolist(),
-                },
+                "jobs": cols,
             })
             ack = self._recv()
             if ack.get("kind") == "error":
@@ -387,6 +711,19 @@ class SocketPeer:
             raise ProtocolError(f"peer error: {reply.get('message')!r}")
         return reply
 
+    def poll_wire_batch(self, ts) -> dict:
+        """One exchange answering many timestamps (``CAP_BATCH`` peers).
+
+        ``SchedulerBridge.poll_many`` only calls this when
+        ``batch_capable`` is true, and validates the reply with
+        ``decode_running_sets``."""
+        self._send({"version": WIRE_VERSION, "kind": "poll_batch",
+                    "ts": [float(t) for t in ts]})
+        reply = self._recv()
+        if reply.get("kind") == "error":
+            raise ProtocolError(f"peer error: {reply.get('message')!r}")
+        return reply
+
     def running_at(self, t: float) -> np.ndarray:
         return decode_running(self.poll_wire(t), self._n_jobs or (1 << 31))
 
@@ -403,16 +740,20 @@ class SocketPeer:
     def _send(self, msg: dict) -> None:
         if self._wfile is None:
             raise ConnectionError("not connected (reset first)")
-        write_frame(self._wfile, msg, self.counters)
+        if self._binary:
+            write_bin_frame(self._wfile, msg, self.counters)
+        else:
+            write_frame(self._wfile, msg, self.counters)
 
     def _recv(self) -> dict:
         if self._rfile is None:
             raise ConnectionError("not connected (reset first)")
-        return read_frame(self._rfile, self.counters)
+        return read_any_frame(self._rfile, self.counters)
 
     def stats(self) -> dict:
         """Monotonic transport counters for the flight recorder."""
         return {"kind": type(self).__name__, "dials": self.dials,
+                "wire": "binary" if self._binary else "ndjson",
                 **self.counters.as_dict()}
 
     def close(self) -> None:

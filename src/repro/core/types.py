@@ -140,9 +140,12 @@ class AccountStats:
 
     @staticmethod
     def zeros(num_accounts: int) -> "AccountStats":
-        z = jnp.zeros((num_accounts,), jnp.float32)
+        # one fresh buffer per field, NOT one shared array: the ledgers
+        # ride the scan carry, which the engine runners donate — XLA
+        # rejects donating the same buffer at two argument positions
         n = len(dataclasses.fields(AccountStats))
-        return AccountStats(*(z for _ in range(n)))
+        return AccountStats(*(jnp.zeros((num_accounts,), jnp.float32)
+                              for _ in range(n)))
 
 
 @_register

@@ -77,11 +77,24 @@ class JobSet:
                 cursor += need
         self.first_node = first
 
-    def to_table(self, pad_to: int | None = None) -> T.JobTable:
+    def to_table(self, pad_to: int | None = None,
+                 compact_time: bool = False) -> T.JobTable:
         """Pad and pack into the fixed-shape ``JobTable`` the compiled
         engine consumes (times -> f32 s, power -> f32 W, counts -> i32).
         Padded rows are marked invalid; ``ml_basis`` (if attached) pads
-        with zeros, so padded jobs score 0 under every alpha."""
+        with zeros, so padded jobs score 0 under every alpha.
+
+        ``compact_time=True`` narrows the broadcast time columns
+        (submit / limit / wall / rec_start) from float32 to int32 when
+        every value is a whole second below 2^24 (the SWF contract and
+        the f32-exact integer range) — integer compares on the scan's
+        hot columns, with non-finite entries (and the inf pad fill)
+        mapped to a 2^30-second sentinel that every window test
+        classifies exactly like +inf. Falls back to float32 silently
+        when a column is fractional or too large, so the flag is always
+        safe; the engine's weak-typing promotes int32 against f32
+        exactly in this range, which the bit-compat test asserts
+        end-to-end."""
         J = len(self)
         Jp = pad_to or J
         assert Jp >= J, f"pad_to={Jp} < {J} jobs"
@@ -91,6 +104,25 @@ class JobSet:
             out = np.full((Jp,), fill, dtype)
             out[:J] = x
             return jnp.asarray(out)
+
+        # far past any simulation window, exactly representable in both
+        # int32 and float32; plays the +inf role for compact columns
+        TIME_SENTINEL = np.int64(1) << 30
+
+        def pad_time(x, fill):
+            if compact_time:
+                a = np.asarray(x, np.float64)
+                finite = np.isfinite(a)
+                vals = a[finite]
+                if vals.size == 0 or (np.all(vals == np.round(vals)) and
+                                      np.all(np.abs(vals) < (1 << 24))):
+                    out = np.full((Jp,), TIME_SENTINEL, np.int32)
+                    ai = np.where(finite, a, float(TIME_SENTINEL))
+                    out[:J] = ai.astype(np.int32)
+                    if np.isfinite(fill):
+                        out[J:] = np.int32(fill)
+                    return jnp.asarray(out)
+            return pad1(x, fill, np.float32)
 
         def pad2(x, fill, dtype, width=P):
             out = np.full((Jp, width), fill, dtype)
@@ -106,13 +138,13 @@ class JobSet:
         valid = np.zeros((Jp,), bool)
         valid[:J] = True
         return T.JobTable(
-            submit=pad1(self.submit, np.inf, np.float32),
-            limit=pad1(self.limit, 1.0, np.float32),
-            wall=pad1(self.wall, 1.0, np.float32),
+            submit=pad_time(self.submit, np.inf),
+            limit=pad_time(self.limit, 1.0),
+            wall=pad_time(self.wall, 1.0),
             nodes=pad1(self.nodes, 1, np.int32),
             priority=pad1(self.priority, 0.0, np.float32),
             account=pad1(self.account, 0, np.int32),
-            rec_start=pad1(self.rec_start, np.inf, np.float32),
+            rec_start=pad_time(self.rec_start, np.inf),
             first_node=pad1(first, -1, np.int32),
             score=pad1(score, 0.0, np.float32),
             power_prof=pad2(self.power_prof, 0.0, np.float32),

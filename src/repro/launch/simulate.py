@@ -34,6 +34,7 @@ from repro.core import external as ext
 from repro.core import stats as stats_mod
 from repro.core import types as T
 from repro.datasets import loaders
+from repro.launch import env as launch_env
 from repro.ml.pipeline import MLSchedulerModel, attach_scores
 from repro.systems.config import FacilityTopology, get_system
 
@@ -130,6 +131,13 @@ def main(argv=None):
                     help="coupling mode for --external-cmd/--external-"
                          "socket (paper §4.2: per-step polling vs "
                          "schedule-then-replay)")
+    ap.add_argument("--external-wire", default="auto",
+                    choices=("auto", "ndjson", "binary"),
+                    help="wire dialect for the external peer: auto "
+                         "upgrades to binary frames when the peer "
+                         "advertises the capability, ndjson pins the "
+                         "legacy dialect, binary demands it (fails the "
+                         "handshake on a legacy peer)")
     ap.add_argument("--external-timeout", type=float, default=30.0,
                     help="per-poll wall budget (s) for the external "
                          "bridge; also the socket recv timeout")
@@ -203,10 +211,13 @@ def main(argv=None):
                       "external_cmd": args.external_cmd,
                       "external_socket": args.external_socket,
                       "external_mode": args.external_mode,
+                      "external_wire": args.external_wire,
                       "halls": args.halls,
                       "cells_offline": args.cells_offline,
                       "t0_s": t0, "duration_s": t1 - t0},
-            seed=args.seed, jobs=js)
+            seed=args.seed, jobs=js,
+            extra={"env_preset": launch_env.report(
+                "sweep" if args.sweep else "throughput")})
         recorder.event("run_start")
     timer = obs.SpanTimer(listener=recorder.span_listener
                           if recorder else None)
@@ -296,11 +307,13 @@ def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
         if args.external_cmd:
             peer = tr.SubprocessPeer(cmd=args.external_cmd, policy=policy,
                                      backfill=backfill,
-                                     timeout_s=args.external_timeout)
+                                     timeout_s=args.external_timeout,
+                                     wire=args.external_wire)
         else:
             peer = tr.SocketPeer(address=args.external_socket,
                                  policy=policy, backfill=backfill,
-                                 timeout_s=args.external_timeout)
+                                 timeout_s=args.external_timeout,
+                                 wire=args.external_wire)
         ext_scen = T.Scenario.make("replay", cells_offline=cells_offline)
         on_event = recorder.span_listener if recorder else None
         try:

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import engine as eng
 from repro.core import types as T
+from repro.launch import env as launch_env
 from repro.ml import scoring
 from repro.obs import timing as obs_timing
 from repro.systems.config import SystemConfig
@@ -533,7 +534,8 @@ def main(argv=None) -> TrainResult:
                                  "backfill": args.backfill,
                                  "heat_wave_c": args.heat_wave_c,
                                  "cells_offline": args.cells_offline},
-                       seed=args.seed, jobs=js)
+                       seed=args.seed, jobs=js,
+                       extra={"env_preset": launch_env.report("sweep")})
         recorder.event("run_start", command="train")
     timer = obs.SpanTimer(listener=recorder.span_listener
                           if recorder else None)

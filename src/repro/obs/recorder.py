@@ -68,7 +68,8 @@ def build_manifest(system, command: str, argv: list, scenario: dict,
                    seed: Optional[int] = None, jobs=None,
                    run_id: Optional[str] = None,
                    git_sha: Optional[str] = "auto",
-                   created_unix: Optional[float] = None) -> dict:
+                   created_unix: Optional[float] = None,
+                   extra: Optional[dict] = None) -> dict:
     """Assemble a schema-valid run manifest (no I/O besides git).
 
     Args:
@@ -81,6 +82,9 @@ def build_manifest(system, command: str, argv: list, scenario: dict,
       run_id: externally minted id (default: fresh 16-hex token).
       git_sha: "auto" resolves HEAD; pass None/str to skip/pin.
       created_unix: epoch seconds (default: now; injectable for tests).
+      extra: optional JSON-able dict merged in at the top level (e.g.
+        ``{"env_preset": launch.env.report()}``); the schema only pins
+        required fields, so extra keys validate and round-trip.
     """
     from repro.core import transport as tr
 
@@ -107,6 +111,8 @@ def build_manifest(system, command: str, argv: list, scenario: dict,
         "versions": runtime_versions(),
         "git_sha": _git_sha() if git_sha == "auto" else git_sha,
     }
+    if extra:
+        manifest.update(schema.jsonable(extra))
     return schema.validate_manifest(manifest)
 
 
@@ -126,12 +132,13 @@ class RunRecorder:
 
     # -- lifecycle ----------------------------------------------------------
     def begin(self, system, command: str, argv: list, scenario: dict,
-              seed: Optional[int] = None, jobs=None) -> dict:
+              seed: Optional[int] = None, jobs=None,
+              extra: Optional[dict] = None) -> dict:
         """Build the base manifest up front (identity is known at start;
         spans/counters arrive at ``finalize``)."""
         self.manifest = build_manifest(
             system, command=command, argv=argv, scenario=scenario,
-            seed=seed, jobs=jobs, run_id=self.run_id)
+            seed=seed, jobs=jobs, run_id=self.run_id, extra=extra)
         return self.manifest
 
     def event(self, event: str, **fields) -> dict:

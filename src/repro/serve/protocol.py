@@ -22,9 +22,12 @@ kind            direction  payload
 ``fork``        client→twin  ``branch``, optional ``at_step`` +
                              ``delta`` (sparse Scenario knobs)
 ``snapshot``    client→twin  ``branch``, optional ``at_step`` — download
-                             the checkpointed carry (serve.snapshot)
+                             the checkpointed carry (serve.snapshot);
+                             optional ``bin: true`` asks for the raw-array
+                             dialect over an RBW1 binary frame
 ``fetch``       client→twin  ``branch``, optional ``start``/``stop`` —
-                             scalar telemetry rows
+                             scalar telemetry rows; ``bin: true`` returns
+                             columnar arrays over a binary frame
 ``state``       client→twin  session + branch-tree summary
 ``shutdown``    client→twin  stop the whole server (CI smoke hook)
 ``bye``         client→twin  close this connection only
@@ -64,6 +67,9 @@ def hello_frame(session: TwinSession, jobs=None) -> dict:
         "version": WIRE_VERSION, "kind": "hello",
         "serve_version": SERVE_VERSION,
         "snapshot_version": SNAPSHOT_VERSION,
+        # clients may request raw-array replies ("bin": true) on
+        # snapshot/fetch; the greeting advertises the capability
+        "caps": [tr.CAP_BINARY],
         "system": {"name": sysc.name, "n_nodes": int(sysc.n_nodes),
                    "dt": float(sysc.dt),
                    "n_halls": int(sysc.cooling.n_halls),
@@ -143,6 +149,10 @@ def validate_request(msg: dict) -> dict:
         _require_int(msg, "branch", minimum=0)
         _require_int(msg, "start", minimum=0)
         _require_int(msg, "stop", minimum=0)
+    if kind in ("snapshot", "fetch") and "bin" in msg and \
+            not isinstance(msg["bin"], bool):
+        raise ProtocolError(f"'bin' must be a boolean, got "
+                            f"{type(msg['bin']).__name__}")
     return msg
 
 
@@ -162,11 +172,13 @@ def handle_inline(session: TwinSession, msg: dict):
             "delta": br.delta})
     if kind == "snapshot":
         return ok_frame(kind, msg_id,
-                        session.snapshot(msg["branch"], msg.get("at_step")))
+                        session.snapshot(msg["branch"], msg.get("at_step"),
+                                         binary=bool(msg.get("bin"))))
     if kind == "fetch":
         return ok_frame(kind, msg_id,
                         session.fetch(msg["branch"], msg.get("start"),
-                                      msg.get("stop")))
+                                      msg.get("stop"),
+                                      binary=bool(msg.get("bin"))))
     if kind == "state":
         return ok_frame(kind, msg_id, session.describe())
     raise ProtocolError(f"request kind {kind!r} has no inline handler")

@@ -49,6 +49,7 @@ from typing import IO, List, Optional
 
 from repro.core import transport as tr
 from repro.core.external import ProtocolError
+from repro.launch import env as launch_env
 from repro.serve import protocol as proto
 from repro.serve.session import SessionError, TwinSession
 
@@ -101,7 +102,8 @@ class TwinServer:
                 session.system, command="serve", argv=[str(address)],
                 scenario={"interval_steps": session.interval_steps,
                           "horizon_steps": session.horizon_steps},
-                jobs=jobs)
+                jobs=jobs,
+                extra={"env_preset": launch_env.report("throughput")})
 
         family, sockaddr = tr.parse_address(str(address))
         self._listener = socket.socket(family, socket.SOCK_STREAM)
@@ -196,7 +198,13 @@ class TwinServer:
                     self._event("client_session_error",
                                 client=client.client_id, message=str(e))
                     reply = proto.error_frame(msg_id, e)
-                tr.write_frame(wfile, reply, client.counters)
+                if msg.get("bin") and reply.get("kind") != "error":
+                    # raw-array reply dialect, on request only: the
+                    # client asked with "bin": true, so it can read
+                    # RBW1 frames (requests themselves stay NDJSON)
+                    tr.write_bin_frame(wfile, reply, client.counters)
+                else:
+                    tr.write_frame(wfile, reply, client.counters)
         except (ConnectionError, TimeoutError, OSError, BrokenPipeError):
             client.reason = client.reason or "eof"
         finally:

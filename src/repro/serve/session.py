@@ -108,9 +108,12 @@ class TwinSession:
                          "coalesced_batches": 0, "batched_branches": 0}
         root_carry = engine.init_state(system, table, t0, t1,
                                        num_accounts=num_accounts)
-        # the root carry doubles as the decode template for snapshots of
-        # any branch (same (system, table) lineage => same pytree shapes)
-        self.carry_template = root_carry
+        # a host copy of the root carry is the decode template for
+        # snapshots of any branch (same (system, table) lineage => same
+        # pytree shapes). Host copy, not the live carry: branch 0's
+        # first advance *donates* its carry buffers to the scan
+        # (engine.DONATE_CARRIES) and the template must outlive that.
+        self.carry_template = _to_host(root_carry)
         self._next_id = 1
         self.branches: Dict[int, Branch] = {
             0: Branch(branch_id=0, parent=None, scenario=scen, delta={},
@@ -249,8 +252,14 @@ class TwinSession:
             return child
 
     # -- snapshot / fetch / state -------------------------------------------
-    def snapshot(self, branch_id, at_step: Optional[int] = None) -> dict:
-        """Encode a branch checkpoint for the wire (see serve.snapshot)."""
+    def snapshot(self, branch_id, at_step: Optional[int] = None,
+                 binary: bool = False) -> dict:
+        """Encode a branch checkpoint for the wire (see serve.snapshot).
+
+        ``binary=True`` produces the raw-array snapshot dialect (leaves
+        are host ndarrays, shipped as RBW1 binary frames by the server);
+        the reply's ``digest`` is then the dialect-independent
+        ``carry_digest`` instead of the canonical-JSON digest."""
         with self._lock:
             br = self._branch(branch_id)
             step = br.step if at_step is None else int(at_step)
@@ -259,19 +268,28 @@ class TwinSession:
                 raise SessionError(
                     f"branch {br.branch_id} has no checkpoint at step "
                     f"{step} (available: {sorted(br.checkpoints)})")
-            payload = snap.encode_carry(br.checkpoints[step])
+            payload = snap.encode_carry(br.checkpoints[step],
+                                        binary=binary)
             self.counters["snapshots"] += 1
-            return {"branch": br.branch_id, "step": step,
-                    "snapshot": payload,
-                    "digest": snap.snapshot_digest(payload)}
+            out = {"branch": br.branch_id, "step": step,
+                   "snapshot": payload,
+                   "raw_digest": snap.carry_digest(payload)}
+            if not binary:
+                out["digest"] = snap.snapshot_digest(payload)
+            return out
 
     def fetch(self, branch_id, start: Optional[int] = None,
-              stop: Optional[int] = None) -> dict:
+              stop: Optional[int] = None, binary: bool = False) -> dict:
         """Scalar telemetry rows of a branch (since its fork point).
 
         ``start``/``stop`` are absolute step bounds (default: everything
         the branch has simulated itself — a child's history starts at its
         ``born_step``; the prefix lives on its ancestors).
+
+        ``binary=True`` returns the same telemetry *columnar* — one
+        float64 array per field under ``"cols"`` instead of per-row
+        dicts — which the binary frame dialect ships as raw bytes
+        (per-row JSON objects at Frontier scale are mostly key text).
         """
         with self._lock:
             br = self._branch(branch_id)
@@ -279,20 +297,35 @@ class TwinSession:
             hi = br.step if stop is None else int(stop)
             lo = max(lo, br.born_step)
             hi = min(hi, br.step)
-            rows = []
+            fields = ["step", "t", *obs_sink.SCALAR_FIELDS]
+            rows, cols = [], None
             if br.history and hi > lo:
                 cat = {k: np.concatenate(
                     [np.asarray(getattr(h, k), np.float64)
                      for h in br.history])
                     for k in ("t",) + obs_sink.SCALAR_FIELDS}
-                for i in range(lo - br.born_step, hi - br.born_step):
-                    row = {"step": br.born_step + i}
-                    row.update({k: float(v[i]) for k, v in cat.items()})
-                    rows.append(row)
+                a, b = lo - br.born_step, hi - br.born_step
+                if binary:
+                    cols = {"step": np.arange(lo, hi, dtype=np.int64)}
+                    cols.update({k: v[a:b].copy() for k, v in cat.items()})
+                else:
+                    for i in range(a, b):
+                        row = {"step": br.born_step + i}
+                        row.update({k: float(v[i])
+                                    for k, v in cat.items()})
+                        rows.append(row)
+            elif binary:
+                cols = {"step": np.zeros((0,), np.int64),
+                        **{k: np.zeros((0,), np.float64)
+                           for k in ("t",) + obs_sink.SCALAR_FIELDS}}
             self.counters["fetches"] += 1
-            return {"branch": br.branch_id, "start": lo, "stop": hi,
-                    "fields": ["step", "t", *obs_sink.SCALAR_FIELDS],
-                    "rows": rows}
+            out = {"branch": br.branch_id, "start": lo, "stop": hi,
+                   "fields": fields}
+            if binary:
+                out["cols"] = cols
+            else:
+                out["rows"] = rows
+            return out
 
     def describe(self) -> dict:
         """Session + branch-tree summary (the ``state`` reply body)."""

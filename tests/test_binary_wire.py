@@ -1,0 +1,337 @@
+"""Binary wire fast path: RBW1 codec units, dialect equivalence, and
+end-to-end conformance.
+
+The binary dialect is an *optimization*, never a semantic change: every
+test here pins some face of that claim — codec roundtrips preserve the
+exact bytes (NaN, ±inf, empty arrays included), both dialects decode to
+identical messages, plugin-mode telemetry is bit-equal whether the peer
+speaks NDJSON or binary frames, and the serve layer's binary snapshots
+carry the same digest-checked state as the base64 spelling.
+"""
+import importlib.util
+import io
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import external as ext
+from repro.core import transport as tr
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.systems.config import get_system
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+PEER = [sys.executable, str(ROOT / "tools" / "reference_peer.py")]
+SYS = get_system("frontier").scaled(64)
+
+pytestmark = pytest.mark.timeout(180)
+
+
+def make_jobs(seed=0, n=30):
+    spec = WorkloadSpec(n_jobs=n, duration_s=2 * 3600.0, load=1.2,
+                        trace_len=4, seed=seed)
+    return generate(SYS, spec)
+
+
+def make_peer(*fault, **kw):
+    cmd = PEER + (["--fault", fault[0]] if fault else [])
+    kw.setdefault("handshake_timeout_s", 30.0)
+    return tr.SubprocessPeer(cmd=cmd, **kw)
+
+
+def roundtrip(msg, as_arrays=True):
+    """Encode as an RBW1 frame, read it back through the byte layer."""
+    buf = io.BytesIO()
+    tr.write_bin_frame(buf, msg)
+    buf.seek(0)
+    return tr.read_any_frame(buf, as_arrays=as_arrays)
+
+
+# ---------------------------------------------------------------------------
+# Codec units.
+# ---------------------------------------------------------------------------
+def test_binary_roundtrip_preserves_special_floats_exactly():
+    arr = np.array([np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-308],
+                   np.float64)
+    out = roundtrip({"version": 1, "kind": "x", "a": arr})
+    got = out["a"]
+    assert isinstance(got, np.ndarray) and got.dtype == np.float64
+    # bit-exact, not just value-equal (NaN payloads, signed zero)
+    assert got.tobytes() == arr.tobytes()
+
+
+def test_binary_roundtrip_empty_and_zero_d_arrays():
+    msg = {"version": 1, "kind": "x",
+           "empty": np.zeros((0,), np.int64),
+           "mat": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    out = roundtrip(msg)
+    assert out["empty"].shape == (0,) and out["empty"].dtype == np.int64
+    assert out["mat"].shape == (2, 3)
+    assert np.array_equal(out["mat"], msg["mat"])
+
+
+def test_binary_as_lists_matches_ndjson_spelling():
+    """as_arrays=False must yield exactly what json.dumps/.tolist()
+    would have shipped (f64 repr roundtrips losslessly)."""
+    vals = np.array([0.1, 1.0 / 3.0, 2.0 ** 52 + 1], np.float64)
+    out = roundtrip({"version": 1, "kind": "x", "v": vals},
+                    as_arrays=False)
+    assert out["v"] == vals.tolist()
+
+
+def test_binary_rejects_reserved_key_and_bad_dtype():
+    with pytest.raises(ext.ProtocolError):
+        tr.encode_bin_frame({"version": 1, "__bin__": 0})
+    with pytest.raises(ext.ProtocolError):
+        tr.encode_bin_frame({"version": 1,
+                             "a": np.zeros(2, np.complex128)})
+
+
+def test_binary_oversize_frame_rejected_before_write():
+    buf = io.BytesIO()
+    big = np.zeros(tr.MAX_FRAME_BYTES // 8 + 16, np.float64)
+    counters = tr.WireCounters()
+    with pytest.raises(ext.ProtocolError):
+        tr.write_bin_frame(buf, {"version": 1, "a": big}, counters)
+    assert counters.frames_rejected == 1
+    assert buf.getvalue() == b"", "oversize frame leaked bytes"
+
+
+def test_truncated_binary_frame_is_protocol_error():
+    buf = io.BytesIO()
+    tr.write_bin_frame(buf, {"version": 1, "a": np.arange(8)})
+    whole = buf.getvalue()
+    with pytest.raises(ext.ProtocolError):
+        tr.read_any_frame(io.BytesIO(whole[:-3]))
+    # EOF before any byte stays a ConnectionError (clean close)
+    with pytest.raises(ConnectionError):
+        tr.read_any_frame(io.BytesIO(b""))
+
+
+def test_read_any_frame_passes_ndjson_through():
+    buf = io.BytesIO(b'{"version": 1, "kind": "x", "v": [1, 2]}\n')
+    out = tr.read_any_frame(buf)
+    assert out == {"version": 1, "kind": "x", "v": [1, 2]}
+
+
+def test_ndarray_schedule_decodes_like_list_schedule():
+    start = np.array([0.0, 30.0, np.inf], np.float64)
+    as_bin = tr.decode_schedule(
+        {"version": ext.WIRE_VERSION, "kind": "schedule", "start": start},
+        3)
+    as_json = tr.decode_schedule(
+        {"version": ext.WIRE_VERSION, "kind": "schedule",
+         "start": [0.0, 30.0, None]}, 3)
+    assert np.array_equal(as_bin, as_json)
+    with pytest.raises(ext.ProtocolError):
+        tr.decode_schedule(
+            {"version": ext.WIRE_VERSION, "kind": "schedule",
+             "start": np.array([np.nan, 0.0, 0.0])}, 3)
+
+
+def test_running_sets_envelope_roundtrip_and_validation():
+    msg = ext.encode_running_sets([[0, 2], [], [5]])
+    sets = ext.decode_running_sets(msg, n_jobs=8, n_expected=3)
+    assert [s.tolist() for s in sets] == [[0, 2], [], [5]]
+    with pytest.raises(ext.ProtocolError):
+        ext.decode_running_sets(msg, n_jobs=8, n_expected=2)
+    bad = {"version": ext.WIRE_VERSION,
+           "kind": ext.WIRE_KIND_RUNNING_SETS, "sets": [[True]]}
+    with pytest.raises(ext.ProtocolError):
+        ext.decode_running_sets(bad, n_jobs=8, n_expected=1)
+
+
+# ---------------------------------------------------------------------------
+# Throughput claim (acceptance: binary >= 2x NDJSON bytes/s on a large
+# reset envelope, CPU-only).
+# ---------------------------------------------------------------------------
+def test_binary_reset_envelope_at_least_2x_ndjson_bytes_per_s():
+    import json
+    import time
+
+    n = 100_000
+    rng = np.random.default_rng(0)
+    cols = {
+        "submit": np.sort(rng.uniform(0, 1e5, n)),
+        "limit": rng.uniform(60.0, 86400.0, n),
+        "wall": rng.uniform(30.0, 43200.0, n),
+        "nodes": rng.integers(1, 64, n).astype(np.int64),
+        "priority": rng.uniform(0.0, 1.0, n),
+        "account": rng.integers(0, 16, n).astype(np.int64),
+    }
+
+    def envelope(payload):
+        return {"version": tr.WIRE_VERSION, "kind": "reset", "t0": 0.0,
+                "jobs": payload}
+
+    def measure(encode):
+        best = 0.0
+        for _ in range(3):
+            t0 = time.perf_counter()
+            nbytes = encode()
+            best = max(best, nbytes / (time.perf_counter() - t0))
+        return best
+
+    def enc_json():
+        buf = io.BytesIO()
+        tr.write_frame(buf, envelope(
+            {k: v.tolist() for k, v in cols.items()}))
+        return len(buf.getvalue())
+
+    def enc_bin():
+        buf = io.BytesIO()
+        tr.write_bin_frame(buf, envelope(cols))
+        return len(buf.getvalue())
+
+    json_rate, bin_rate = measure(enc_json), measure(enc_bin)
+    assert bin_rate >= 2.0 * json_rate, \
+        f"binary {bin_rate:.0f} B/s < 2x ndjson {json_rate:.0f} B/s"
+    # and the decoded payloads agree, so the speed is not bought with
+    # a lossy spelling
+    buf = io.BytesIO()
+    tr.write_bin_frame(buf, envelope(cols))
+    buf.seek(0)
+    back = tr.read_any_frame(buf, as_arrays=False)
+    assert back["jobs"]["submit"] == cols["submit"].tolist()
+    assert json.loads(json.dumps(back)) == back
+
+
+# ---------------------------------------------------------------------------
+# Negotiation + end-to-end conformance over a real subprocess peer.
+# ---------------------------------------------------------------------------
+def test_plugin_telemetry_bit_equal_across_all_transports():
+    """In-process, NDJSON-pinned, and binary peers must be physically
+    indistinguishable: every telemetry channel bit-equal."""
+    js = make_jobs(seed=31)
+    t1 = 1800.0
+    inproc = ext.FastSimLike(policy="fcfs", backfill="firstfit")
+    _, h_ref, _ = ext.run_plugin_mode(SYS, js, inproc, 0.0, t1)
+    for wire, expect in (("ndjson", "ndjson"), ("auto", "binary"),
+                         ("binary", "binary")):
+        peer = make_peer(wire=wire)
+        try:
+            _, h, _ = ext.run_plugin_mode(SYS, js, peer, 0.0, t1)
+            assert peer.stats()["wire"] == expect
+        finally:
+            peer.close()
+        assert set(h_ref) == set(h)
+        for k in h_ref:
+            assert np.array_equal(np.asarray(h_ref[k]), np.asarray(h[k])), \
+                f"channel {k!r} diverged over wire={wire}"
+
+
+def test_legacy_peer_falls_back_to_ndjson_and_binary_demand_fails():
+    js = make_jobs(seed=32, n=10)
+    peer = make_peer("legacy")      # no caps advertised
+    try:
+        peer.reset(SYS, js, 0.0)
+        assert peer.stats()["wire"] == "ndjson"
+        assert peer.batch_capable is False
+    finally:
+        peer.close()
+    strict = make_peer("legacy", wire="binary")
+    try:
+        with pytest.raises(ext.ProtocolError, match="wire=binary"):
+            strict.reset(SYS, js, 0.0)
+    finally:
+        strict.close()
+
+
+def test_poll_many_matches_individual_polls_both_paths():
+    js = make_jobs(seed=33)
+    ts = [float(k * SYS.dt) for k in range(12)]
+    for fault in ((), ("legacy",)):
+        peer = make_peer(*fault)
+        try:
+            bridge = ext.SchedulerBridge(peer)
+            bridge.reset(SYS, js, 0.0)
+            batched = bridge.poll_many(ts)
+            single = [ext.decode_running(peer.poll_wire(t), len(js))
+                      for t in ts]
+        finally:
+            peer.close()
+        assert len(batched) == len(ts)
+        for b, s in zip(batched, single):
+            assert np.array_equal(np.sort(b), np.sort(s))
+
+
+def test_schedule_fetch_equal_across_dialects():
+    js = make_jobs(seed=34, n=40)
+    starts = {}
+    for wire in ("ndjson", "binary"):
+        peer = make_peer(policy="sjf", wire=wire)
+        try:
+            peer.reset(SYS, js, 0.0)
+            starts[wire] = np.asarray(peer.start, np.float64)
+        finally:
+            peer.close()
+    a, b = starts["ndjson"], starts["binary"]
+    fin = np.isfinite(a)
+    assert np.array_equal(fin, np.isfinite(b))
+    assert np.array_equal(a[fin], b[fin])
+
+
+# ---------------------------------------------------------------------------
+# Serve layer: binary snapshots / fetch are the same state, cheaper bytes.
+# ---------------------------------------------------------------------------
+def _make_session(n_intervals=3, interval=4):
+    from repro.core import types as T
+    from repro.serve.session import TwinSession
+    sys_ = get_system("marconi100").scaled(32)
+    js = generate(sys_, WorkloadSpec(
+        n_jobs=24, duration_s=n_intervals * interval * sys_.dt, load=1.2,
+        trace_len=4, seed=5))
+    return TwinSession(sys_, js.to_table(32),
+                       T.Scenario.make("fcfs", "easy"), 0.0,
+                       n_intervals * interval * sys_.dt,
+                       interval_steps=interval)
+
+
+def test_serve_snapshot_binary_parity_with_base64_dialect():
+    from repro.serve import snapshot as snap
+    sess = _make_session()
+    sess.advance_many({0: 2})
+    as_json = sess.snapshot(0, binary=False)
+    as_bin = sess.snapshot(0, binary=True)
+    assert as_json["step"] == as_bin["step"]
+    # one digest speaks both dialects: raw bytes, not spelling
+    assert as_json["raw_digest"] == as_bin["raw_digest"]
+    assert "digest" in as_json and "digest" not in as_bin
+    leaves_j = snap.encode_carry(
+        snap.decode_carry(as_json["snapshot"], sess.carry_template))
+    leaves_b = snap.encode_carry(
+        snap.decode_carry(as_bin["snapshot"], sess.carry_template))
+    assert snap.carry_digest(leaves_j) == snap.carry_digest(leaves_b)
+
+
+def test_serve_fetch_binary_cols_equal_ndjson_rows():
+    sess = _make_session()
+    sess.advance_many({0: 3})
+    rows = sess.fetch(0)["rows"]
+    cols = sess.fetch(0, binary=True)["cols"]
+    assert isinstance(cols["step"], np.ndarray)
+    assert len(rows) == cols["step"].shape[0]
+    for i, row in enumerate(rows):
+        assert row["step"] == int(cols["step"][i])
+        for k, v in row.items():
+            if k == "step":
+                continue
+            assert v == float(cols[k][i]), (k, i)
+
+
+def test_twin_client_binary_snapshot_over_live_server(tmp_path):
+    from repro.serve.server import TwinServer
+    from tools.twin_client import TwinClient
+    sess = _make_session()
+    with TwinServer(sess, f"unix:{tmp_path}/twin.sock") as srv:
+        with TwinClient(srv.address) as c:
+            c.advance(0, 1)
+            sj = c.snapshot(0)
+            sb = c.snapshot(0, binary=True)
+            fb = c.fetch(0, binary=True)
+    assert sj["raw_digest"] == sb["raw_digest"]
+    # binary leaves arrive as {"dtype", "shape", "values"} dicts in the
+    # stdlib client; same leaf set as the base64 spelling
+    assert set(sb["snapshot"]["leaves"]) == set(sj["snapshot"]["leaves"])
+    assert "cols" in fb and "rows" not in fb

@@ -20,6 +20,7 @@ import dataclasses
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -269,12 +270,16 @@ def test_sweep_cache_lru_bound_end_to_end(monkeypatch):
     scen = T.Scenario.make("fcfs")
     carry = eng.init_state(system, table, 0.0, 64 * system.dt,
                            num_accounts=8)
+    step0 = int(carry.step)
+    # simulate_segment *donates* the carry it is given (the scan writes
+    # in place — engine.DONATE_CARRIES), so each call gets its own copy
+    fresh = lambda: jax.tree_util.tree_map(jnp.copy, carry)
     for n in (1, 2, 3, 4, 5):
-        eng.simulate_segment(system, table, carry, scen, n)
+        eng.simulate_segment(system, table, fresh(), scen, n)
     assert len(eng._SWEEP_CACHE) == 3
     assert eng.SWEEP_CACHE_STATS["evictions"] == 2
     # the evicted n=1 runner comes back transparently (a fresh miss)
     misses_before = eng.SWEEP_CACHE_STATS["misses"]
-    out, _ = eng.simulate_segment(system, table, carry, scen, 1)
-    assert int(out.step) == int(carry.step) + 1
+    out, _ = eng.simulate_segment(system, table, fresh(), scen, 1)
+    assert int(out.step) == step0 + 1
     assert eng.SWEEP_CACHE_STATS["misses"] == misses_before + 1

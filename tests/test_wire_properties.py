@@ -131,3 +131,63 @@ def test_fuzzed_schedule_never_crashes(payload):
         return
     assert isinstance(payload, list) and len(payload) == 4
     assert out.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# Binary dialect: both spellings of a message must decode identically.
+# ---------------------------------------------------------------------------
+_bin_dtypes = st.sampled_from(["<f8", "<f4", "<i8", "<i4", "<u8", "<u4",
+                               "|b1"])
+
+
+@st.composite
+def wire_arrays(draw):
+    """A numpy array any reset/schedule envelope could carry."""
+    import numpy as np
+    dt = np.dtype(draw(_bin_dtypes))
+    n = draw(st.integers(0, 32))
+    if dt.kind == "f":
+        vals = draw(st.lists(st.floats(width=32, allow_nan=False),
+                             min_size=n, max_size=n))
+    elif dt.kind == "b":
+        vals = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    elif dt.kind == "u":
+        vals = draw(st.lists(st.integers(0, 2**31 - 1),
+                             min_size=n, max_size=n))
+    else:
+        vals = draw(st.lists(st.integers(-2**31, 2**31 - 1),
+                             min_size=n, max_size=n))
+    return np.asarray(vals, dt)
+
+
+@given(st.dictionaries(
+    st.text(st.characters(min_codepoint=97, max_codepoint=122),
+            min_size=1, max_size=8),
+    wire_arrays() | st.floats(allow_nan=False) | st.integers(-10, 10)
+    | st.text(max_size=8),
+    max_size=5))
+@settings(max_examples=150, deadline=None)
+def test_binary_and_ndjson_decode_to_the_same_message(fields):
+    """One message, two wires: an RBW1 frame decoded with
+    ``as_arrays=False`` equals the NDJSON spelling of the same message
+    (arrays spelled via .tolist()), read back through the same
+    dialect-agnostic reader."""
+    import io
+
+    import numpy as np
+
+    msg = {"version": ext.WIRE_VERSION, "kind": "prop", **fields}
+    as_json = {k: v.tolist() if isinstance(v, np.ndarray) else v
+               for k, v in msg.items()}
+
+    b = io.BytesIO()
+    tr.write_bin_frame(b, msg)
+    b.seek(0)
+    from_bin = tr.read_any_frame(b, as_arrays=False)
+
+    j = io.BytesIO()
+    tr.write_frame(j, as_json)
+    j.seek(0)
+    from_json = tr.read_any_frame(j)
+
+    assert from_bin == from_json

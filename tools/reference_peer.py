@@ -23,7 +23,13 @@ Run modes::
 ``--fault MODE`` injects failures for the bridge's fault tests:
 ``die:N`` (exit abruptly after N polls), ``hang`` (never answer),
 ``garbage`` (non-JSON frame), ``truncate`` (partial frame then exit),
-``version`` (advertise wire version 2 in hello).
+``version`` (advertise wire version 2 in hello), ``legacy`` (advertise
+no capabilities — forces the twin's NDJSON/per-poll fallback).
+
+Capabilities: the hello advertises ``bin1`` (RBW1 length-prefixed
+binary frames — raw little-endian arrays instead of JSON lists) and
+``batch1`` (``poll_batch`` → ``running_sets``); replies always use the
+dialect the request arrived in.
 """
 from __future__ import annotations
 
@@ -34,11 +40,32 @@ import json
 import math
 import os
 import socket
+import struct
 import sys
 import time
 
 WIRE_VERSION = 1
 MAX_FRAME_BYTES = 256 << 20  # keep equal to repro.core.transport's cap
+
+# RBW1 binary dialect (keep in sync with repro.core.transport):
+#   magic[4] | u32 LE header bytes | u32 LE payload bytes | JSON header |
+#   raw little-endian array bytes. Arrays appear in the header as
+#   {"__bin__": index, "dtype": "<f8", "shape": [n]} placeholders.
+BIN_MAGIC = b"RBW1"
+BIN_LENS = struct.Struct("<II")
+# struct format char per wire dtype (stdlib-only decode, no numpy)
+DTYPE_FMT = {"<f8": "d", "<f4": "f", "<i8": "q", "<i4": "i",
+             "<u8": "Q", "<u4": "I", "|b1": "?"}
+CAPS = ["bin1", "batch1"]  # binary frames + batched polls
+
+
+class BinArray:
+    """An array-valued reply field: raw bytes on the binary wire, a plain
+    JSON list on the NDJSON wire."""
+
+    def __init__(self, dtype, values):
+        self.dtype = dtype
+        self.values = list(values)
 
 
 # ---------------------------------------------------------------------------
@@ -133,11 +160,126 @@ class Session:
         self.polls = 0
         self.jobs = None
         self.start = None
+        self.req_binary = False  # dialect of the last request frame
 
+    # -- framing (both dialects) -------------------------------------------
     def send(self, msg):
-        self.wfile.write(json.dumps(msg, separators=(",", ":"))
-                         .encode("utf-8") + b"\n")
+        """Answer in the dialect the request arrived in."""
+        if self.req_binary:
+            self.send_binary(msg)
+        else:
+            self.send_json(msg)
+
+    def send_json(self, msg):
+        self.wfile.write(json.dumps(
+            msg, separators=(",", ":"),
+            default=lambda o: o.values if isinstance(o, BinArray) else o)
+            .encode("utf-8") + b"\n")
         self.wfile.flush()
+
+    def send_binary(self, msg):
+        chunks = []
+
+        def hoist(obj):
+            if isinstance(obj, BinArray):
+                fmt = DTYPE_FMT[obj.dtype]
+                chunks.append(struct.pack(
+                    "<%d%s" % (len(obj.values), fmt), *obj.values))
+                return {"__bin__": len(chunks) - 1, "dtype": obj.dtype,
+                        "shape": [len(obj.values)]}
+            if isinstance(obj, dict):
+                return {k: hoist(v) for k, v in obj.items()}
+            if isinstance(obj, list):
+                return [hoist(v) for v in obj]
+            return obj
+
+        header = json.dumps(hoist(msg),
+                            separators=(",", ":")).encode("utf-8")
+        self.wfile.write(BIN_MAGIC)
+        self.wfile.write(BIN_LENS.pack(len(header),
+                                       sum(len(c) for c in chunks)))
+        self.wfile.write(header)
+        for c in chunks:
+            self.wfile.write(c)
+        self.wfile.flush()
+
+    def read_request(self):
+        """One frame of either dialect; None on EOF, str on parse error."""
+        first = self.rfile.read(1)
+        if not first:
+            return None
+        if first == BIN_MAGIC[:1]:
+            rest = self.rfile.read(len(BIN_MAGIC) - 1)
+            if first + rest != BIN_MAGIC:
+                return "bad binary magic"
+            lens = self.rfile.read(BIN_LENS.size)
+            if len(lens) < BIN_LENS.size:
+                return "truncated binary frame"
+            header_len, payload_len = BIN_LENS.unpack(lens)
+            if header_len + payload_len > MAX_FRAME_BYTES:
+                return "frame over protocol cap"
+            header = self.rfile.read(header_len)
+            payload = self.rfile.read(payload_len)
+            if len(header) < header_len or len(payload) < payload_len:
+                return "truncated binary frame"
+            try:
+                msg = self.decode_binary(json.loads(header), payload)
+            except (ValueError, KeyError, struct.error) as e:
+                return "bad binary frame: %r" % (e,)
+            self.req_binary = True
+            return msg
+        line = first + self.rfile.readline(MAX_FRAME_BYTES + 1)
+        try:
+            msg = json.loads(line)
+        except ValueError:
+            return "unparseable frame"
+        self.req_binary = False
+        return msg
+
+    def decode_binary(self, obj, payload):
+        """Placeholders -> Python lists (flat arrays only — all the twin
+        ever sends a peer). Two passes: collect per-index sizes, then
+        unpack each array at its offset."""
+        sizes = {}
+
+        def walk(o):
+            if isinstance(o, dict):
+                if "__bin__" in o:
+                    if len(o["shape"]) != 1:
+                        raise ValueError("peer only decodes 1-D arrays")
+                    sizes[int(o["__bin__"])] = \
+                        int(o["shape"][0]) * struct.calcsize(
+                            DTYPE_FMT[o["dtype"]])
+                    return
+                for v in o.values():
+                    walk(v)
+            elif isinstance(o, list):
+                for v in o:
+                    walk(v)
+
+        walk(obj)
+        if sorted(sizes) != list(range(len(sizes))):
+            raise ValueError("array indices must be dense from 0")
+        offsets, off = {}, 0
+        for i in range(len(sizes)):
+            offsets[i] = off
+            off += sizes[i]
+        if off != len(payload):
+            raise ValueError("payload length mismatch")
+
+        def restore(o):
+            if isinstance(o, dict):
+                if "__bin__" in o:
+                    i = int(o["__bin__"])
+                    n = int(o["shape"][0])
+                    fmt = "<%d%s" % (n, DTYPE_FMT[o["dtype"]])
+                    return list(struct.unpack_from(fmt, payload, offsets[i]))
+                return {k: restore(v) for k, v in o.items()}
+            if isinstance(o, list):
+                return [restore(v) for v in o]
+            return o
+
+        return restore(obj)
 
     def send_error(self, message):
         self.send({"version": WIRE_VERSION, "kind": "error",
@@ -145,8 +287,11 @@ class Session:
 
     def hello(self):
         version = 2 if self.fault == "version" else WIRE_VERSION
-        self.send({"version": version, "kind": "hello",
-                   "name": "reference-peer", "pid": os.getpid()})
+        msg = {"version": version, "kind": "hello",
+               "name": "reference-peer", "pid": os.getpid()}
+        if self.fault != "legacy":  # legacy: pre-capability peer, no caps
+            msg["caps"] = list(CAPS)
+        self.send(msg)
 
     def on_reset(self, msg):
         sysd, jobs = msg.get("system") or {}, msg.get("jobs") or {}
@@ -205,32 +350,48 @@ class Session:
             self.send_error("poll before reset")
             return
         self.send({"version": WIRE_VERSION, "kind": "running_set",
-                   "job_ids": self.running_ids(float(msg.get("t", 0.0)))})
+                   "job_ids": BinArray(
+                       "<i8", self.running_ids(float(msg.get("t", 0.0))))})
+
+    def on_poll_batch(self, msg):
+        if self.start is None:
+            self.send_error("poll_batch before reset")
+            return
+        ts = msg.get("ts") or []
+        self.send({"version": WIRE_VERSION, "kind": "running_sets",
+                   "sets": [BinArray("<i8", self.running_ids(float(t)))
+                            for t in ts]})
 
     def on_schedule_req(self):
         if self.start is None:
             self.send_error("schedule_req before reset")
             return
+        if self.req_binary:
+            # binary spelling: +inf marks never-started (null has no
+            # fixed-width encoding); the twin's decode_schedule accepts
+            # both spellings identically
+            start = BinArray("<f8", self.start)
+        else:
+            start = [None if math.isinf(s) else s for s in self.start]
         self.send({"version": WIRE_VERSION, "kind": "schedule",
-                   "start": [None if math.isinf(s) else s
-                             for s in self.start]})
+                   "start": start})
 
     def serve(self):
         self.hello()
         while True:
-            line = self.rfile.readline(MAX_FRAME_BYTES + 1)
-            if not line:
+            msg = self.read_request()
+            if msg is None:
                 return                        # twin went away
-            try:
-                msg = json.loads(line)
-            except ValueError:
-                self.send_error("unparseable frame")
+            if isinstance(msg, str):          # framing/parse failure note
+                self.send_error(msg)
                 return
             kind = msg.get("kind") if isinstance(msg, dict) else None
             if kind == "reset":
                 self.on_reset(msg)
             elif kind == "poll":
                 self.on_poll(msg)
+            elif kind == "poll_batch":
+                self.on_poll_batch(msg)
             elif kind == "schedule_req":
                 self.on_schedule_req()
             elif kind == "bye":

@@ -41,11 +41,65 @@ import argparse
 import json
 import os
 import socket
+import struct
 import sys
 import time
 
 WIRE_VERSION = 1
 MAX_FRAME_BYTES = 256 << 20  # keep equal to repro.core.transport's cap
+
+# RBW1 binary reply frames (requested with "bin": true on snapshot /
+# fetch; layout documented in repro.core.transport). Array placeholders
+# decode to {"dtype", "shape", "values"} dicts — JSON-printable, with
+# the wire dtype preserved for digest checks.
+BIN_MAGIC = b"RBW1"
+BIN_LENS = struct.Struct("<II")
+DTYPE_FMT = {"<f8": "d", "<f4": "f", "<i8": "q", "<i4": "i",
+             "<u8": "Q", "<u4": "I", "|b1": "?"}
+
+
+def decode_bin_payload(obj, payload):
+    """Placeholders -> {"dtype", "shape", "values"} dicts (1-D/0-D)."""
+    sizes = {}
+
+    def walk(o):
+        if isinstance(o, dict):
+            if "__bin__" in o:
+                n = 1
+                for s in o["shape"]:
+                    n *= int(s)
+                sizes[int(o["__bin__"])] = \
+                    n * struct.calcsize(DTYPE_FMT[o["dtype"]])
+                return
+            for v in o.values():
+                walk(v)
+        elif isinstance(o, list):
+            for v in o:
+                walk(v)
+
+    walk(obj)
+    offsets, off = {}, 0
+    for i in range(len(sizes)):
+        offsets[i] = off
+        off += sizes[i]
+    if off != len(payload):
+        raise ValueError("binary payload length mismatch")
+
+    def restore(o):
+        if isinstance(o, dict):
+            if "__bin__" in o:
+                i = int(o["__bin__"])
+                n = sizes[i] // struct.calcsize(DTYPE_FMT[o["dtype"]])
+                fmt = "<%d%s" % (n, DTYPE_FMT[o["dtype"]])
+                return {"dtype": o["dtype"], "shape": list(o["shape"]),
+                        "values": list(struct.unpack_from(
+                            fmt, payload, offsets[i]))}
+            return {k: restore(v) for k, v in o.items()}
+        if isinstance(o, list):
+            return [restore(v) for v in o]
+        return o
+
+    return restore(obj)
 
 
 def parse_address(addr):
@@ -96,9 +150,22 @@ class TwinClient:
         self.wfile.flush()
 
     def _read(self):
-        line = self.rfile.readline(MAX_FRAME_BYTES + 1)
-        if not line:
+        first = self.rfile.read(1)
+        if not first:
             raise ConnectionError("twin closed the connection (EOF)")
+        if first == BIN_MAGIC[:1]:
+            rest = self.rfile.read(len(BIN_MAGIC) - 1)
+            if first + rest != BIN_MAGIC:
+                raise ValueError(f"bad binary frame magic "
+                                 f"{(first + rest)!r}")
+            lens = self.rfile.read(BIN_LENS.size)
+            header_len, payload_len = BIN_LENS.unpack(lens)
+            header = self.rfile.read(header_len)
+            payload = self.rfile.read(payload_len)
+            if len(header) < header_len or len(payload) < payload_len:
+                raise ConnectionError("truncated binary frame")
+            return decode_bin_payload(json.loads(header), payload)
+        line = first + self.rfile.readline(MAX_FRAME_BYTES + 1)
         return json.loads(line)
 
     def write_raw(self, data: bytes):
@@ -127,11 +194,13 @@ class TwinClient:
         return self.request("fork", branch=branch, delta=delta or {},
                             at_step=at_step)
 
-    def snapshot(self, branch, at_step=None):
-        return self.request("snapshot", branch=branch, at_step=at_step)
+    def snapshot(self, branch, at_step=None, binary=False):
+        return self.request("snapshot", branch=branch, at_step=at_step,
+                            bin=True if binary else None)
 
-    def fetch(self, branch, start=None, stop=None):
-        return self.request("fetch", branch=branch, start=start, stop=stop)
+    def fetch(self, branch, start=None, stop=None, binary=False):
+        return self.request("fetch", branch=branch, start=start, stop=stop,
+                            bin=True if binary else None)
 
     def state(self):
         return self.request("state")
@@ -200,16 +269,22 @@ def run_command(client, words):
         client.last_branch = reply["branch"]
         return reply
     if verb == "snapshot":
-        at_step = None
+        at_step, binary = None, False
         for tok in args[1:]:
+            if tok == "bin":
+                binary = True
+                continue
             key, _, val = tok.partition("=")
             if key == "at":
                 at_step = int(val)
-        return client.snapshot(branch(args[0]), at_step)
+        return client.snapshot(branch(args[0]), at_step, binary=binary)
     if verb == "fetch":
+        binary = "bin" in args[1:]
+        pos = [a for a in args[1:] if a != "bin"]
         return client.fetch(branch(args[0]),
-                            int(args[1]) if len(args) > 1 else None,
-                            int(args[2]) if len(args) > 2 else None)
+                            int(pos[0]) if len(pos) > 0 else None,
+                            int(pos[1]) if len(pos) > 1 else None,
+                            binary=binary)
     if verb == "state":
         return client.state()
     if verb == "shutdown":
