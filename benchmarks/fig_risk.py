@@ -1,0 +1,128 @@
+"""Risk-grid sweep: (failure-seed x failure-rate x demand-response) as ONE
+``simulate_sweep_sharded`` program with the stochastic event layer on
+(repro.events). Every scenario row carries its own failure universe
+through the traced ``failure_seed``/rate knobs, so the whole risk grid —
+the paper's "events not easily realizable in production" — compiles
+once; per-scenario ride-through scores (jobs killed/requeued, energy not
+served, node downtime, recovery time) come out of ``stats.summarize``.
+
+``--smoke`` is the CI canary: a 64-node scaled config for 50 steps,
+emitting ``BENCH_risk.json`` for the perf-trajectory gate
+(tools/bench_compare.py against benchmarks/baselines/risk_history.ndjson).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import bench_meta, hist_stats, save, timed
+from repro.core import engine as eng
+from repro.core import stats as stats_mod
+from repro.core import types as T
+from repro.datasets.synthetic import WorkloadSpec, generate
+from repro.events import EventConfig
+from repro.grid import signals as gsig
+from repro.systems.config import get_system
+
+# hazards in failures per node-day (converted to 1/s below)
+FAIL_RATES_PER_DAY = [0.0, 2.0, 8.0]
+FAIL_SEEDS = [3, 4]
+DR_CAPS = [None, 0.6]   # None = no DR event; else cap as frac of peak IT
+
+
+def _grid(sys_, t0, t1):
+    """The (seed x rate x DR) scenario grid + row names."""
+    per_day = 1.0 / 86400.0
+    peak_it = sys_.n_nodes * sys_.power.peak_node_w
+    scens, names = [], []
+    for sd in FAIL_SEEDS:
+        for rate in FAIL_RATES_PER_DAY:
+            for cap in DR_CAPS:
+                kw = dict(failure_seed=float(sd),
+                          node_fail_rate=rate * per_day,
+                          cdu_fail_rate=0.25 * rate * per_day,
+                          failure_corr=0.5, repair_s=1800.0)
+                if cap is not None:
+                    kw.update(dr_announce_s=t0 + 0.1 * (t1 - t0),
+                              dr_notice_s=0.1 * (t1 - t0),
+                              dr_duration_s=0.3 * (t1 - t0),
+                              dr_cap_w=cap * peak_it)
+                scens.append(T.Scenario.make("fcfs", "easy", **kw))
+                names.append(f"seed{sd}-rate{rate:g}-"
+                             f"dr{'off' if cap is None else cap}")
+    return scens, names
+
+
+def run(quick: bool = False, n_steps: int = 0, bench_json: str = ""):
+    sys_ = get_system("marconi100").scaled(64)
+    n_steps = n_steps or (50 if quick else 480)
+    t1 = n_steps * sys_.dt
+    js = generate(sys_, WorkloadSpec(n_jobs=64, duration_s=t1, load=1.2,
+                                     trace_len=8, seed=1))
+    js.assign_prepop_placement(0.0, sys_.n_nodes)
+    table = js.to_table()
+    scens, names = _grid(sys_, 0.0, t1)
+    # DR rides the grid-cap machinery: neutral signals keep the non-DR
+    # rows uncapped while the DR rows see their cap step
+    sig = gsig.neutral(n_steps)
+    events = EventConfig()
+
+    tc = time.perf_counter()
+    eng.simulate_sweep_sharded(sys_, table, scens, 0.0, t1, None, 32, sig,
+                               events=events)  # compile
+    compile_s = time.perf_counter() - tc
+    (finals, hists), wall = timed(eng.simulate_sweep_sharded, sys_, table,
+                                  scens, 0.0, t1, None, 32, sig,
+                                  events=events)
+    jax.block_until_ready(finals.t)
+
+    rows = []
+    for i, n in enumerate(names):
+        final_i = jax.tree_util.tree_map(lambda x, i=i: x[i], finals)
+        hist_i = jax.tree_util.tree_map(lambda x, i=i: x[i], hists)
+        s = stats_mod.summarize(sys_, table, final_i, hist_i)
+        st = hist_stats(hists, i)
+        st.update(
+            name=f"fig_risk/{n}", wall_s=wall / len(scens),
+            jobs_done=float(np.asarray(finals.completed)[i]),
+            ride_jobs_killed=s["ride_jobs_killed"],
+            ride_jobs_requeued=s["ride_jobs_requeued"],
+            ride_energy_unserved_mwh=s["ride_energy_unserved_mwh"],
+            ride_node_downtime_h=s["ride_node_downtime_h"],
+            ride_recovery_s=s["ride_recovery_s"],
+        )
+        rows.append(st)
+    for row in rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k not in ("name", "wall_s"))
+        print(f"{row['name']},{row['wall_s'] * 1e6:.1f},{derived}")
+    save("fig_risk", {"rows": rows})
+
+    if bench_json:
+        import json
+        payload = {
+            "risk/sweep": {
+                "steps_per_s": n_steps * len(scens) / wall,
+                "wall_s": wall, "compile_s": compile_s,
+                "scenarios": len(scens), "steps": n_steps,
+            },
+            "meta": bench_meta(),
+        }
+        with open(bench_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {bench_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (50 steps)")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--bench-json", default="")
+    a = ap.parse_args()
+    run(quick=a.smoke, n_steps=a.steps, bench_json=a.bench_json)

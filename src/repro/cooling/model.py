@@ -167,7 +167,7 @@ def _effective(cfg: CoolingConfig, t_wetbulb_c, setpoint_delta_c):
 
 def _finish_step(cfg: CoolingConfig, state: CoolingState, dt: float,
                  t_wb, t_set, q, t_return, t_supply, mdot,
-                 cells_offline=0.0, q_hall=None
+                 cells_offline=0.0, cells_failed=0.0, q_hall=None
                  ) -> tuple[CoolingState, CoolingOut]:
     """Tower-side half of the step, vectorized over halls: reuse split, fan
     staging, basin mass, parasitic power. ``q``/``t_return``/``t_supply``/
@@ -175,6 +175,10 @@ def _finish_step(cfg: CoolingConfig, state: CoolingState, dt: float,
     ``t_wb`` is the per-hall wet-bulb f32[H]; ``t_set`` the effective
     (setpoint-swept) supply setpoint the basin targets follow;
     ``cells_offline`` the traced maintenance knob (scalar or f32[H]);
+    ``cells_failed`` the stochastic-failure cell count from the event
+    layer (scalar or f32[H]) — unlike planned maintenance, a *failed*
+    cell also loses its passive windage coupling (seized fan, closed
+    dampers), so it derates ``passive_ua`` proportionally;
     ``q_hall`` the per-hall heat sums when the caller already reduced
     them (the hierarchical fused kernel) — recomputed here otherwise."""
     hs = halls(cfg)
@@ -205,9 +209,16 @@ def _finish_step(cfg: CoolingConfig, state: CoolingState, dt: float,
     # cells (maintenance) cap the staging ceiling — the basin mass and the
     # passive (windage) path are installed hardware and stay
     cell_ua = cfg.cell_ua()
-    cells_on = jnp.clip(hs.cells - jnp.asarray(cells_offline, jnp.float32),
-                        0.0, hs.cells)
-    q_passive = hs.passive_ua * (state.t_basin - t_wb)
+    passive_ua = hs.passive_ua
+    off = jnp.asarray(cells_offline, jnp.float32)
+    if not (isinstance(cells_failed, (int, float)) and cells_failed == 0.0):
+        # stochastic failures stack on top of maintenance and, unlike
+        # maintenance, take the failed cells' windage path down with them
+        cf = jnp.clip(jnp.asarray(cells_failed, jnp.float32), 0.0, hs.cells)
+        off = off + cf
+        passive_ua = hs.passive_ua * (1.0 - cf / hs.cells)
+    cells_on = jnp.clip(hs.cells - off, 0.0, hs.cells)
+    q_passive = passive_ua * (state.t_basin - t_wb)
     t_b_tgt = jnp.maximum(t_wb + cfg.tower_approach_c,
                           t_set - cfg.basin_margin_c)
     drive = jnp.maximum(state.t_basin - t_wb, 0.5)
@@ -255,7 +266,8 @@ def _finish_step(cfg: CoolingConfig, state: CoolingState, dt: float,
 
 def step(cfg: CoolingConfig, state: CoolingState, group_heat_w: jnp.ndarray,
          dt: float, t_wetbulb_c=None, setpoint_delta_c=0.0,
-         cells_offline=0.0) -> tuple[CoolingState, CoolingOut]:
+         cells_offline=0.0, cells_failed=0.0
+         ) -> tuple[CoolingState, CoolingOut]:
     """Advance the cooling plant by ``dt`` seconds from per-group heat.
 
     Args:
@@ -268,6 +280,9 @@ def step(cfg: CoolingConfig, state: CoolingState, group_heat_w: jnp.ndarray,
         ``Scenario.setpoint_delta_c`` sweep knob.
       cells_offline: tower cells out for maintenance (traced; scalar or
         f32[H]) — the ``Scenario.cells_offline`` what-if knob.
+      cells_failed: tower cells down from stochastic failures (traced;
+        scalar or f32[H]) — fed by ``repro.events``; also derates the
+        passive windage path.
     Returns:
       (new_state, CoolingOut telemetry).
     """
@@ -278,13 +293,14 @@ def step(cfg: CoolingConfig, state: CoolingState, group_heat_w: jnp.ndarray,
         group_heat_w, state.t_supply, state.mdot, t_basin_g,
         jnp.broadcast_to(t_set, t_basin_g.shape), cdu_params(cfg, dt))
     return _finish_step(cfg, state, dt, t_wb, t_set, q, t_return, t_supply,
-                        mdot, cells_offline)
+                        mdot, cells_offline, cells_failed)
 
 
 def step_from_node_power(cfg: CoolingConfig, state: CoolingState,
                          node_pw: jnp.ndarray, dt: float,
                          t_wetbulb_c=None, setpoint_delta_c=0.0,
-                         cells_offline=0.0, use_pallas: bool = False
+                         cells_offline=0.0, cells_failed=0.0,
+                         use_pallas: bool = False
                          ) -> tuple[CoolingState, CoolingOut, jnp.ndarray]:
     """Like ``step`` but fused: the node->CDU->hall segment reduction and
     the CDU loop update run as one pass
@@ -300,7 +316,8 @@ def step_from_node_power(cfg: CoolingConfig, state: CoolingState,
         cfg.hall_of_group(), cfg.n_groups, cdu_params(cfg, dt),
         use_pallas=use_pallas)
     new, out = _finish_step(cfg, state, dt, t_wb, t_set, q, t_return,
-                            t_supply, mdot, cells_offline, q_hall=q_hall)
+                            t_supply, mdot, cells_offline, cells_failed,
+                            q_hall=q_hall)
     return new, out, jnp.sum(q_hall)
 
 

@@ -43,6 +43,7 @@ from repro.core import accounts as acct_mod
 from repro.core import resource_manager as rm
 from repro.core import scheduler as sched
 from repro.core import types as T
+from repro.events import process as events_mod
 from repro.grid import powercap
 from repro.grid import signals as gsig
 from repro.kernels.power_topo import ops as topo_ops
@@ -57,12 +58,15 @@ from repro.systems.config import SystemConfig
 # ---------------------------------------------------------------------------
 def init_state(system: SystemConfig, table: T.JobTable, t0: float,
                t1: float, accounts: T.AccountStats | None = None,
-               num_accounts: int = 64) -> T.SimState:
+               num_accounts: int = 64,
+               events: "events_mod.EventConfig | None" = None) -> T.SimState:
     """Initial engine state for the window ``[t0, t1]`` (seconds).
 
     Dismisses jobs entirely outside the window, prepopulates jobs already
     running at ``t0`` per the telemetry, queues jobs submitted but not yet
     started, and starts the cooling loop from its idle-plant condition.
+    ``events`` (an ``EventConfig``) rides the carry as an ``EventState``
+    subtree; ``None`` keeps the carry identical to the pre-events layout.
     """
     J = table.num_jobs
     rec_end = table.rec_start + table.wall
@@ -85,7 +89,7 @@ def init_state(system: SystemConfig, table: T.JobTable, t0: float,
     end = jnp.where(running0, rec_end, jnp.inf)
     node_job = rm.prepopulate(system.n_nodes, table.first_node, table.nodes,
                               running0)
-    free_count = jnp.sum((node_job < 0).astype(jnp.int32))
+    free_count = jnp.sum((node_job == -1).astype(jnp.int32))
     if accounts is None:
         accounts = T.AccountStats.zeros(num_accounts)
     else:
@@ -105,7 +109,9 @@ def init_state(system: SystemConfig, table: T.JobTable, t0: float,
         energy_total=jnp.float32(0.0), energy_it=jnp.float32(0.0),
         energy_loss=jnp.float32(0.0), completed=jnp.float32(0.0),
         emissions_kg=jnp.float32(0.0), energy_cost=jnp.float32(0.0),
-        energy_cooling=jnp.float32(0.0), heat_reuse_j=jnp.float32(0.0))
+        energy_cooling=jnp.float32(0.0), heat_reuse_j=jnp.float32(0.0),
+        events=(None if events is None
+                else events_mod.init_event_state(system)))
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +140,8 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
           wx: wsig.WeatherNow | None = None,
           setpoint_delta_c=0.0,
           thermal: cooling.ThermalNow | None = None,
-          cells_offline=0.0
+          cells_offline=0.0, cells_failed=0.0,
+          ev_now: "events_mod.EventsNow | None" = None
           ) -> Tuple[T.SimState, T.StepRecord]:
     """Phase (4): cap enforcement + physics + accounting + telemetry.
 
@@ -152,6 +159,9 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
     static ``CoolingConfig`` wet-bulb applies. ``setpoint_delta_c`` and
     ``cells_offline`` are the traced sweep knobs
     (``Scenario.setpoint_delta_c`` / ``Scenario.cells_offline``).
+    ``cells_failed`` / ``ev_now`` arrive from the failure pass
+    (repro.events) when the event layer is on — failed cells degrade the
+    cooling plant and the telemetry row picks up the outage counters.
     """
     dt = system.dt
     t = st.t
@@ -175,7 +185,8 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         throttle = 1.0 - cap.c
         cool_state, cool = cooling.step(system.cooling, st.cooling,
                                         cap.group_heat, dt, t_wb,
-                                        setpoint_delta_c, cells_offline)
+                                        setpoint_delta_c, cells_offline,
+                                        cells_failed)
     else:
         cap_active = T.INF
         throttle = jnp.float32(0.0)
@@ -184,7 +195,7 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         # hall sums
         cool_state, cool, p_it = cooling.step_from_node_power(
             system.cooling, st.cooling, node_pw, dt, t_wb, setpoint_delta_c,
-            cells_offline)
+            cells_offline, cells_failed)
     n_racks = max(system.n_nodes // system.power.nodes_per_rack, 1)
     p_in, p_loss = plosses.conversion(system.power, p_it, float(n_racks))
     p_cool = cool.p_cooling
@@ -217,6 +228,11 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         cost = jnp.float32(0.0)
 
     busy = jnp.float32(system.n_nodes) - st.free_count.astype(jnp.float32)
+    if ev_now is not None:
+        # down free nodes are parked at -2 (outside the -1 free pool), so
+        # they'd otherwise count as busy; utilization should count work
+        busy = busy - ev_now.nodes_down
+    H = system.cooling.n_halls
     rec = T.StepRecord(
         t=t, power_it=p_it, power_loss=p_loss, power_cooling=p_cool,
         power_total=p_total, pue=pue, t_tower_return=t_tower_ret,
@@ -236,7 +252,12 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
         # (the cooling plant is fed the (throttled) IT draw per group)
         power_it_hall=cool.q_hall_w, t_basin_hall=cool.t_basin_hall,
         t_supply_max_hall=cool.t_supply_max_hall,
-        t_wetbulb_hall=cool.t_wetbulb_hall, cells_online=cool.cells_online)
+        t_wetbulb_hall=cool.t_wetbulb_hall, cells_online=cool.cells_online,
+        nodes_down=(jnp.float32(0.0) if ev_now is None
+                    else ev_now.nodes_down),
+        n_killed=(jnp.float32(0.0) if ev_now is None else ev_now.n_killed),
+        overheat_hall=(jnp.zeros((H,), jnp.float32) if thermal is None
+                       else thermal.overheat_hall.astype(jnp.float32)))
 
     new = dataclasses.replace(
         st, t=t + dt, step=st.step + 1, end=end, progress=progress,
@@ -253,32 +274,53 @@ def _tick(system: SystemConfig, table: T.JobTable, st: T.SimState,
 
 def engine_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                 scen: T.Scenario, signals: gsig.GridSignals | None = None,
-                weather: wsig.WeatherSignals | None = None
+                weather: wsig.WeatherSignals | None = None,
+                events: "events_mod.EventConfig | None" = None
                 ) -> Tuple[T.SimState, T.StepRecord]:
     """One engine step: phases (1)-(4). ``signals`` enables the grid layer,
-    ``weather`` drives the cooling tower's ambient wet-bulb; both are
-    compile-time ``None`` when absent (their machinery folds away)."""
+    ``weather`` drives the cooling tower's ambient wet-bulb, ``events``
+    enables the stochastic failure + demand-response layer (repro.events);
+    all three are compile-time ``None`` when absent (their machinery folds
+    away and the graph is bit-identical to the pre-events engine)."""
     st = _prepare_and_arrivals(system, table, st)
+    if events is not None:
+        # phase (2b): draw failures/repairs, kill hit jobs, update the
+        # availability map; DR cap steps are evaluated at the same point
+        st, ev_now = events_mod.apply_failures(events, system, table, st,
+                                               scen)
+        dr = events_mod.dr_now(scen, st.t)
+        cells_failed = ev_now.cells_failed_hall
+    else:
+        ev_now = None
+        dr = None
+        cells_failed = 0.0
     wx = None if weather is None else wsig.at_step(weather, st.step)
     # cooling-pressure signals for the thermal_aware policy + admission gate
     thermal = cooling.thermal_now(system.cooling, st.cooling,
                                   scen.setpoint_delta_c)
     if signals is None:
         # no grid layer: skip the admission power pass and cap machinery
+        # (demand-response needs the grid path — the CLI injects neutral
+        # signals when DR knobs are set without a grid trace)
         st = sched.schedule_step(system, table, st, scen, thermal=thermal)
         return _tick(system, table, st, None, None, wx,
-                     scen.setpoint_delta_c, thermal, scen.cells_offline)
+                     scen.setpoint_delta_c, thermal, scen.cells_offline,
+                     cells_failed, ev_now)
     grid = gsig.at_step(signals, st.step)
     cap_active = grid.cap_w * scen.cap_scale
+    if dr is not None:
+        # an active demand-response event caps below the schedule
+        cap_active = jnp.minimum(cap_active, dr.cap_now_w)
     # raw IT draw after completions: the cap-aware admission baseline
     job_pw = pmodel.job_node_power_elapsed(table, st.jstate, st.progress,
                                            system.prof_dt)
     node_pw = pmodel.node_power(system, table, st.node_job, job_pw)
     st = sched.schedule_step(system, table, st, scen, grid,
                              proj_pw=pmodel.system_it_power(node_pw),
-                             thermal=thermal)
+                             thermal=thermal, dr=dr)
     return _tick(system, table, st, grid, cap_active, wx,
-                 scen.setpoint_delta_c, thermal, scen.cells_offline)
+                 scen.setpoint_delta_c, thermal, scen.cells_offline,
+                 cells_failed, ev_now)
 
 
 # ---------------------------------------------------------------------------
@@ -377,22 +419,23 @@ def _donate(*argnums: int) -> tuple:
     return tuple(argnums) if DONATE_CARRIES else ()
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6),
+@functools.partial(jax.jit, static_argnums=(0, 6, 7),
                    donate_argnums=_donate(2))
 def _simulate_jit(system: SystemConfig, table: T.JobTable, st0: T.SimState,
                   scen: T.Scenario, signals: gsig.GridSignals | None,
-                  weather: wsig.WeatherSignals | None, n_steps: int):
-    # signals/weather=None are empty pytrees: the no-grid / no-weather fast
-    # paths in engine_step are selected at trace time and their machinery
-    # vanishes entirely
+                  weather: wsig.WeatherSignals | None, n_steps: int,
+                  events: "events_mod.EventConfig | None" = None):
+    # signals/weather=None are empty pytrees and events=None is a static
+    # arg: the no-grid / no-weather / no-failure fast paths in engine_step
+    # are selected at trace time and their machinery vanishes entirely
     def body(st, _):
-        return engine_step(system, table, st, scen, signals, weather)
+        return engine_step(system, table, st, scen, signals, weather, events)
     return jax.lax.scan(body, st0, None, length=n_steps)
 
 
 def _simulate_observed(system, table, st0, scen, signals, weather,
-                       n_steps: int, timer) -> Tuple[T.SimState,
-                                                     T.StepRecord]:
+                       n_steps: int, timer, events=None
+                       ) -> Tuple[T.SimState, T.StepRecord]:
     """Opt-in observed run: AOT lower/compile so the jit **compile** phase
     is a separate span from the scan **execute** phase (a plain jit call
     fuses both into the first invocation, which is exactly the number a
@@ -402,7 +445,7 @@ def _simulate_observed(system, table, st0, scen, signals, weather,
     meta = {"system": system.name, "n_steps": int(n_steps)}
     with timer.span("engine.lower", **meta):
         lowered = _simulate_jit.lower(system, table, st0, scen, signals,
-                                      weather, n_steps)
+                                      weather, n_steps, events)
     with timer.span("engine.compile", **meta):
         compiled = lowered.compile()
     with timer.span("engine.scan", **meta):
@@ -417,7 +460,8 @@ def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
              num_accounts: int = 64,
              signals: gsig.GridSignals | None = None,
              weather: wsig.WeatherSignals | None = None,
-             carry: T.SimState | None = None
+             carry: T.SimState | None = None,
+             events: "events_mod.EventConfig | None" = None
              ) -> Tuple[T.SimState, T.StepRecord]:
     """Run the twin from ``t0`` to ``t1`` (seconds).
 
@@ -438,17 +482,23 @@ def simulate(system: SystemConfig, table: T.JobTable, scen: T.Scenario,
         resume-from-checkpoint path, repro.serve). ``t0``/``t1`` still
         size the window: ``n_steps = (t1 - t0) / dt`` steps run *from
         the carry's own clock*.
+      events: static ``EventConfig`` enabling the stochastic failure +
+        demand-response layer (repro.events); the per-scenario rates and
+        seeds stay traced ``Scenario`` knobs. ``None`` = bit-identical
+        pre-events engine. A passed ``carry`` must match (its ``events``
+        subtree present iff an ``EventConfig`` is given).
     Returns:
       (final SimState, StepRecord history with one row per step).
     """
     n_steps = int(round((t1 - t0) / system.dt))
-    st0 = (init_state(system, table, t0, t1, accounts, num_accounts)
+    st0 = (init_state(system, table, t0, t1, accounts, num_accounts, events)
            if carry is None else carry)
     timer = obs_timing.current()
     if timer is not None:
         return _simulate_observed(system, table, st0, scen, signals,
-                                  weather, n_steps, timer)
-    return _simulate_jit(system, table, st0, scen, signals, weather, n_steps)
+                                  weather, n_steps, timer, events)
+    return _simulate_jit(system, table, st0, scen, signals, weather, n_steps,
+                         events)
 
 
 _STATIC_CACHE: dict = {}
@@ -543,15 +593,16 @@ def _cache_store(key, fn):
     return fn
 
 
-def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
-    """Cached jitted sweep runner keyed on (system, horizon, weather axis).
+def _sweep_fn(system: SystemConfig, n_steps: int, w_axis, events=None):
+    """Cached jitted sweep runner keyed on (system, horizon, weather axis,
+    event layer).
 
     ``jax.jit`` caches traces per *function identity*; defining the runner
     inside ``simulate_sweep`` would re-jit on every call. Caching it here
     means repeated same-shape sweeps — notably the per-generation rollouts
     of the ES training loop (repro.ml.train) — compile once and then run
     at steady-state throughput."""
-    key = (system, n_steps, w_axis)
+    key = (system, n_steps, w_axis, events)
     fn = _cache_lookup(key)
     if fn is None:
         @jax.jit
@@ -559,7 +610,7 @@ def _sweep_fn(system: SystemConfig, n_steps: int, w_axis):
             def one(scen1, weather1):
                 def body(st, _):
                     return engine_step(system, table_, st, scen1, signals_,
-                                       weather1)
+                                       weather1, events)
                 return jax.lax.scan(body, st0_, None, length=n_steps)
             return jax.vmap(one, in_axes=(0, w_axis))(scen_, weather_)
         _cache_store(key, fn)
@@ -572,6 +623,7 @@ def simulate_sweep(system: SystemConfig, table: T.JobTable,
                    num_accounts: int = 64,
                    signals: gsig.GridSignals | None = None,
                    weather=None,
+                   events: "events_mod.EventConfig | None" = None,
                    ) -> Tuple[T.SimState, T.StepRecord]:
     """Vectorized what-if sweep: one compiled program, S scenarios.
 
@@ -584,9 +636,14 @@ def simulate_sweep(system: SystemConfig, table: T.JobTable,
     like signals) or a *list* with one trace per scenario — stacked onto
     the batch axis so a (policy x weather-scenario x setpoint) sweep runs
     as one vmapped program (see examples/cooling_whatif.py).
+
+    ``events`` (static ``EventConfig``) turns on the failure layer for the
+    whole sweep; each scenario row then carries its own failure universe
+    through the traced ``failure_seed``/rate knobs — a (seed x rate x
+    demand-response) risk grid is one compiled program.
     """
     n_steps = int(round((t1 - t0) / system.dt))
-    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    st0 = init_state(system, table, t0, t1, accounts, num_accounts, events)
     batched = T.stack_scenarios(scens)
     if isinstance(weather, (list, tuple)):
         if len(weather) != len(scens):
@@ -596,7 +653,7 @@ def simulate_sweep(system: SystemConfig, table: T.JobTable,
     else:
         weather_b, w_axis = weather, None
 
-    run = _sweep_fn(system, n_steps, w_axis)
+    run = _sweep_fn(system, n_steps, w_axis, events)
     return run(table, st0, batched, signals, weather_b)
 
 
@@ -606,6 +663,7 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
                            num_accounts: int = 64,
                            signals: gsig.GridSignals | None = None,
                            weather=None,
+                           events: "events_mod.EventConfig | None" = None,
                            ) -> Tuple[T.SimState, T.StepRecord]:
     """``simulate_sweep`` with the scenario axis sharded across devices.
 
@@ -627,9 +685,9 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
     n_dev = len(jax.devices())
     if n_dev <= 1:
         return simulate_sweep(system, table, scens, t0, t1, accounts,
-                              num_accounts, signals, weather)
+                              num_accounts, signals, weather, events)
     n_steps = int(round((t1 - t0) / system.dt))
-    st0 = init_state(system, table, t0, t1, accounts, num_accounts)
+    st0 = init_state(system, table, t0, t1, accounts, num_accounts, events)
     batched = T.stack_scenarios(scens)
     if isinstance(weather, (list, tuple)):
         if len(weather) != len(scens):
@@ -646,7 +704,7 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
 
     # compiled-program cache, same rationale as _sweep_fn: per-generation
     # training rollouts re-enter here with identical shapes
-    key = ("sharded", system, n_steps, w_axis, n_dev)
+    key = ("sharded", system, n_steps, w_axis, n_dev, events)
     run = _cache_lookup(key)
     if run is None:
         mesh = psh.sweep_mesh()
@@ -660,7 +718,7 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
                 def one(scen1, weather1):
                     def body(st, _):
                         return engine_step(system, table_s, st, scen1,
-                                           signals_s, weather1)
+                                           signals_s, weather1, events)
                     return jax.lax.scan(body, st0_s, None, length=n_steps)
                 return jax.vmap(one, in_axes=(0, w_axis))(scen_s, weather_s)
             return shard_map(shard, mesh=mesh,
@@ -681,7 +739,8 @@ def simulate_sweep_sharded(system: SystemConfig, table: T.JobTable,
 def simulate_segment(system: SystemConfig, table: T.JobTable,
                      carry: T.SimState, scen: T.Scenario, n_steps: int,
                      signals: gsig.GridSignals | None = None,
-                     weather: wsig.WeatherSignals | None = None
+                     weather: wsig.WeatherSignals | None = None,
+                     events: "events_mod.EventConfig | None" = None
                      ) -> Tuple[T.SimState, T.StepRecord]:
     """Advance the twin ``n_steps`` from an arbitrary scan carry.
 
@@ -706,17 +765,20 @@ def simulate_segment(system: SystemConfig, table: T.JobTable,
       n_steps: number of engine steps to advance.
       signals / weather: full-horizon per-step inputs (indexed by the
         carry's absolute step, clamped LOCF past the end).
+      events: static ``EventConfig``; must match the carry's lineage (an
+        ``EventState`` subtree is present iff the layer is on). Serve
+        sessions use this to fork failure-injected branches.
     Returns:
       (carry after ``n_steps``, StepRecord history of the segment).
     """
-    key = ("segment", system, int(n_steps))
+    key = ("segment", system, int(n_steps), events)
     fn = _cache_lookup(key)
     if fn is None:
         @functools.partial(jax.jit, donate_argnums=_donate(1))
         def fn(table_, carry_, scen_, signals_, weather_):
             def body(st, _):
                 return engine_step(system, table_, st, scen_, signals_,
-                                   weather_)
+                                   weather_, events)
             return jax.lax.scan(body, carry_, None, length=int(n_steps))
         _cache_store(key, fn)
     return fn(table, carry, scen, signals, weather)
@@ -725,7 +787,8 @@ def simulate_segment(system: SystemConfig, table: T.JobTable,
 def simulate_segment_sweep(system: SystemConfig, table: T.JobTable,
                            carries, scens, n_steps: int,
                            signals: gsig.GridSignals | None = None,
-                           weather: wsig.WeatherSignals | None = None
+                           weather: wsig.WeatherSignals | None = None,
+                           events: "events_mod.EventConfig | None" = None
                            ) -> Tuple[T.SimState, T.StepRecord]:
     """Batched ``simulate_segment``: B divergent branches as one program.
 
@@ -750,7 +813,7 @@ def simulate_segment_sweep(system: SystemConfig, table: T.JobTable,
                          f"{len(carries)} != {len(scens)}")
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
     batched = T.stack_scenarios(list(scens))
-    key = ("segment_sweep", system, int(n_steps))
+    key = ("segment_sweep", system, int(n_steps), events)
     fn = _cache_lookup(key)
     if fn is None:
         # the stacked carries are a fresh jnp.stack buffer every call, so
@@ -760,7 +823,7 @@ def simulate_segment_sweep(system: SystemConfig, table: T.JobTable,
             def one(carry1, scen1):
                 def body(st, _):
                     return engine_step(system, table_, st, scen1, signals_,
-                                       weather_)
+                                       weather_, events)
                 return jax.lax.scan(body, carry1, None, length=int(n_steps))
             return jax.vmap(one, in_axes=(0, 0))(carries_, scen_)
         _cache_store(key, fn)

@@ -2,7 +2,9 @@
 completes the job placement, allocating nodes").
 
 Node state is a single int32 array ``node_job[N]`` (occupying job id, -1 when
-free). Placement is vectorized:
+free, -2 when down for repair — the failure layer ``repro.events`` parks
+unavailable free nodes there so placement skips them). Placement is
+vectorized:
 
 * reschedule mode: first-free placement by prefix-sum rank over the free mask;
 * hall-aware mode: the same prefix-sum rank, taken in a caller-supplied
@@ -29,8 +31,9 @@ def release_done(node_job: jnp.ndarray, done_now: jnp.ndarray) -> jnp.ndarray:
 
 
 def firstfree_mask(node_job: jnp.ndarray, need: jnp.ndarray) -> jnp.ndarray:
-    """Boolean mask selecting the first ``need`` free nodes."""
-    free = node_job < 0
+    """Boolean mask selecting the first ``need`` free nodes (a -2 down
+    node is not free)."""
+    free = node_job == -1
     rank = jnp.cumsum(free.astype(jnp.int32))
     return free & (rank <= need)
 
@@ -40,7 +43,7 @@ def firstfree_mask_ordered(node_job: jnp.ndarray, need: jnp.ndarray,
     """Boolean mask selecting the first ``need`` free nodes *in preference
     order* (``order``: i32[N] permutation of node indices; identity order
     reproduces ``firstfree_mask`` exactly)."""
-    free = node_job < 0
+    free = node_job == -1
     free_o = free[order]
     rank = jnp.cumsum(free_o.astype(jnp.int32))
     sel_o = free_o & (rank <= need)

@@ -235,7 +235,7 @@ def hall_placement_plan(system: SystemConfig, st: T.SimState,
     idx = jnp.arange(system.n_nodes, dtype=jnp.int32)
     pos = out_start[node_hall] + (idx - first[node_hall])
     order = jnp.zeros_like(idx).at[pos].set(idx)
-    free_ok = jnp.sum(((st.node_job < 0) & node_ok).astype(jnp.int32))
+    free_ok = jnp.sum(((st.node_job == -1) & node_ok).astype(jnp.int32))
     return order, node_ok, free_ok
 
 
@@ -245,7 +245,8 @@ def hall_placement_plan(system: SystemConfig, st: T.SimState,
 def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
                   scen: T.Scenario, grid: gsig.GridNow | None = None,
                   proj_pw: jnp.ndarray | None = None,
-                  thermal: cmodel.ThermalNow | None = None) -> T.SimState:
+                  thermal: cmodel.ThermalNow | None = None,
+                  dr=None) -> T.SimState:
     """One call of ``schedule`` (paper Algorithm step 3): reorder the queue by
     the selected policy and admit jobs under the selected backfill rule.
 
@@ -271,7 +272,14 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     flat (1-hall) plant keeps the original all-or-nothing gate and
     identity placement order bit-for-bit. Replay is exempt (the recorded
     schedule is ground truth), and running jobs are untouched (heat
-    relief comes from completions)."""
+    relief comes from completions).
+
+    Demand-response notice window: ``dr`` (a ``repro.events.DrNow``,
+    grid path only) announces a coming cap step. During the notice
+    window, a job whose *requested limit* runs into the event is only
+    admitted if the projected power would still fit under the announced
+    cap — the scheduler pre-positions for the cap instead of slamming
+    into it. ``dr is None`` is compile-time "no DR machinery"."""
     has_grid = grid is not None
     is_replay = scen.policy == T.POLICY_REPLAY
     hall_aware = thermal is not None and system.cooling.n_halls > 1
@@ -284,6 +292,9 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
     thermal_ok = jnp.bool_(True) if thermal is None else ~thermal.overheat
     if has_grid:
         cap_active = grid.cap_w * scen.cap_scale
+        if dr is not None:
+            # an in-force DR event caps admission below the schedule
+            cap_active = jnp.minimum(cap_active, dr.cap_now_w)
         # estimated power a job adds on start: first profile sample above
         # the idle floor its nodes already draw
         est_add_pw = jnp.maximum(
@@ -355,6 +366,12 @@ def schedule_step(system: SystemConfig, table: T.JobTable, st: T.SimState,
         # cap-aware admission: starting this job must not breach the cap
         if has_grid:
             cap_ok = proj + est_add_pw[j] <= cap_active
+            if dr is not None:
+                # notice-window pre-positioning: a job that would still be
+                # running when the announced DR cap engages must also fit
+                # under *that* cap
+                runs_into = dr.in_notice & (t + table.limit[j] > dr.start_s)
+                cap_ok &= ~runs_into | (proj + est_add_pw[j] <= dr.cap_w)
         else:
             cap_ok = jnp.bool_(True)
         # thermal admission: flat plant -> all-or-nothing gate; multi-hall

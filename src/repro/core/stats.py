@@ -116,16 +116,49 @@ def summarize(system: SystemConfig, table: T.JobTable, final: T.SimState,
         "thermal_throttled_steps": float(
             (np.asarray(hist.thermal_throttled, np.float64) > 0.5).sum()),
     }
+    # ride-through scoring (repro.events): getattr-guarded so plugin-mode
+    # callers that assemble partial histories keep working; all zeros when
+    # the event layer is off
+    ev = getattr(final, "events", None)
+    nodes_down = getattr(hist, "nodes_down", None)
+    if ev is not None:
+        out["ride_jobs_killed"] = float(np.asarray(ev.jobs_killed))
+        out["ride_jobs_requeued"] = float(np.asarray(ev.jobs_requeued))
+        out["ride_energy_unserved_mwh"] = float(
+            np.asarray(ev.energy_lost_j) / 3.6e9)
+        out["ride_node_downtime_h"] = float(
+            np.asarray(ev.node_downtime_s) / 3600.0)
+    if ev is not None and nodes_down is not None:
+        # recovery time: from the last step with nodes down to the first
+        # later step where the queue has drained back to its depth at the
+        # moment the first failure hit (horizon-censored; 0 = no failures)
+        nd = np.asarray(nodes_down, np.float64)
+        nq = np.asarray(hist.n_queued, np.float64)
+        downs = np.nonzero(nd > 0.0)[0]
+        if downs.size == 0:
+            out["ride_recovery_s"] = 0.0
+        else:
+            first, last = int(downs[0]), int(downs[-1])
+            later = np.nonzero(nq[last:] <= nq[first])[0]
+            rec = int(later[0]) if later.size else nd.shape[-1] - last
+            out["ride_recovery_s"] = float(rec * system.dt)
     # per-hall rows (FacilityTopology): IT-load share, basin peak, cells.
     # A flat plant contributes one hall with share 1.0.
     p_hall = np.asarray(hist.power_it_hall, np.float64)
     tb_hall = np.asarray(hist.t_basin_hall, np.float64)
     cells = np.asarray(hist.cells_online, np.float64)
     total = max(p_hall.sum(), 1.0)
+    oh_hall = getattr(hist, "overheat_hall", None)
     for h in range(p_hall.shape[-1]):
         out[f"hall{h}_it_share"] = float(p_hall[..., h].sum() / total)
         out[f"hall{h}_basin_max_c"] = float(tb_hall[..., h].max())
         out[f"hall{h}_cells_online_min"] = float(cells[..., h].min())
+        if oh_hall is not None:
+            # per-hall overheat exposure: seconds the hall spent with its
+            # supply setpoint lost (ride-through scoring, repro.events)
+            out[f"hall{h}_overheat_s"] = float(
+                (np.asarray(oh_hall, np.float64)[..., h] > 0.5).sum() *
+                system.dt)
     return out
 
 

@@ -170,6 +170,29 @@ class CoolingState:
 
 @_register
 @dataclass
+class EventState:
+    """Stochastic failure-process state (repro.events). Rides the scan
+    carry only when the event layer is enabled (``events=`` on the engine
+    runners); ``SimState.events is None`` is the compile-time "no events"
+    fast path and keeps the pre-events graphs bit-identical.
+
+    ``*_down_until`` hold the absolute sim time (s) each entity's repair
+    completes: an entity is down while ``t < down_until`` — monotone time
+    means a failed entity can never resurrect before its repair draw.
+    N = nodes, G = CDU groups, C = installed tower cells.
+    """
+    node_down_until: jnp.ndarray   # f32[N] repair-complete time per node
+    group_down_until: jnp.ndarray  # f32[G] repair-complete time per CDU group
+    cell_down_until: jnp.ndarray   # f32[C] repair-complete time per tower cell
+    # ride-through accumulators
+    jobs_killed: jnp.ndarray       # f32[] jobs killed by failures
+    jobs_requeued: jnp.ndarray     # f32[] killed jobs returned to the queue
+    energy_lost_j: jnp.ndarray     # f32[] energy of killed jobs (not served)
+    node_downtime_s: jnp.ndarray   # f32[] integral of down nodes x dt
+
+
+@_register
+@dataclass
 class SimState:
     """Full engine state threaded through ``lax.scan``."""
     t: jnp.ndarray          # f32[] current simulation time (s)
@@ -193,6 +216,10 @@ class SimState:
     energy_cost: jnp.ndarray    # f32[] integral of facility power x price ($)
     energy_cooling: jnp.ndarray  # f32[] integral of cooling parasitics (J)
     heat_reuse_j: jnp.ndarray   # f32[] integral of exported (reused) heat (J)
+    # stochastic failure-process state (repro.events); ``None`` =
+    # compile-time "no event layer" (an empty pytree subtree, so every
+    # existing runner/snapshot/stack path is untouched)
+    events: EventState | None = None
 
 
 @_register
@@ -229,6 +256,11 @@ class StepRecord:
     t_supply_max_hall: jnp.ndarray  # f32[H] hottest CDU supply per hall (°C)
     t_wetbulb_hall: jnp.ndarray     # f32[H] per-hall ambient wet-bulb (°C)
     cells_online: jnp.ndarray       # f32[H] tower cells available per hall
+    # failure / ride-through telemetry (repro.events; zeros when the event
+    # layer is off)
+    nodes_down: jnp.ndarray         # f32[] nodes unavailable this step
+    n_killed: jnp.ndarray           # f32[] jobs killed by failures this step
+    overheat_hall: jnp.ndarray      # f32[H] per-hall setpoint-lost flag
 
 
 # ---------------------------------------------------------------------------
@@ -269,6 +301,24 @@ class Scenario:
     # puts its whole population here. The scalar 0.0 default is neutral
     # (pure ``table.score`` ranking, the pre-training behavior).
     alpha: jnp.ndarray = 0.0             # f32[] or f32[K] scoring weights
+    # stochastic failure knobs (repro.events; active only when the engine
+    # runs with an ``events=EventConfig(...)``). Rates are hazards in
+    # 1/s (0 = never fails); every knob is finite so scenario deltas ride
+    # the serve wire as plain JSON numbers.
+    failure_seed: jnp.ndarray = 0.0      # f32[] seed of the failure draws
+    node_fail_rate: jnp.ndarray = 0.0    # f32[] per-node failure hazard (1/s)
+    cdu_fail_rate: jnp.ndarray = 0.0     # f32[] per-CDU-group hazard (1/s)
+    cell_fail_rate: jnp.ndarray = 0.0    # f32[] per-tower-cell hazard (1/s)
+    # correlated common-cause fraction: probability scale of a *hall-wide*
+    # CDU outage relative to the single-group hazard (0 = independent)
+    failure_corr: jnp.ndarray = 0.0      # f32[] in [0, 1]
+    repair_s: jnp.ndarray = 3600.0       # f32[] mean repair time (s)
+    # grid demand-response event (cap step with a notice window); sentinel
+    # values instead of inf: announce < 0 = no event, cap <= 0 = no cap
+    dr_announce_s: jnp.ndarray = -1.0    # f32[] announcement time (s; <0 off)
+    dr_notice_s: jnp.ndarray = 0.0       # f32[] notice window before the cap
+    dr_duration_s: jnp.ndarray = 0.0     # f32[] how long the cap holds (s)
+    dr_cap_w: jnp.ndarray = 0.0          # f32[] cap level during the event (W)
 
     @staticmethod
     def make(policy: str | int, backfill: str | int = "none",
@@ -276,7 +326,13 @@ class Scenario:
              price_weight: float = 1.0, cap_scale: float = 1.0,
              thermal_weight: float = 1.0,
              setpoint_delta_c: float = 0.0,
-             cells_offline=0.0, alpha=0.0) -> "Scenario":
+             cells_offline=0.0, alpha=0.0,
+             failure_seed: float = 0.0, node_fail_rate: float = 0.0,
+             cdu_fail_rate: float = 0.0, cell_fail_rate: float = 0.0,
+             failure_corr: float = 0.0, repair_s: float = 3600.0,
+             dr_announce_s: float = -1.0, dr_notice_s: float = 0.0,
+             dr_duration_s: float = 0.0,
+             dr_cap_w: float = 0.0) -> "Scenario":
         p = POLICY_NAMES[policy] if isinstance(policy, str) else policy
         b = BACKFILL_NAMES[backfill] if isinstance(backfill, str) else backfill
         return Scenario(
@@ -288,7 +344,17 @@ class Scenario:
             thermal_weight=jnp.float32(thermal_weight),
             setpoint_delta_c=jnp.float32(setpoint_delta_c),
             cells_offline=jnp.asarray(cells_offline, jnp.float32),
-            alpha=jnp.asarray(alpha, jnp.float32))
+            alpha=jnp.asarray(alpha, jnp.float32),
+            failure_seed=jnp.float32(failure_seed),
+            node_fail_rate=jnp.float32(node_fail_rate),
+            cdu_fail_rate=jnp.float32(cdu_fail_rate),
+            cell_fail_rate=jnp.float32(cell_fail_rate),
+            failure_corr=jnp.float32(failure_corr),
+            repair_s=jnp.float32(repair_s),
+            dr_announce_s=jnp.float32(dr_announce_s),
+            dr_notice_s=jnp.float32(dr_notice_s),
+            dr_duration_s=jnp.float32(dr_duration_s),
+            dr_cap_w=jnp.float32(dr_cap_w))
 
 
 def stack_scenarios(scens: list) -> "Scenario":

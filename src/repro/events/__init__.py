@@ -1,0 +1,15 @@
+"""Failure & demand-response scenario engine (docs/architecture.md).
+
+Seeded stochastic outage processes (node / correlated CDU-group / tower-
+cell failures with repair times) realized *inside* the scan as
+time-indexed availability masks, plus grid demand-response cap steps with
+notice windows. Enabled by passing an ``EventConfig`` to the engine
+runners; the zero-``EventConfig`` rates are value-neutral and the
+``events=None`` default keeps every pre-events graph bit-identical.
+"""
+from repro.events.process import (DrNow, EventConfig, EventsNow,
+                                  apply_failures, dr_now, init_event_state,
+                                  realize_masks)
+
+__all__ = ["DrNow", "EventConfig", "EventsNow", "apply_failures", "dr_now",
+           "init_event_state", "realize_masks"]

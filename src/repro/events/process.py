@@ -1,0 +1,266 @@
+"""Seeded stochastic failure processes + demand-response events.
+
+The hazard model runs *inside* the scan: every engine step draws fresh
+failures from a stateless key ``fold_in(PRNGKey(failure_seed), step)`` —
+deterministic across the ``simulate`` / ``simulate_sweep`` /
+``simulate_segment`` lanes (the step cursor rides the carry, so resumed
+and forked trajectories replay the exact same draws), vmap-safe (the
+seed is a traced ``Scenario`` leaf, so a sweep carries one failure
+universe per scenario row).
+
+Three entity classes fail independently per step with hazard rates from
+the ``Scenario`` knobs (probability ``1 - exp(-rate * dt)``), plus one
+*correlated common-cause* draw per hall that takes down every CDU group
+in the hall together (``failure_corr`` scales its probability relative
+to the single-group hazard). Repair times are exponential with mean
+``repair_s``. Down-state is a repair-complete time per entity
+(``EventState.*_down_until``): an entity is down while ``t <
+down_until`` — since ``down_until`` only ever grows and ``t`` is
+monotone, a failed entity can never resurrect before its repair time,
+and for a fixed seed the realized downtime is pointwise monotone in
+both the failure rates (fail sets nest) and ``repair_s`` (durations
+scale).
+
+Demand-response events are deterministic cap steps riding the grid-cap
+machinery: announced at ``dr_announce_s``, the cap ``dr_cap_w`` engages
+``dr_notice_s`` later and holds for ``dr_duration_s``. During the
+notice window the scheduler already refuses jobs that would run into
+the event unless the system would still fit under the announced cap
+(see ``repro.core.scheduler.schedule_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from repro.kernels.power_topo.ref import group_ids
+from repro.systems.config import SystemConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EventConfig:
+    """Static (compile-time) switches of the event layer. Passing an
+    ``EventConfig`` to an engine runner enables the failure process; the
+    per-scenario hazard rates stay traced ``Scenario`` knobs, so one
+    compiled program sweeps a whole (seed x rate x correlation) grid.
+
+    ``requeue``: killed jobs return to the queue (and may reschedule);
+    ``False`` dismisses them instead (the job is lost with its energy).
+    """
+    requeue: bool = True
+
+
+class EventsNow(NamedTuple):
+    """Per-step failure telemetry handed from the failure pass to the
+    cooling model and the StepRecord."""
+    cells_failed_hall: jnp.ndarray  # f32[H] failed tower cells per hall
+    nodes_down: jnp.ndarray         # f32[] nodes unavailable this step
+    n_killed: jnp.ndarray           # f32[] jobs killed this step
+    groups_down: jnp.ndarray        # f32[] CDU groups down this step
+
+
+class DrNow(NamedTuple):
+    """Demand-response signal at one instant (all from traced knobs)."""
+    start_s: jnp.ndarray    # f32[] when the cap engages (announce + notice)
+    cap_w: jnp.ndarray      # f32[] announced cap level (inf when no event)
+    cap_now_w: jnp.ndarray  # f32[] cap in force right now (inf outside)
+    in_notice: jnp.ndarray  # bool[] inside the announced notice window
+
+
+def dr_now(scen: T.Scenario, t) -> DrNow:
+    """Evaluate the demand-response event at time ``t`` (s).
+
+    Sentinel-disabled (``dr_announce_s < 0`` or ``dr_cap_w <= 0``): every
+    field is neutral (inf cap, notice never active), so the scheduler and
+    cap machinery fold to their pre-event behavior under ``where``.
+    """
+    enabled = (scen.dr_announce_s >= 0.0) & (scen.dr_cap_w > 0.0)
+    start = scen.dr_announce_s + jnp.maximum(scen.dr_notice_s, 0.0)
+    end = start + jnp.maximum(scen.dr_duration_s, 0.0)
+    active = enabled & (t >= start) & (t < end)
+    in_notice = enabled & (t >= scen.dr_announce_s) & (t < start)
+    return DrNow(
+        start_s=jnp.asarray(start, jnp.float32),
+        cap_w=jnp.where(enabled, scen.dr_cap_w, jnp.inf),
+        cap_now_w=jnp.where(active, scen.dr_cap_w, jnp.inf),
+        in_notice=in_notice)
+
+
+def init_event_state(system: SystemConfig) -> T.EventState:
+    """Everything healthy: every repair-complete time in the far past."""
+    neg = -jnp.inf
+    return T.EventState(
+        node_down_until=jnp.full((system.n_nodes,), neg, jnp.float32),
+        group_down_until=jnp.full((system.cooling.n_groups,), neg,
+                                  jnp.float32),
+        cell_down_until=jnp.full((system.cooling.n_tower_cells,), neg,
+                                 jnp.float32),
+        jobs_killed=jnp.float32(0.0), jobs_requeued=jnp.float32(0.0),
+        energy_lost_j=jnp.float32(0.0), node_downtime_s=jnp.float32(0.0))
+
+
+@functools.lru_cache(maxsize=None)
+def _maps(system: SystemConfig):
+    """Static topology maps: node -> CDU group, CDU group -> hall, tower
+    cell -> hall. Cached as HOST numpy (trace-time constants at the use
+    sites — caching jnp arrays here would leak tracers across jit
+    boundaries)."""
+    gid = np.asarray(group_ids(system.n_nodes, system.cooling.n_groups),
+                     np.int32)
+    hog = np.asarray(system.cooling.hall_of_group(), np.int32)
+    cell_hall = np.repeat(np.arange(system.cooling.n_halls, dtype=np.int32),
+                          system.cooling.cells_per_hall())
+    return gid, hog, cell_hall
+
+
+def _advance_masks(system: SystemConfig, ev: T.EventState, scen: T.Scenario,
+                   t, step):
+    """One step of the availability-mask process (shared by the in-engine
+    ``apply_failures`` and the host-facing ``realize_masks`` oracle).
+
+    Returns ``((node_until, group_until, cell_until),
+    (unavail_node bool[N], group_down bool[G], cell_down bool[C]))``.
+    """
+    dt = system.dt
+    gid, hog, _ = _maps(system)
+    N, G = system.n_nodes, system.cooling.n_groups
+    C, H = system.cooling.n_tower_cells, system.cooling.n_halls
+    seed = jnp.round(jnp.asarray(scen.failure_seed, jnp.float32)) \
+        .astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kn, kg, kh, kc, krn, krg, krc = jax.random.split(key, 7)
+
+    def p_of(rate):
+        r = jnp.maximum(jnp.asarray(rate, jnp.float32), 0.0)
+        return jnp.clip(-jnp.expm1(-r * dt), 0.0, 1.0)
+
+    # independent per-entity draws: fail sets nest as a rate grows (same
+    # uniforms, larger threshold), which is what makes downtime monotone
+    fail_n = jax.random.uniform(kn, (N,)) < p_of(scen.node_fail_rate)
+    p_grp = p_of(scen.cdu_fail_rate)
+    fail_g = jax.random.uniform(kg, (G,)) < p_grp
+    # correlated common-cause: one draw per hall, scaled by failure_corr;
+    # on fire, every CDU group in the hall goes down together
+    p_hall = jnp.clip(jnp.asarray(scen.failure_corr, jnp.float32),
+                      0.0, 1.0) * p_grp
+    fail_h = jax.random.uniform(kh, (H,)) < p_hall
+    fail_g = fail_g | fail_h[hog]
+    fail_c = jax.random.uniform(kc, (C,)) < p_of(scen.cell_fail_rate)
+
+    rep = jnp.maximum(jnp.asarray(scen.repair_s, jnp.float32), 0.0)
+
+    def until(old, fail, k, n):
+        # max(old, ...) so a re-failure during repair extends the outage;
+        # down_until never shrinks -> no resurrection before repair
+        dur = rep * jax.random.exponential(k, (n,))
+        return jnp.where(fail, jnp.maximum(old, t + dur), old)
+
+    node_until = until(ev.node_down_until, fail_n, krn, N)
+    grp_until = until(ev.group_down_until, fail_g, krg, G)
+    cell_until = until(ev.cell_down_until, fail_c, krc, C)
+
+    grp_down = t < grp_until
+    cell_down = t < cell_until
+    # a node is unavailable when itself down OR its CDU group is down
+    unavail = (t < node_until) | grp_down[gid]
+    return (node_until, grp_until, cell_until), (unavail, grp_down,
+                                                 cell_down)
+
+
+def apply_failures(cfg: EventConfig, system: SystemConfig,
+                   table: T.JobTable, st: T.SimState, scen: T.Scenario
+                   ) -> tuple[T.SimState, EventsNow]:
+    """Engine phase (2b): draw this step's failures/repairs, kill jobs
+    touching unavailable nodes, and update the availability node map.
+
+    Down free nodes are marked ``-2`` in ``node_job`` so first-free
+    placement (``resource_manager``) skips them; repaired nodes rejoin
+    the ``-1`` free pool. Killed jobs are requeued (``cfg.requeue``) or
+    dismissed, their realized start/end/progress reset and their accrued
+    energy moved into the ``energy_lost_j`` (energy-not-served) ledger.
+    """
+    ev = st.events
+    (nu, gu, cu), (unavail, grp_down, cell_down) = _advance_masks(
+        system, ev, scen, st.t, st.step)
+    _, _, cell_hall = _maps(system)
+    H = system.cooling.n_halls
+
+    # kill any RUNNING job with at least one node unavailable
+    occupied = st.node_job >= 0
+    owner = jnp.maximum(st.node_job, 0)
+    hit = jnp.zeros((table.num_jobs,), jnp.int32).at[owner].max(
+        (unavail & occupied).astype(jnp.int32)) > 0
+    kill = hit & (st.jstate == T.RUNNING)
+    n_kill = jnp.sum(kill.astype(jnp.float32))
+
+    # release every node of a killed job, then flip availability states:
+    # -2 hides a down free node from placement, repair returns it to -1
+    node_job = jnp.where(occupied & kill[owner], -1, st.node_job)
+    node_job = jnp.where(unavail & (node_job == -1), -2, node_job)
+    node_job = jnp.where(~unavail & (node_job == -2), -1, node_job)
+    free_count = jnp.sum((node_job == -1).astype(jnp.int32))
+
+    jstate = jnp.where(kill, T.QUEUED if cfg.requeue else T.DISMISSED,
+                       st.jstate)
+    start = jnp.where(kill, jnp.inf, st.start)
+    end = jnp.where(kill, jnp.inf, st.end)
+    progress = jnp.where(kill, 0.0, st.progress)
+    lost = jnp.sum(jnp.where(kill, st.jenergy, 0.0))
+    jenergy = jnp.where(kill, 0.0, st.jenergy)
+
+    nodes_down = jnp.sum(unavail.astype(jnp.float32))
+    ev = T.EventState(
+        node_down_until=nu, group_down_until=gu, cell_down_until=cu,
+        jobs_killed=ev.jobs_killed + n_kill,
+        jobs_requeued=ev.jobs_requeued + (n_kill if cfg.requeue else 0.0),
+        energy_lost_j=ev.energy_lost_j + lost,
+        node_downtime_s=ev.node_downtime_s + nodes_down * system.dt)
+    st = dataclasses.replace(
+        st, jstate=jstate, start=start, end=end, progress=progress,
+        jenergy=jenergy, node_job=node_job, free_count=free_count,
+        events=ev)
+    cells_failed_hall = jnp.zeros((H,), jnp.float32).at[cell_hall].add(
+        cell_down.astype(jnp.float32))
+    now = EventsNow(cells_failed_hall=cells_failed_hall,
+                    nodes_down=nodes_down, n_killed=n_kill,
+                    groups_down=jnp.sum(grp_down.astype(jnp.float32)))
+    return st, now
+
+
+def realize_masks(system: SystemConfig, scen: T.Scenario, n_steps: int,
+                  t0: float = 0.0) -> dict:
+    """Host-facing oracle: realize the availability masks for ``n_steps``
+    engine steps *without* the engine — a pure scan over the mask state
+    only (no jobs, no cooling), using the exact per-step draw core the
+    engine uses. The property battery (tests/test_events_properties.py)
+    checks monotonicity / no-resurrection invariants against this.
+
+    Returns numpy arrays: ``node_avail`` bool[T, N], ``group_down``
+    bool[T, G], ``cell_down`` bool[T, C], ``nodes_down`` f32[T].
+    """
+    ev0 = init_event_state(system)
+
+    def body(carry, _):
+        ev, t, step = carry
+        (nu, gu, cu), (unavail, grp_down, cell_down) = _advance_masks(
+            system, ev, scen, t, step)
+        ev = dataclasses.replace(ev, node_down_until=nu,
+                                 group_down_until=gu, cell_down_until=cu)
+        out = (~unavail, grp_down, cell_down,
+               jnp.sum(unavail.astype(jnp.float32)))
+        return (ev, t + system.dt, step + 1), out
+
+    carry0 = (ev0, jnp.float32(t0), jnp.int32(0))
+    _, (avail, gdown, cdown, ndown) = jax.lax.scan(
+        body, carry0, None, length=int(n_steps))
+    return {"node_avail": np.asarray(avail),
+            "group_down": np.asarray(gdown),
+            "cell_down": np.asarray(cdown),
+            "nodes_down": np.asarray(ndown)}

@@ -117,6 +117,37 @@ def main(argv=None):
                     help="tower cells out for maintenance: a number "
                          "(every hall) or comma list (per hall), e.g. "
                          "'2,0,0,0'")
+    # stochastic failure + demand-response layer (repro.events)
+    ap.add_argument("--failure-rate", type=float, default=None,
+                    help="per-node failure hazard (failures per node-DAY); "
+                         "enables the stochastic failure layer")
+    ap.add_argument("--cdu-failure-rate", type=float, default=None,
+                    help="per-CDU-group failure hazard (per group-day)")
+    ap.add_argument("--cell-failure-rate", type=float, default=None,
+                    help="per-tower-cell failure hazard (per cell-day)")
+    ap.add_argument("--failure-corr", type=float, default=0.0,
+                    help="correlated common-cause scale in [0,1]: one "
+                         "per-hall draw takes the hall's CDU groups "
+                         "down together")
+    ap.add_argument("--failure-seed", type=int, default=0,
+                    help="failure-universe seed (deterministic draws)")
+    ap.add_argument("--repair", default="1h", type=str,
+                    help="mean repair time (s/m/h/d suffix)")
+    ap.add_argument("--no-requeue", action="store_true",
+                    help="killed jobs are dismissed instead of requeued")
+    ap.add_argument("--dr-announce", default=None, type=str,
+                    help="demand-response event: announcement time into "
+                         "the run (s/m/h/d suffix); enables the DR layer")
+    ap.add_argument("--dr-notice", default="30m", type=str,
+                    help="notice window between announcement and the cap "
+                         "engaging")
+    ap.add_argument("--dr-duration", default="1h", type=str,
+                    help="how long the DR cap holds")
+    ap.add_argument("--dr-cap-mw", type=float, default=0.0,
+                    help="DR cap level (MW)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: scale to 64 nodes, <=48 jobs, "
+                         "30 minutes simulated")
     ap.add_argument("--external-cmd", default=None,
                     help="couple an out-of-process scheduler: spawn this "
                          "command as a subprocess peer (NDJSON socket "
@@ -166,6 +197,10 @@ def main(argv=None):
     add_output_flags(ap)
     args = ap.parse_args(argv)
 
+    if args.smoke:
+        args.scale = args.scale or 64
+        args.jobs = min(args.jobs, 48)
+        args.time = "30m"
     sys_ = build_system(args.system, args.scale, args.halls)
     cells_offline = 0.0
     if args.cells_offline:
@@ -214,6 +249,9 @@ def main(argv=None):
                       "external_wire": args.external_wire,
                       "halls": args.halls,
                       "cells_offline": args.cells_offline,
+                      "failure_rate_per_day": args.failure_rate,
+                      "failure_seed": args.failure_seed,
+                      "dr_cap_mw": args.dr_cap_mw,
                       "t0_s": t0, "duration_s": t1 - t0},
             seed=args.seed, jobs=js,
             extra={"env_preset": launch_env.report(
@@ -290,6 +328,33 @@ def main(argv=None):
     rep.flush_json()
 
 
+def _failure_kwargs(args, t0):
+    """Scenario knob kwargs for the failure/DR layer from CLI flags.
+
+    Empty dict = the layer is off. CLI hazard rates are per entity-DAY
+    (operator-friendly MTBF units); Scenario knobs are hazards in 1/s.
+    ``--dr-announce`` is relative to the run start, the Scenario knob is
+    absolute sim time."""
+    per_day = 1.0 / 86400.0
+    kw = {}
+    if args.failure_rate is not None:
+        kw["node_fail_rate"] = args.failure_rate * per_day
+    if args.cdu_failure_rate is not None:
+        kw["cdu_fail_rate"] = args.cdu_failure_rate * per_day
+    if args.cell_failure_rate is not None:
+        kw["cell_fail_rate"] = args.cell_failure_rate * per_day
+    if kw:
+        kw["failure_corr"] = args.failure_corr
+        kw["failure_seed"] = float(args.failure_seed)
+        kw["repair_s"] = _parse_time(args.repair)
+    if args.dr_announce is not None and args.dr_cap_mw > 0:
+        kw["dr_announce_s"] = t0 + _parse_time(args.dr_announce)
+        kw["dr_notice_s"] = _parse_time(args.dr_notice)
+        kw["dr_duration_s"] = _parse_time(args.dr_duration)
+        kw["dr_cap_w"] = args.dr_cap_mw * 1e6
+    return kw
+
+
 def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
     """Dispatch one CLI invocation to the right engine path.
 
@@ -298,6 +363,18 @@ def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
     coupling ran in plugin mode (its counters feed the manifest)."""
     backfill_cli = args.backfill or "none"
     bridge = None
+    fail_kw = _failure_kwargs(args, t0)
+    events_cfg = None
+    dr_signals = None
+    if fail_kw:
+        from repro.events import EventConfig
+        events_cfg = EventConfig(requeue=not args.no_requeue)
+        if "dr_cap_w" in fail_kw:
+            # demand-response rides the grid-cap machinery: inject
+            # neutral signals (zero carbon/price, uncapped) when no grid
+            # trace drives the run
+            from repro.grid import signals as gsig
+            dr_signals = gsig.neutral(int(round((t1 - t0) / sys_.dt)))
     if args.external_cmd or args.external_socket:
         from repro.core import transport as tr
         policy = args.policy if args.policy != "replay" else "fcfs"
@@ -355,17 +432,28 @@ def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
         for s in args.sweep:
             p, _, b = s.partition(":")
             specs.append((p, b or "none"))
-        scens = [T.Scenario.make(p, b, cells_offline=cells_offline)
+        scens = [T.Scenario.make(p, b, cells_offline=cells_offline,
+                                 **fail_kw)
                  for p, b in specs]
         # shards the scenario axis over the visible devices (shard_map);
         # exactly simulate_sweep when only one device is present
         finals, hists = eng.simulate_sweep_sharded(sys_, table, scens,
-                                                   t0, t1, accounts)
+                                                   t0, t1, accounts,
+                                                   signals=dr_signals,
+                                                   events=events_cfg)
         import jax
         runs = [((p, b),
                  jax.tree_util.tree_map(lambda x, i=i: x[i], finals),
                  jax.tree_util.tree_map(lambda x, i=i: x[i], hists))
                 for i, (p, b) in enumerate(specs)]
+    elif fail_kw:
+        # stochastic failures / demand-response: traced-scenario engine
+        # with the event layer enabled (repro.events)
+        scen = T.Scenario.make(args.policy, backfill_cli,
+                               cells_offline=cells_offline, **fail_kw)
+        final, hist = eng.simulate(sys_, table, scen, t0, t1, accounts,
+                                   signals=dr_signals, events=events_cfg)
+        runs = [((args.policy, backfill_cli), final, hist)]
     elif args.cells_offline:
         # maintenance knob is traced: run the traced-scenario engine
         scen = T.Scenario.make(args.policy, backfill_cli,

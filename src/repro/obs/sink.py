@@ -35,7 +35,7 @@ SCALAR_FIELDS = (
     "power_it", "power_loss", "power_cooling", "power_total", "pue",
     "util", "n_queued", "n_running", "throttle_frac", "cap_w",
     "t_tower_return", "t_basin", "t_supply_max", "t_wetbulb",
-    "emissions_kg", "energy_cost",
+    "emissions_kg", "energy_cost", "nodes_down", "n_killed",
 )
 # per-hall vector fields (f32[H] per step)
 HALL_FIELDS = ("power_it_hall", "t_basin_hall", "t_supply_max_hall",

@@ -81,7 +81,8 @@ class TwinSession:
 
     def __init__(self, system, table, scen: T.Scenario, t0: float,
                  t1: float, interval_steps: int,
-                 signals=None, weather=None, num_accounts: int = 64):
+                 signals=None, weather=None, num_accounts: int = 64,
+                 events=None):
         if interval_steps < 1:
             raise ValueError(f"interval_steps must be >= 1, got "
                              f"{interval_steps}")
@@ -102,12 +103,18 @@ class TwinSession:
                 f"tail would be unreachable")
         self.signals = signals
         self.weather = weather
+        # static EventConfig (repro.events) shared by every branch: the
+        # failure *knobs* (seed/rates/DR) are per-branch Scenario leaves,
+        # so a fork injects failures by delta alone — a session created
+        # with events=EventConfig() and zero-rate knobs stays nominal
+        self.events = events
         self._lock = threading.RLock()
         self.counters = {"advances": 0, "segments": 0, "forks": 0,
                          "snapshots": 0, "fetches": 0, "errors": 0,
                          "coalesced_batches": 0, "batched_branches": 0}
         root_carry = engine.init_state(system, table, t0, t1,
-                                       num_accounts=num_accounts)
+                                       num_accounts=num_accounts,
+                                       events=events)
         # a host copy of the root carry is the decode template for
         # snapshots of any branch (same (system, table) lineage => same
         # pytree shapes). Host copy, not the live carry: branch 0's
@@ -191,13 +198,14 @@ class TwinSession:
             br = self.branches[branch_ids[0]]
             carry, hist = engine.simulate_segment(
                 self.system, self.table, br.carry, br.scenario, n,
-                self.signals, self.weather)
+                self.signals, self.weather, self.events)
             self._commit(br, carry, hist)
         else:
             brs = [self.branches[b] for b in branch_ids]
             carries, hists = engine.simulate_segment_sweep(
                 self.system, self.table, [b.carry for b in brs],
-                [b.scenario for b in brs], n, self.signals, self.weather)
+                [b.scenario for b in brs], n, self.signals, self.weather,
+                self.events)
             self.counters["coalesced_batches"] += 1
             self.counters["batched_branches"] += len(brs)
             for i, br in enumerate(brs):

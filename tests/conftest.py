@@ -1,8 +1,21 @@
+"""Shared test fixtures and builder factories.
+
+The session fixtures (``small_system``/``small_jobs``/``small_table``)
+cover the common "one small machine, one workload" case. The module
+functions below are the consolidated system/jobset builders that used to
+be copy-pasted across test_topology.py, test_serve_checkpoint.py and
+test_train.py — import them directly (``from conftest import make_case``);
+pytest's prepend import mode puts this directory on ``sys.path``.
+"""
+import dataclasses
+
+import jax
 import numpy as np
 import pytest
 
 from repro.datasets.synthetic import WorkloadSpec, generate
-from repro.systems.config import get_system
+from repro.grid import signals as gsig
+from repro.systems.config import FacilityTopology, get_system
 
 
 def pytest_configure(config):
@@ -33,3 +46,71 @@ def small_jobs(small_system):
 def small_table(small_jobs, small_system):
     small_jobs.assign_prepop_placement(0.0, small_system.n_nodes)
     return small_jobs.to_table(96)
+
+
+# ---------------------------------------------------------------------------
+# Builder factories (shared across test modules).
+# ---------------------------------------------------------------------------
+def with_topology(cfg, n_halls, n_groups=None, n_cells=None, **over):
+    """A copy of cooling config ``cfg`` reshaped to ``n_halls`` halls."""
+    return dataclasses.replace(
+        cfg, n_groups=n_groups or cfg.n_groups,
+        n_tower_cells=n_cells or cfg.n_tower_cells,
+        topology=FacilityTopology(n_halls=n_halls), **over)
+
+
+def make_jobs(system, seed=3, n_jobs=64, load=1.2, duration_s=4 * 3600.0,
+              mean_wall_s=1800.0, prepop=True):
+    """One calibrated synthetic JobSet sized to ``system``."""
+    js = generate(system, WorkloadSpec(
+        n_jobs=n_jobs, duration_s=duration_s, load=load, trace_len=8,
+        n_accounts=8, mean_wall_s=mean_wall_s, seed=seed))
+    if prepop:
+        js.assign_prepop_placement(0.0, system.n_nodes)
+    return js
+
+
+def make_case(system, seed=3, n_jobs=64, pad=80, load=1.2):
+    """(JobSet, JobTable) pair — the serve/checkpoint test workload."""
+    js = make_jobs(system, seed=seed, n_jobs=n_jobs, load=load)
+    return js, js.to_table(pad)
+
+
+def make_table(system, seed, load=1.4, n_jobs=64):
+    """JobTable only, padded just past ``n_jobs`` — the topology-test
+    workload (hotter default load so halls saturate)."""
+    js = make_jobs(system, seed=seed, n_jobs=n_jobs, load=load)
+    return js.to_table(n_jobs + 16)
+
+
+def make_signals(system, n_steps, seed=11):
+    """Time-varying carbon + a cap schedule (above the idle floor so the
+    run is throttled sometimes, never starved)."""
+    rng = np.random.default_rng(seed)
+    floor = system.n_nodes * system.power.idle_node_w
+    sig = gsig.constant_signals(n_steps, carbon_gkwh=300.0, price_kwh=0.1)
+    carbon = (300.0 + 200.0 * np.sin(np.linspace(0, 6.0, n_steps))
+              ).astype(np.float32)
+    cap = rng.uniform(1.5 * floor, 6.0 * floor, n_steps).astype(np.float32)
+    return gsig.GridSignals(**{**vars(sig), "carbon_gkwh": carbon,
+                               "cap_w": cap})
+
+
+def assert_trees_equal(a, b, what=""):
+    """Bitwise equality of two pytrees, leaf by leaf, path in the diff."""
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (path, la), (_, lb) in zip(fa, fb):
+        la, lb = np.asarray(la), np.asarray(lb)
+        eq = (np.array_equal(la, lb, equal_nan=True)
+              if np.issubdtype(la.dtype, np.floating)
+              else np.array_equal(la, lb))
+        assert eq, (f"{what}: leaf {jax.tree_util.keystr(path)} diverges "
+                    f"(max |d| = "
+                    f"{np.max(np.abs(la.astype(np.float64) - lb.astype(np.float64)))})")
+
+
+def concat_hists(hists):
+    return jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *hists)

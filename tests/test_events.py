@@ -1,0 +1,213 @@
+"""Failure & demand-response scenario engine (repro.events): oracle tests.
+
+The event layer's contract with the rest of the twin, in test form:
+
+* **Zero-failure bit-identity** — enabling the layer with all hazard
+  rates at zero reproduces the pre-event trajectory bit-for-bit (the
+  acceptance bound is <= 1e-5; we assert exact equality), on the flat
+  plant and on a 4-hall topology.
+* **Energy conservation** — killed jobs move their accrued energy into
+  the energy-not-served ledger; nothing is double-counted and the
+  per-step telemetry sums to the final-ledger totals.
+* **Requeue accounting** — every valid job lands in exactly one
+  terminal/queue state, kills == requeues when requeue is on, and the
+  no-requeue config dismisses instead.
+* **Demand-response** — a cap step with a notice window: the scheduler
+  refuses jobs that would run into the announced event, and admission
+  stops while the cap is in force.
+* **Seeded determinism** — the same failure seed replays the same
+  universe across runs and across the ``simulate`` vs ``simulate_sweep``
+  lanes.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import assert_trees_equal, make_table
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.events import EventConfig
+from repro.grid import signals as gsig
+from repro.launch.simulate import build_system
+
+HORIZON = 120  # engine steps per run
+
+
+def _final_sans_events(final):
+    """Final carry with the event ledger dropped, for comparison against
+    an events-off run (whose ``events`` leaf is None)."""
+    return dataclasses.replace(final, events=None)
+
+
+def _assert_trees_close(a, b, what="", rtol=1e-5, atol=1e-3):
+    """Integer/bool leaves bit-equal, float leaves within the acceptance
+    bound (<= 1e-5 relative: the event layer keeps the math identical but
+    XLA may re-fuse the gated cooling path, moving the last ulp)."""
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (path, la), (_, lb) in zip(fa, fb):
+        la, lb = np.asarray(la), np.asarray(lb)
+        name = f"{what}: leaf {jax.tree_util.keystr(path)}"
+        if np.issubdtype(la.dtype, np.floating):
+            np.testing.assert_allclose(la, lb, rtol=rtol, atol=atol,
+                                       equal_nan=True, err_msg=name)
+        else:
+            np.testing.assert_array_equal(la, lb, err_msg=name)
+
+
+def _zero_rate_case(system, table):
+    scen = T.Scenario.make("fcfs", "easy")
+    t1 = HORIZON * system.dt
+    f_off, h_off = eng.simulate(system, table, scen, 0.0, t1)
+    f_on, h_on = eng.simulate(system, table, scen, 0.0, t1,
+                              events=EventConfig())
+    assert f_on.events is not None
+    assert float(np.asarray(f_on.events.jobs_killed)) == 0.0
+    assert float(np.asarray(f_on.events.node_downtime_s)) == 0.0
+    _assert_trees_close(h_off, h_on, "zero-rate hist")
+    _assert_trees_close(f_off, _final_sans_events(f_on), "zero-rate final")
+
+
+def test_zero_rate_is_bit_identical_flat(small_system, small_table):
+    _zero_rate_case(small_system, small_table)
+
+
+def test_zero_rate_is_bit_identical_4hall():
+    sys4 = build_system("marconi100", scale=64, halls=4)
+    table = make_table(sys4, seed=2)
+    _zero_rate_case(sys4, table)
+
+
+@pytest.fixture(scope="module")
+def outage_run(small_system, small_table):
+    """One run with correlated CDU outages actually firing mid-trajectory
+    (several jobs killed), shared by the conservation/accounting tests."""
+    scen = T.Scenario.make("fcfs", "easy", failure_seed=3.0,
+                           node_fail_rate=5e-5, cdu_fail_rate=2e-5,
+                           failure_corr=0.5, repair_s=900.0)
+    t1 = HORIZON * small_system.dt
+    final, hist = eng.simulate(small_system, small_table, scen, 0.0, t1,
+                               events=EventConfig())
+    assert float(np.asarray(final.events.jobs_killed)) > 0, \
+        "outage fixture drew no failures — tests below would be vacuous"
+    return scen, final, hist
+
+
+def test_energy_conservation_under_cdu_outages(small_system, small_table,
+                                               outage_run):
+    _, final, hist = outage_run
+    dt = small_system.dt
+    # total-energy ledger still integrates the telemetry exactly as in
+    # the failure-free engine
+    np.testing.assert_allclose(
+        float(np.asarray(final.energy_total)),
+        float(np.asarray(hist.power_total, np.float64).sum() * dt),
+        rtol=1e-4)
+    # energy-not-served: killed jobs hand their accrued energy to the
+    # ledger, so surviving job energy + lost energy never exceeds the IT
+    # integral (job accrual excludes the idle floor, hence <=)
+    energy_it = float(np.asarray(final.energy_it))
+    jobs_j = float(np.asarray(final.jenergy, np.float64).sum())
+    lost_j = float(np.asarray(final.events.energy_lost_j))
+    assert lost_j > 0.0
+    assert jobs_j + lost_j <= energy_it * (1.0 + 1e-5)
+    # per-step telemetry sums to the final ledger
+    np.testing.assert_allclose(
+        float(np.asarray(hist.n_killed, np.float64).sum()),
+        float(np.asarray(final.events.jobs_killed)), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(np.asarray(hist.nodes_down, np.float64).sum() * dt),
+        float(np.asarray(final.events.node_downtime_s)), rtol=1e-5)
+
+
+def test_killed_job_requeue_accounting(small_system, small_table,
+                                       outage_run):
+    scen, final, _ = outage_run
+    valid = np.asarray(small_table.valid)
+    js = np.asarray(final.jstate)[valid]
+    known = (T.PENDING, T.QUEUED, T.RUNNING, T.DONE, T.DISMISSED)
+    counts = {s: int((js == s).sum()) for s in known}
+    # every submitted job is in exactly one lifecycle state
+    assert sum(counts.values()) == int(valid.sum())
+    # requeue=True: every kill is a requeue and no job is dismissed by
+    # the event layer (the window-dismissal path is off in this horizon)
+    assert float(np.asarray(final.events.jobs_requeued)) == \
+        float(np.asarray(final.events.jobs_killed))
+    # the no-requeue config loses the killed jobs instead: same draws,
+    # zero requeues, and at least one DISMISSED job appears
+    t1 = HORIZON * small_system.dt
+    f2, _ = eng.simulate(small_system, small_table, scen, 0.0, t1,
+                         events=EventConfig(requeue=False))
+    assert float(np.asarray(f2.events.jobs_killed)) > 0
+    assert float(np.asarray(f2.events.jobs_requeued)) == 0.0
+    js2 = np.asarray(f2.jstate)[valid]
+    assert int((js2 == T.DISMISSED).sum()) > counts[T.DISMISSED]
+
+
+def test_dr_cap_step_honors_notice_window(small_system, small_table):
+    """A demand-response cap far below any job's draw: no job admitted
+    during the notice window may run into the event, and admission stops
+    entirely while the cap is in force."""
+    t1 = HORIZON * small_system.dt
+    announce, notice, duration = 0.25 * t1, 0.25 * t1, 0.4 * t1
+    start_s, end_s = announce + notice, announce + notice + duration
+    floor = small_system.n_nodes * small_system.power.idle_node_w
+    scen = T.Scenario.make("fcfs", "easy",
+                           dr_announce_s=announce, dr_notice_s=notice,
+                           dr_duration_s=duration, dr_cap_w=0.01 * floor)
+    final, hist = eng.simulate(small_system, small_table, scen, 0.0, t1,
+                               signals=gsig.neutral(HORIZON),
+                               events=EventConfig())
+    valid = np.asarray(small_table.valid)
+    start = np.asarray(final.start)[valid]
+    limit = np.asarray(small_table.limit)[valid]
+    started = np.isfinite(start)
+    # notice window honored: nothing that starts in [announce, start_s)
+    # is allowed to still be running when the cap engages
+    in_notice = started & (start >= announce) & (start < start_s)
+    assert not np.any(in_notice & (start + limit > start_s)), \
+        "job admitted during the notice window runs into the DR event"
+    # cap in force: the cap is below every job's projected draw, so no
+    # job starts inside [start_s, end_s)
+    assert not np.any(started & (start >= start_s) & (start < end_s))
+    # sanity: the run is not degenerate — jobs do start before and the
+    # queue picks back up after the event
+    assert np.any(started & (start < announce))
+    assert np.any(started & (start >= end_s))
+    # power telemetry shows the shed: active-window IT power sits well
+    # below the pre-announce plateau
+    sl = slice(int(start_s / small_system.dt) + 1,
+               int(end_s / small_system.dt))
+    pre = np.asarray(hist.power_it, np.float64)[:int(announce /
+                                                     small_system.dt)]
+    act = np.asarray(hist.power_it, np.float64)[sl]
+    assert act.mean() < pre.mean()
+
+
+def test_seeded_determinism_and_sweep_lane_parity(small_system,
+                                                 small_table):
+    scen = T.Scenario.make("fcfs", "easy", failure_seed=5.0,
+                           node_fail_rate=8e-5, cdu_fail_rate=2e-5,
+                           failure_corr=0.5, repair_s=1200.0)
+    t1 = HORIZON * small_system.dt
+    f1, h1 = eng.simulate(small_system, small_table, scen, 0.0, t1,
+                          events=EventConfig())
+    f2, h2 = eng.simulate(small_system, small_table, scen, 0.0, t1,
+                          events=EventConfig())
+    assert_trees_equal(h1, h2, "rerun hist")
+    assert_trees_equal(f1, f2, "rerun final")
+    assert float(np.asarray(f1.events.jobs_killed)) > 0
+    # the vmapped sweep lane replays the same universe row-for-row
+    other = T.Scenario.make("fcfs", "easy", failure_seed=6.0,
+                            node_fail_rate=8e-5)
+    fs, hs = eng.simulate_sweep(small_system, small_table, [scen, other],
+                                0.0, t1, events=EventConfig())
+    np.testing.assert_allclose(np.asarray(hs.power_it)[0],
+                               np.asarray(h1.power_it), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fs.jstate)[0],
+                                  np.asarray(f1.jstate))
+    assert float(np.asarray(fs.events.jobs_killed)[0]) == \
+        float(np.asarray(f1.events.jobs_killed))

@@ -1,0 +1,257 @@
+"""Property battery for the stochastic event layer (repro.events).
+
+The process module promises exact structural invariants — not
+statistical tendencies — because the per-step draws share one stateless
+key and thresholds nest:
+
+* **Rate monotonicity.** For a fixed seed, growing any hazard rate can
+  only grow the failure set: the realized availability mask at the
+  higher rate is a pointwise subset of the lower-rate mask, every step,
+  every entity. Delivered capacity (available node-steps) is therefore
+  non-increasing in rate; completed work at the engine level is checked
+  at the ladder endpoints (requeue reshuffling makes the interior
+  non-monotone in general, the zero-failure run still dominates).
+* **Repair monotonicity.** Same draws, shorter mean repair ⇒ repairs
+  complete no later ⇒ downtime shrinks pointwise.
+* **No resurrection.** ``*_down_until`` never decreases, and the
+  realized mask is exactly ``(t < down_until) | group_down[gid]`` — a
+  failed node cannot come back before its drawn repair completes.
+* **Determinism.** The same scenario realizes the same universe on
+  every call.
+* **Finite scores.** Ride-through stats stay finite/non-NaN under
+  adversarial (absurdly large) hazard and repair draws.
+
+Runs under hypothesis where installed; every property also runs with
+fixed seeds so the battery works without the dev extras (mirroring
+tests/test_serve_properties.py).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import stats as stats_mod
+from repro.core import types as T
+from repro.events import EventConfig, realize_masks
+from repro.events import process as ev_proc
+from repro.grid import signals as gsig
+from repro.systems.config import get_system
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:       # local runs without the dev extras
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Inert stand-in so @given/strategy expressions still import."""
+        def __call__(self, *a, **k):
+            return self
+
+        def __or__(self, other):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return lambda f: f
+
+    settings = given
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="hypothesis not installed")
+
+MSYS = get_system("marconi100").scaled(32)   # mask-level oracle machine
+STEPS = 48                                    # mask-realization horizon
+HORIZON = 120                                 # engine-run horizon (steps)
+
+SEEDS = st.integers(min_value=0, max_value=2 ** 16)
+RATES = st.floats(min_value=0.0, max_value=3e-4,
+                  allow_nan=False, allow_infinity=False)
+
+
+def _scen(seed, rate, corr=0.5, repair_s=1500.0, cell_rate=0.0):
+    return T.Scenario.make(
+        "fcfs", "easy", failure_seed=float(seed), node_fail_rate=rate,
+        cdu_fail_rate=0.5 * rate, cell_fail_rate=cell_rate,
+        failure_corr=corr, repair_s=repair_s)
+
+
+# ---------------------------------------------------------------------------
+# Rate monotonicity: failure sets nest, capacity shrinks.
+# ---------------------------------------------------------------------------
+def _check_rate_subset(seed, lo, hi, corr):
+    a = realize_masks(MSYS, _scen(seed, lo, corr), STEPS)
+    b = realize_masks(MSYS, _scen(seed, hi, corr), STEPS)
+    # pointwise: anything down at the low rate is down at the high rate
+    assert np.all(b["node_avail"] <= a["node_avail"])
+    assert np.all(a["group_down"] <= b["group_down"])
+    # hence delivered capacity is non-increasing in rate
+    assert b["node_avail"].sum() <= a["node_avail"].sum()
+    assert np.all(b["nodes_down"] >= a["nodes_down"])
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS, r1=RATES, r2=RATES,
+       corr=st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+def test_rate_monotonicity_hypothesis(seed, r1, r2, corr):
+    lo, hi = sorted((r1, r2))
+    _check_rate_subset(seed, lo, hi, corr)
+
+
+def test_rate_monotonicity_seeded():
+    for seed in (0, 3, 12345):
+        for lo, hi in ((0.0, 5e-5), (5e-5, 2e-4), (2e-4, 1e-3)):
+            _check_rate_subset(seed, lo, hi, corr=0.5)
+
+
+def test_completed_work_zero_rate_dominates(small_system, small_table):
+    """Engine-level endpoint check: the zero-failure run completes at
+    least as much work as a heavily-failing one, per seed."""
+    t1 = HORIZON * small_system.dt
+    nodes = np.asarray(small_table.nodes, np.float64)
+    wall = np.asarray(small_table.wall, np.float64)
+
+    def work(rate, seed):
+        f, _ = eng.simulate(small_system, small_table,
+                            _scen(seed, rate), 0.0, t1,
+                            events=EventConfig())
+        done = np.asarray(f.jstate) == T.DONE
+        return float((nodes * np.where(done, wall, 0.0)).sum()), \
+            float(np.asarray(f.completed))
+
+    for seed in (3, 5, 11):
+        w0, d0 = work(0.0, seed)
+        w1, d1 = work(5e-4, seed)
+        assert w1 <= w0 and d1 <= d0
+
+
+# ---------------------------------------------------------------------------
+# Repair monotonicity: shorter repairs, less downtime, pointwise.
+# ---------------------------------------------------------------------------
+def _check_repair_subset(seed, rate, rep_lo, rep_hi):
+    a = realize_masks(MSYS, _scen(seed, rate, repair_s=rep_lo), STEPS)
+    b = realize_masks(MSYS, _scen(seed, rate, repair_s=rep_hi), STEPS)
+    assert np.all(b["node_avail"] <= a["node_avail"])
+    assert b["nodes_down"].sum() >= a["nodes_down"].sum()
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS, rate=st.floats(min_value=1e-5, max_value=3e-4),
+       p1=st.floats(min_value=0.0, max_value=7200.0),
+       p2=st.floats(min_value=0.0, max_value=7200.0))
+def test_repair_monotonicity_hypothesis(seed, rate, p1, p2):
+    lo, hi = sorted((p1, p2))
+    _check_repair_subset(seed, rate, lo, hi)
+
+
+def test_repair_monotonicity_seeded():
+    for seed in (1, 7):
+        for lo, hi in ((300.0, 1500.0), (1500.0, 6000.0)):
+            _check_repair_subset(seed, 2e-4, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# No resurrection: down_until never shrinks and the mask is exactly the
+# down_until/group composition.
+# ---------------------------------------------------------------------------
+def _check_no_resurrection(seed, rate, corr, steps=STEPS):
+    scen = _scen(seed, rate, corr, repair_s=900.0, cell_rate=0.2 * rate)
+    gid, hog, _ = ev_proc._maps(MSYS)
+    ev = ev_proc.init_event_state(MSYS)
+    prev_n = np.asarray(ev.node_down_until)
+    prev_g = np.asarray(ev.group_down_until)
+    t = 0.0
+    for k in range(steps):
+        (nu, gu, cu), (unavail, gdown, _) = ev_proc._advance_masks(
+            MSYS, ev, scen, jnp.float32(t), jnp.int32(k))
+        nu_h, gu_h = np.asarray(nu), np.asarray(gu)
+        # repair-complete times only ever grow: a failed entity cannot
+        # come back before its drawn repair time
+        assert np.all(nu_h >= prev_n) and np.all(gu_h >= prev_g)
+        # the realized mask is exactly the down_until composition
+        np.testing.assert_array_equal(
+            np.asarray(unavail), (t < nu_h) | np.asarray(gdown)[gid])
+        np.testing.assert_array_equal(np.asarray(gdown), t < gu_h)
+        prev_n, prev_g = nu_h, gu_h
+        ev = dataclasses.replace(ev, node_down_until=nu,
+                                 group_down_until=gu, cell_down_until=cu)
+        t += MSYS.dt
+
+
+@needs_hypothesis
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, rate=st.floats(min_value=5e-5, max_value=1e-3),
+       corr=st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+def test_no_resurrection_hypothesis(seed, rate, corr):
+    _check_no_resurrection(seed, rate, corr, steps=24)
+
+
+def test_no_resurrection_seeded():
+    _check_no_resurrection(9, 4e-4, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Determinism + finite ride-through scores under adversarial draws.
+# ---------------------------------------------------------------------------
+@needs_hypothesis
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS, rate=RATES)
+def test_masks_deterministic_hypothesis(seed, rate):
+    a = realize_masks(MSYS, _scen(seed, rate), STEPS)
+    b = realize_masks(MSYS, _scen(seed, rate), STEPS)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_masks_deterministic_seeded():
+    a = realize_masks(MSYS, _scen(42, 2e-4), STEPS)
+    b = realize_masks(MSYS, _scen(42, 2e-4), STEPS)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def _check_finite_scores(system, table, seed, rate, corr, repair_s):
+    scen = T.Scenario.make(
+        "fcfs", "easy", failure_seed=float(seed), node_fail_rate=rate,
+        cdu_fail_rate=rate, cell_fail_rate=rate, failure_corr=corr,
+        repair_s=repair_s,
+        dr_announce_s=0.0, dr_notice_s=300.0, dr_duration_s=1800.0,
+        dr_cap_w=1e5)
+    t1 = HORIZON * system.dt
+    final, hist = eng.simulate(system, table, scen, 0.0, t1,
+                               signals=gsig.neutral(HORIZON),
+                               events=EventConfig())
+    s = stats_mod.summarize(system, table, final, hist)
+    ride = {k: v for k, v in s.items()
+            if k.startswith("ride_") or k.endswith("_overheat_s")}
+    assert ride, "ride-through scores missing from summarize()"
+    for k, v in ride.items():
+        assert np.isfinite(v), f"{k} = {v} not finite"
+    assert np.isfinite(np.asarray(hist.power_total)).all()
+
+
+@needs_hypothesis
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS,
+       rate=st.floats(min_value=0.0, max_value=0.5, allow_nan=False),
+       corr=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+       repair_s=st.floats(min_value=0.0, max_value=1e5, allow_nan=False))
+def test_ride_scores_finite_hypothesis(small_system, small_table, seed,
+                                       rate, corr, repair_s):
+    _check_finite_scores(small_system, small_table, seed, rate, corr,
+                         repair_s)
+
+
+def test_ride_scores_finite_seeded(small_system, small_table):
+    # everything-fails-constantly corner: hazard ~ once per node-step,
+    # zero-length repairs, over-unity correlation (clipped inside)
+    _check_finite_scores(small_system, small_table, 17, 0.5, 2.0, 0.0)
+    _check_finite_scores(small_system, small_table, 17, 0.3, 1.0, 1e5)

@@ -24,11 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import (assert_trees_equal, concat_hists, make_case,
+                      make_signals)
 from repro.core import engine as eng
 from repro.core import types as T
 from repro.cooling import weather as wsig
-from repro.datasets.synthetic import WorkloadSpec, generate
-from repro.grid import signals as gsig
 from repro.launch.simulate import build_system
 from repro.serve import session as serve_session
 from repro.serve import snapshot as snap
@@ -36,47 +36,6 @@ from repro.serve import snapshot as snap
 INTERVAL = 8          # engine steps per segment
 N_INTERVALS = 6
 HORIZON = INTERVAL * N_INTERVALS
-
-
-def make_case(system, seed=3, n_jobs=64, pad=80):
-    js = generate(system, WorkloadSpec(
-        n_jobs=n_jobs, duration_s=4 * 3600.0, load=1.2, trace_len=8,
-        n_accounts=8, mean_wall_s=1800.0, seed=seed))
-    js.assign_prepop_placement(0.0, system.n_nodes)
-    return js, js.to_table(pad)
-
-
-def make_signals(system, n_steps, seed=11):
-    """Time-varying carbon + a cap schedule (above the idle floor so the
-    run is throttled sometimes, never starved)."""
-    rng = np.random.default_rng(seed)
-    floor = system.n_nodes * system.power.idle_node_w
-    sig = gsig.constant_signals(n_steps, carbon_gkwh=300.0, price_kwh=0.1)
-    carbon = (300.0 + 200.0 * np.sin(np.linspace(0, 6.0, n_steps))
-              ).astype(np.float32)
-    cap = rng.uniform(1.5 * floor, 6.0 * floor, n_steps).astype(np.float32)
-    return gsig.GridSignals(**{**vars(sig), "carbon_gkwh": carbon,
-                               "cap_w": cap})
-
-
-def assert_trees_equal(a, b, what=""):
-    """Bitwise equality of two pytrees, leaf by leaf, path in the diff."""
-    fa = jax.tree_util.tree_flatten_with_path(a)[0]
-    fb = jax.tree_util.tree_flatten_with_path(b)[0]
-    assert len(fa) == len(fb)
-    for (path, la), (_, lb) in zip(fa, fb):
-        la, lb = np.asarray(la), np.asarray(lb)
-        eq = (np.array_equal(la, lb, equal_nan=True)
-              if np.issubdtype(la.dtype, np.floating)
-              else np.array_equal(la, lb))
-        assert eq, (f"{what}: leaf {jax.tree_util.keystr(path)} diverges "
-                    f"(max |d| = "
-                    f"{np.max(np.abs(la.astype(np.float64) - lb.astype(np.float64)))})")
-
-
-def concat_hists(hists):
-    return jax.tree_util.tree_map(
-        lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *hists)
 
 
 @pytest.fixture(scope="module", params=["flat", "halls"])

@@ -16,7 +16,11 @@ conformance suite:
   ``SubprocessPeer.spawned`` pattern, applied to the serving side);
 * the coalescing executor is a pure throughput optimization: branches
   advanced as one batched sweep are **bitwise identical** to the same
-  branches advanced one at a time.
+  branches advanced one at a time;
+* fault soak (repro.events): a session forked into nominal vs
+  failure-injected branches keeps the nominal branch byte-identical to
+  a never-forked session — injected outages cannot leak across the
+  fork.
 """
 import json
 import pathlib
@@ -27,6 +31,7 @@ import time
 import pytest
 
 from repro.core import types as T
+from repro.events import EventConfig
 from repro.serve.server import TwinServer
 from repro.serve.session import SessionError, TwinSession
 
@@ -224,6 +229,42 @@ def test_coalesced_advance_is_bitwise_identical_to_serial(
         assert rows_a == rows_b, f"branch {b} diverged under batching"
         assert (batched.snapshot(b)["digest"]
                 == serial.snapshot(b)["digest"]), f"branch {b} carry"
+
+
+@pytest.mark.timeout(300)
+def test_fault_soak_nominal_branch_unaffected_by_failure_fork(
+        small_system, small_table):
+    """What-if failure branches are isolated: fork one session into a
+    nominal branch and a failure-injected branch (the fork delta alone
+    turns on the hazard — the session itself runs with the event layer
+    compiled in but all rates at zero), then advance both. The nominal
+    branch must stay byte-identical — rows and snapshot digest — to a
+    session that never forked at all."""
+    def build() -> TwinSession:
+        return TwinSession(small_system, small_table,
+                           T.Scenario.make("fcfs", "easy"), 0.0,
+                           HORIZON_S, interval_steps=INTERVAL,
+                           num_accounts=8, events=EventConfig())
+
+    soaked = build()
+    soaked.advance_many({0: 2})
+    soaked.fork(0, {"node_fail_rate": 2e-4, "cdu_fail_rate": 5e-5,
+                    "failure_corr": 0.5, "failure_seed": 7.0,
+                    "repair_s": 600.0})
+    fault = max(soaked.branches)
+    soaked.advance_many({0: 3, fault: 3})    # one coalesced sweep
+
+    pristine = build()
+    pristine.advance_many({0: 5})
+
+    assert soaked.fetch(0)["rows"] == pristine.fetch(0)["rows"], \
+        "failure fork leaked into the nominal branch"
+    assert soaked.snapshot(0)["digest"] == pristine.snapshot(0)["digest"]
+
+    # and the failure branch is a real failure universe, not a copy
+    rows = soaked.fetch(fault)["rows"]
+    assert sum(r["nodes_down"] for r in rows) > 0
+    assert rows != soaked.fetch(0)["rows"]
 
 
 @pytest.mark.timeout(120)

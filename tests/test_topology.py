@@ -8,11 +8,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from conftest import make_table, with_topology
 from repro.cooling import model as cooling
 from repro.cooling import weather as wx
 from repro.core import engine as eng
 from repro.core import types as T
-from repro.datasets.synthetic import WorkloadSpec, generate
 from repro.kernels.power_topo import ops as topo_ops
 from repro.kernels.power_topo import ref as topo_ref
 from repro.systems.config import FacilityTopology, get_system
@@ -21,13 +21,6 @@ from repro.systems.config import FacilityTopology, get_system
 @pytest.fixture(scope="module")
 def system():
     return get_system("marconi100").scaled(64)
-
-
-def with_topology(cfg, n_halls, n_groups=None, n_cells=None, **over):
-    return dataclasses.replace(
-        cfg, n_groups=n_groups or cfg.n_groups,
-        n_tower_cells=n_cells or cfg.n_tower_cells,
-        topology=FacilityTopology(n_halls=n_halls), **over)
 
 
 # ---------------------------------------------------------------------------
@@ -218,14 +211,6 @@ def test_hier_fused_unbatched_matches_ref():
 # Engine integration: telemetry consistency + the hall-aware scheduler.
 # ---------------------------------------------------------------------------
 T1 = 4 * 3600.0
-
-
-def make_table(system, seed, load=1.4, n_jobs=64):
-    js = generate(system, WorkloadSpec(
-        n_jobs=n_jobs, duration_s=T1, load=load, trace_len=8,
-        n_accounts=8, mean_wall_s=1800.0, seed=seed))
-    js.assign_prepop_placement(0.0, system.n_nodes)
-    return js.to_table(n_jobs + 16)
 
 
 def test_engine_hall_telemetry_consistent(system):

@@ -5,9 +5,9 @@ import copy
 import numpy as np
 import jax
 
+from conftest import make_jobs
 from repro.core import engine as eng
 from repro.core import types as T
-from repro.datasets.synthetic import WorkloadSpec, generate
 from repro.ml import scoring
 from repro.ml import train as ml_train
 from repro.ml.pipeline import MLSchedulerModel, attach_basis, attach_scores
@@ -18,9 +18,8 @@ T1 = 3600.0
 
 
 def _fitted(seed=7, n_jobs=90, load=1.6):
-    js = generate(SYS, WorkloadSpec(n_jobs=n_jobs, duration_s=T1,
-                                    load=load, trace_len=8, n_accounts=8,
-                                    seed=seed))
+    js = make_jobs(SYS, seed=seed, n_jobs=n_jobs, load=load,
+                   duration_s=T1, mean_wall_s=3600.0, prepop=False)
     model = MLSchedulerModel.fit(js, k=3, n_trees=4, depth=4, seed=0)
     return js, model
 
