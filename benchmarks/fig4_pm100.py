@@ -3,7 +3,12 @@ fcfs-easy vs priority-ffbf — system power and utilization.
 
 Claims checked: rescheduled runs reach higher utilization with backfill;
 backfilled policies smooth the aggregate load (smaller power swing than
-fcfs-nobf)."""
+fcfs-nobf).
+
+``trace=`` swaps the synthetic PM100 workload for a *real* ingested job
+table (repro.traces) — with telemetry, the sweep runs in replay-power
+mode (measured per-job power gathered per step) so Fig. 4 compares
+policies over the recorded load instead of the calibrated model."""
 from __future__ import annotations
 
 import numpy as np
@@ -12,21 +17,29 @@ from benchmarks.common import hist_stats, save, timed
 from repro.core import engine as eng
 from repro.core import stats as stats_mod
 from repro.core import types as T
-from repro.datasets.loaders import load_marconi100
+from repro.datasets.loaders import load_marconi100, load_trace
 from repro.systems.config import get_system
 
 POLICIES = [("replay", "none"), ("fcfs", "none"), ("fcfs", "easy"),
             ("priority", "first-fit")]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, trace=None):
     sys_ = get_system("marconi100")
-    js = load_marconi100(n_jobs=700 if quick else 2000,
-                         days=0.75 if quick else 1.5, seed=2)
-    t0 = 2 * 3600.0
-    t1 = t0 + (6 * 3600.0 if quick else 17 * 3600.0)
+    replay_power = False
+    if trace:
+        js = load_trace(trace, prof_dt=sys_.prof_dt)
+        replay_power = js.power_profile is not None
+        t0 = 0.0
+        t1 = min(float(js.rec_end[np.isfinite(js.rec_end)].max()),
+                 6 * 3600.0 if quick else 17 * 3600.0)
+    else:
+        js = load_marconi100(n_jobs=700 if quick else 2000,
+                             days=0.75 if quick else 1.5, seed=2)
+        t0 = 2 * 3600.0
+        t1 = t0 + (6 * 3600.0 if quick else 17 * 3600.0)
     js.assign_prepop_placement(t0, sys_.n_nodes)
-    table = js.to_table()
+    table = js.to_table(replay_power=replay_power)
     scens = [T.Scenario.make(p, b) for p, b in POLICIES]
     (final, hist), wall = timed(eng.simulate_sweep, sys_, table, scens,
                                 t0, t1)

@@ -1,0 +1,113 @@
+"""Trace-ingestion throughput: job-table parse rate, cached-NPZ restart
+speedup, and telemetry-replay engine rate — the repro.traces companion
+to ``engine_throughput.py``.
+
+The ingestion layer's perf claims (docs/datasets.md): parquet job tables
+parse at O(100k) jobs/s, a content-addressed NPZ cache makes the second
+load of a raw telemetry tree much cheaper than the first, and replay
+mode (measured ``power_profile`` gathered per step) keeps engine
+throughput in the same regime as the synthetic power model. The smoke
+mode measures all three on the committed golden fixtures and writes
+``BENCH_ingest.json`` (``*_per_s`` leaves + backend meta) for the CI
+perf-trajectory gate (tools/bench_compare.py vs
+benchmarks/baselines/ingest_history.ndjson).
+"""
+from __future__ import annotations
+
+import pathlib
+import shutil
+import tempfile
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/ingest_bench.py`
+    import sys
+    _root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core import types as T
+from repro.systems.config import get_system
+from repro.traces import load_telemetry, read_job_table, source_digest
+
+DATA = pathlib.Path(__file__).resolve().parents[1] / "tests" / "data"
+HORIZON = 240  # replay engine steps per timed run
+
+
+def smoke(bench_json: str = "BENCH_ingest.json", n_parses: int = 20):
+    rows = []
+
+    # -- job-table parse rate ----------------------------------------------
+    js = read_job_table(DATA / "pm100_small.parquet")   # warm pandas/arrow
+    t0 = time.perf_counter()
+    for _ in range(n_parses):
+        js = read_job_table(DATA / "pm100_small.parquet")
+    wall = time.perf_counter() - t0
+    rows.append({"name": "ingest/parse-parquet", "wall_s": wall,
+                 "jobs_per_s": n_parses * len(js) / wall,
+                 "jobs": len(js), "parses": n_parses})
+
+    # -- cached-NPZ restart speedup ----------------------------------------
+    cache = pathlib.Path(tempfile.mkdtemp(prefix="ingest_bench_"))
+    try:
+        t0 = time.perf_counter()
+        tjs = load_telemetry(DATA / "joblive", DATA / "jobprofile",
+                             prof_dt=20.0, cache_dir=cache)
+        cold_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(n_parses):
+            load_telemetry(DATA / "joblive", DATA / "jobprofile",
+                           prof_dt=20.0, cache_dir=cache)
+        hit_wall = (time.perf_counter() - t0) / n_parses
+        digest = source_digest(DATA / "joblive", DATA / "jobprofile")
+        rows.append({"name": "ingest/telemetry-cache",
+                     "wall_s": cold_wall,
+                     "cold_parses_per_s": 1.0 / cold_wall,
+                     "cached_loads_per_s": 1.0 / hit_wall,
+                     "cache_speedup": cold_wall / hit_wall,
+                     "digest": digest[:16]})
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+
+    # -- replay engine rate: measured profiles gathered per step ------------
+    system = get_system("marconi100").scaled(64)
+    scen = T.Scenario.make("fcfs", "easy")
+    t1 = HORIZON * system.dt
+    for label, table in (
+            ("model", tjs.to_table(len(tjs) + 8)),
+            ("replay", tjs.to_table(len(tjs) + 8, replay_power=True))):
+        final, _ = eng.simulate(system, table, scen, 0.0, t1)  # compile
+        t0 = time.perf_counter()
+        final, _ = eng.simulate(system, table, scen, 0.0, t1)
+        np.asarray(final.energy_total)                         # sync
+        wall = time.perf_counter() - t0
+        rows.append({"name": f"ingest/engine-{label}", "wall_s": wall,
+                     "steps_per_s": HORIZON / wall, "steps": HORIZON})
+
+    for row in rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if k not in ("name",))
+        print(f"{row['name']},{derived}")
+    if bench_json:
+        import json
+
+        from benchmarks.common import bench_meta
+        payload = {r["name"]: {k: v for k, v in r.items() if k != "name"}
+                   for r in rows}
+        payload["meta"] = bench_meta()
+        with open(bench_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {bench_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI canary (currently the only mode)")
+    ap.add_argument("--bench-json", default="BENCH_ingest.json")
+    args = ap.parse_args()
+    smoke(args.bench_json)

@@ -6,7 +6,9 @@ Main loop per step (paper's four well-defined steps):
   (3) schedule    -- policy sort + bounded admission (repro.core.scheduler),
                      cap-aware when a power-cap schedule is active and
                      thermally throttled when cooling loses its setpoint;
-  (4) tick        -- power model -> DVFS cap enforcement (repro.grid) ->
+  (4) tick        -- power model (or measured-telemetry replay when the
+                     table carries a ``power_profile`` channel —
+                     repro.traces) -> DVFS cap enforcement (repro.grid) ->
                      conversion losses -> transient cooling loop
                      (repro.cooling, weather-driven) -> telemetry row;
                      advance time.

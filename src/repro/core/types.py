@@ -109,6 +109,15 @@ class JobTable:
     # (repro.ml.train). ``None`` = no parameterized scoring (legacy
     # ``score`` column only).
     ml_basis: jnp.ndarray | None = None  # f32[J, K] or None
+    # Measured per-node power replay (repro.traces, paper contribution 2):
+    # recorded telemetry sampled at ``SystemConfig.prof_dt``, gathered by
+    # the scan *instead of* evaluating the ``power_prof`` model whenever a
+    # job's row carries a measurement — a negative sample is the
+    # "no measurement" sentinel, so profile-less jobs (and padded rows,
+    # filled with -1) fall back to the model bit-for-bit. ``None`` =
+    # replay mode off, the compile-time fast path: the gather vanishes
+    # and the graph is bit-identical to the pre-traces engine.
+    power_profile: jnp.ndarray | None = None  # f32[J, Q] measured W, or None
 
     @property
     def num_jobs(self) -> int:

@@ -41,6 +41,10 @@ class JobSet:
     ml_basis: np.ndarray | None = None    # f32[J, K] scoring basis
     #   (repro.ml.scoring.basis of the predicted features; lets the table
     #    score jobs under any Scenario.alpha — see ml.pipeline.attach_basis)
+    power_profile: np.ndarray | None = None  # f32[J, Q] measured per-node W
+    #   (repro.traces telemetry replay: negative samples mean "no
+    #    measurement" — those jobs fall back to ``power_prof``; the field
+    #    only reaches the compiled table via to_table(replay_power=True))
     name: str = "jobset"
 
     def __len__(self) -> int:
@@ -63,7 +67,8 @@ class JobSet:
                       self.account[mask], self.rec_start[mask],
                       self.power_prof[mask], self.util_prof[mask],
                       pick(self.first_node), pick(self.score),
-                      pick(self.ml_basis), self.name)
+                      pick(self.ml_basis), pick(self.power_profile),
+                      self.name)
 
     def assign_prepop_placement(self, t0: float, n_nodes: int) -> None:
         """Give contiguous spans to jobs running at t0 (prepopulation)."""
@@ -78,7 +83,8 @@ class JobSet:
         self.first_node = first
 
     def to_table(self, pad_to: int | None = None,
-                 compact_time: bool = False) -> T.JobTable:
+                 compact_time: bool = False,
+                 replay_power: bool = False) -> T.JobTable:
         """Pad and pack into the fixed-shape ``JobTable`` the compiled
         engine consumes (times -> f32 s, power -> f32 W, counts -> i32).
         Padded rows are marked invalid; ``ml_basis`` (if attached) pads
@@ -94,7 +100,15 @@ class JobSet:
         when a column is fractional or too large, so the flag is always
         safe; the engine's weak-typing promotes int32 against f32
         exactly in this range, which the bit-compat test asserts
-        end-to-end."""
+        end-to-end.
+
+        ``replay_power=True`` carries the measured ``power_profile``
+        channel (repro.traces telemetry) into the table, padded with the
+        -1 "no measurement" sentinel so padded rows — like profile-less
+        jobs — fall back to the ``power_prof`` model. Off by default:
+        the table keeps its pre-traces structure (``power_profile is
+        None``) and every compiled graph stays bit-identical. Requires
+        the JobSet to actually carry measurements."""
         J = len(self)
         Jp = pad_to or J
         assert Jp >= J, f"pad_to={Jp} < {J} jobs"
@@ -135,6 +149,14 @@ class JobSet:
         basis = None if self.ml_basis is None else \
             pad2(self.ml_basis, 0.0, np.float32,
                  width=self.ml_basis.shape[1])
+        measured = None
+        if replay_power:
+            if self.power_profile is None:
+                raise ValueError(
+                    "replay_power=True but this JobSet carries no measured "
+                    "power_profile (load one via repro.traces)")
+            measured = pad2(self.power_profile, -1.0, np.float32,
+                            width=self.power_profile.shape[1])
         valid = np.zeros((Jp,), bool)
         valid[:J] = True
         return T.JobTable(
@@ -151,6 +173,7 @@ class JobSet:
             util_prof=pad2(self.util_prof, 0.0, np.float32),
             valid=jnp.asarray(valid),
             ml_basis=basis,
+            power_profile=measured,
         )
 
     # -- pre-submission feature matrix for the ML pipeline (paper §4.4) -----

@@ -110,11 +110,17 @@ def cdu_update_ref(q: jnp.ndarray, t_supply: jnp.ndarray, mdot: jnp.ndarray,
       temperature and slewed flow.
     """
     # valve: flow slews toward the demand that holds the design ΔT. The
-    # slew factors are clipped at 1 (static Python min — dt and tau are
-    # compile-time scalars) so a coarse engine dt > tau snaps to the
-    # target instead of overshooting the [min, max] flow bounds
-    a_valve = min(p.dt / p.tau_valve_s, 1.0)
-    a_hx = min(p.dt / p.tau_hx_s, 1.0)
+    # slew factors are clipped at 1 (static Python min when dt and tau
+    # are compile-time scalars — the engine path; traced min when a tau
+    # is a calibration candidate, see repro.traces.calibrate) so a
+    # coarse engine dt > tau snaps to the target instead of overshooting
+    # the [min, max] flow bounds
+    def _a(tau):
+        if isinstance(tau, (int, float)):
+            return min(p.dt / tau, 1.0)
+        return jnp.minimum(p.dt / tau, 1.0)
+    a_valve = _a(p.tau_valve_s)
+    a_hx = _a(p.tau_hx_s)
     dem = jnp.clip(q / (p.cp_j_kg_k * p.delta_t_design_c),
                    p.mdot_min_kg_s, p.mdot_max_kg_s)
     mdot_new = mdot + (dem - mdot) * a_valve

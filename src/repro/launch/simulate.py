@@ -14,6 +14,13 @@ docs/ml-scheduling.md): ES-optimize the scoring alpha against batched twin
 rollouts, e.g. ``python -m repro.launch.simulate train --smoke``. A trained
 checkpoint feeds back into evaluation via ``--policy ml --ml-alpha
 <checkpoint.json or comma floats>``.
+
+Real traces (repro.traces, docs/datasets.md): ``--trace`` ingests a
+published job table or a joblive/jobprofile telemetry dump in place of
+the synthetic dataset, ``--replay-power`` plays measured power back
+verbatim, ``--weather-trace`` drives the cooling tower from recorded
+ambient conditions, and subcommand ``calibrate`` fits the cooling-plant
+parameters to recorded facility telemetry.
 """
 from __future__ import annotations
 
@@ -90,6 +97,11 @@ def main(argv=None):
         # session with snapshot/fork branching over a socket
         from repro.serve import cli as serve_cli
         return serve_cli.main(argv[1:])
+    if argv[:1] == ["calibrate"]:
+        # cooling-plant calibration against recorded telemetry
+        # (repro.traces.calibrate, docs/datasets.md)
+        from repro.traces import calibrate as calibrate_cli
+        return calibrate_cli.main(argv[1:])
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--system", default="marconi100")
     ap.add_argument("--scheduler", default="default",
@@ -107,6 +119,23 @@ def main(argv=None):
     ap.add_argument("--jobs", type=int, default=1000)
     ap.add_argument("--days", type=float, default=None,
                     help="dataset horizon to generate (days)")
+    # real-trace ingestion (repro.traces, docs/datasets.md)
+    ap.add_argument("--trace", nargs="+", default=None, metavar="PATH",
+                    help="replace the synthetic --system dataset with a "
+                         "real trace: one job table (.parquet/.csv), one "
+                         "cached trace .npz, or a joblive dir followed by "
+                         "a jobprofile dir (RAPS-style telemetry)")
+    ap.add_argument("--trace-cache", default=None, metavar="DIR",
+                    help="content-addressed NPZ cache directory for "
+                         "parsed telemetry (repeat runs skip the CSVs)")
+    ap.add_argument("--replay-power", action="store_true",
+                    help="replay measured per-node power profiles from "
+                         "the trace instead of the power model (jobs "
+                         "without a measurement keep the model)")
+    ap.add_argument("--weather-trace", default=None, metavar="FILE",
+                    help="measured weather CSV/NPZ (timestamp + wet-bulb "
+                         "or dry-bulb/RH) driving the cooling tower "
+                         "ambient (repro.traces.weather)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=0,
                     help="scale the system to N nodes (CPU-friendly)")
@@ -209,8 +238,17 @@ def main(argv=None):
     t0 = _parse_time(args.fastforward)
     t1 = t0 + _parse_time(args.time)
     days = args.days or max((t1 / 86400.0) * 1.25, 0.5)
-    js = loaders.load(args.system, n_jobs=args.jobs, days=days,
-                      seed=args.seed)
+    if args.trace:
+        js = loaders.load_trace(args.trace, prof_dt=sys_.prof_dt,
+                                cache_dir=args.trace_cache)
+    else:
+        js = loaders.load(args.system, n_jobs=args.jobs, days=days,
+                          seed=args.seed)
+    weather = None
+    if args.weather_trace:
+        from repro.traces.weather import load_weather
+        n_steps = int(round((t1 - t0) / sys_.dt))
+        weather = load_weather(args.weather_trace, n_steps, sys_.dt, t0=t0)
     if args.policy == "ml":
         alpha = None
         if args.ml_alpha:
@@ -226,7 +264,7 @@ def main(argv=None):
         model = MLSchedulerModel.fit(js, k=5, alpha=alpha)
         attach_scores(js, model)
     js.assign_prepop_placement(t0, sys_.n_nodes)
-    table = js.to_table()
+    table = js.to_table(replay_power=args.replay_power)
 
     accounts = None
     if args.accounts_json:
@@ -252,10 +290,16 @@ def main(argv=None):
                       "failure_rate_per_day": args.failure_rate,
                       "failure_seed": args.failure_seed,
                       "dr_cap_mw": args.dr_cap_mw,
+                      "trace": args.trace,
+                      "replay_power": args.replay_power,
+                      "weather_trace": args.weather_trace,
                       "t0_s": t0, "duration_s": t1 - t0},
             seed=args.seed, jobs=js,
             extra={"env_preset": launch_env.report(
-                "sweep" if args.sweep else "throughput")})
+                "sweep" if args.sweep else "throughput"),
+                   # content digests pin exactly which trace bytes
+                   # produced this run (repro.traces provenance)
+                   **_trace_digests(args)})
         recorder.event("run_start")
     timer = obs.SpanTimer(listener=recorder.span_listener
                           if recorder else None)
@@ -266,7 +310,7 @@ def main(argv=None):
     wall0 = time.perf_counter()
     with obs.use(timer):
         runs, bridge = _run(args, sys_, js, table, accounts, t0, t1,
-                            cells_offline, recorder)
+                            cells_offline, recorder, weather)
     wall = time.perf_counter() - wall0
     if args.profile:
         import jax
@@ -328,6 +372,18 @@ def main(argv=None):
     rep.flush_json()
 
 
+def _trace_digests(args) -> dict:
+    """Content digests of any real traces feeding this run, for the
+    manifest — empty when the run is fully synthetic."""
+    from repro.traces import source_digest
+    out = {}
+    if args.trace:
+        out["trace_digest"] = source_digest(*args.trace)
+    if args.weather_trace:
+        out["weather_trace_digest"] = source_digest(args.weather_trace)
+    return out
+
+
 def _failure_kwargs(args, t0):
     """Scenario knob kwargs for the failure/DR layer from CLI flags.
 
@@ -355,14 +411,24 @@ def _failure_kwargs(args, t0):
     return kw
 
 
-def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
+def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder,
+         weather=None):
     """Dispatch one CLI invocation to the right engine path.
 
     Returns (runs, bridge): ``runs`` is a list of ((policy, backfill),
     final, hist) and ``bridge`` the SchedulerBridge when an external
-    coupling ran in plugin mode (its counters feed the manifest)."""
+    coupling ran in plugin mode (its counters feed the manifest).
+    ``weather`` (a measured trace, --weather-trace) reaches every
+    compiled path; the external-scheduler bridges do not model ambient
+    conditions, so combining them is a loud error rather than a
+    silently-ignored flag."""
     backfill_cli = args.backfill or "none"
     bridge = None
+    if weather is not None and (args.external_cmd or args.external_socket
+                                or args.scheduler in ("fastsim",
+                                                      "scheduleflow")):
+        raise SystemExit("--weather-trace is not supported with external "
+                         "scheduler coupling")
     fail_kw = _failure_kwargs(args, t0)
     events_cfg = None
     dr_signals = None
@@ -440,6 +506,7 @@ def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
         finals, hists = eng.simulate_sweep_sharded(sys_, table, scens,
                                                    t0, t1, accounts,
                                                    signals=dr_signals,
+                                                   weather=weather,
                                                    events=events_cfg)
         import jax
         runs = [((p, b),
@@ -452,19 +519,22 @@ def _run(args, sys_, js, table, accounts, t0, t1, cells_offline, recorder):
         scen = T.Scenario.make(args.policy, backfill_cli,
                                cells_offline=cells_offline, **fail_kw)
         final, hist = eng.simulate(sys_, table, scen, t0, t1, accounts,
-                                   signals=dr_signals, events=events_cfg)
+                                   signals=dr_signals, weather=weather,
+                                   events=events_cfg)
         runs = [((args.policy, backfill_cli), final, hist)]
     elif args.cells_offline:
         # maintenance knob is traced: run the traced-scenario engine
         scen = T.Scenario.make(args.policy, backfill_cli,
                                cells_offline=cells_offline)
-        final, hist = eng.simulate(sys_, table, scen, t0, t1, accounts)
+        final, hist = eng.simulate(sys_, table, scen, t0, t1, accounts,
+                                   weather=weather)
         runs = [((args.policy, backfill_cli), final, hist)]
     else:
         # single-policy runs take the static fast path (policy/backfill are
         # compile-time constants; docs/architecture.md)
         final, hist = eng.simulate_static(sys_, table, args.policy,
-                                          backfill_cli, t0, t1, accounts)
+                                          backfill_cli, t0, t1, accounts,
+                                          weather=weather)
         runs = [((args.policy, backfill_cli), final, hist)]
     return runs, bridge
 

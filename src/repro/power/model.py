@@ -6,6 +6,13 @@ Per-node IT power comes either from the job's recorded per-node power trace
 (trace datasets: Frontier, Marconi100) with last-observation-carried-forward
 for missing samples, or from a scalar per-job average (summary datasets:
 Fugaku, Lassen, Adastra). Idle nodes draw ``idle_node_w``.
+
+Telemetry replay (repro.traces): when the table carries a measured
+``power_profile`` channel, jobs with a measurement play it back verbatim —
+the scan gathers the recorded sample at the job's work-time index instead
+of evaluating the ``power_prof`` model — while profile-less jobs (negative
+sentinel rows) keep the model bit-for-bit. ``power_profile is None`` is
+the compile-time "replay off" fast path.
 """
 from __future__ import annotations
 
@@ -27,10 +34,21 @@ def job_node_power_elapsed(table: T.JobTable, jstate: jnp.ndarray,
     LOCF semantics (paper §3.2.2): the profile index is clamped into
     [0, P-1], so times before the first / after the last sample reuse the
     nearest recorded value.
+
+    Replay mode: a measured ``table.power_profile`` sample (same clamped
+    work-time indexing, at its own width Q) overrides the model wherever
+    one exists — the -1 sentinel marks "no measurement", so the per-job
+    switch is traced and profile-less jobs are untouched.
     """
     P = table.prof_len
     idx = jnp.clip((elapsed / prof_dt).astype(jnp.int32), 0, P - 1)
     p = jnp.take_along_axis(table.power_prof, idx[:, None], axis=1)[:, 0]
+    if table.power_profile is not None:
+        Q = table.power_profile.shape[1]
+        qidx = jnp.clip((elapsed / prof_dt).astype(jnp.int32), 0, Q - 1)
+        m = jnp.take_along_axis(table.power_profile, qidx[:, None],
+                                axis=1)[:, 0]
+        p = jnp.where(m >= 0.0, m, p)
     running = jstate == T.RUNNING
     return jnp.where(running, p, 0.0)
 

@@ -1,0 +1,343 @@
+"""Calibrate the transient cooling plant against recorded telemetry.
+
+The cooling twin (repro.cooling.model) has a handful of lumped
+parameters nobody measures directly — HX conductance ``ua_w_k``, loop
+time constants ``tau_hx_s`` / ``tower_tau_s``, the fan-staging threshold
+``basin_margin_c``. This module fits them: drive the plant with a
+*replayed* power trace (measured IT heat per step, repro.traces
+telemetry) and the recorded ambient wet-bulb, and least-squares the
+simulated facility observables (basin temperature, PUE) against the
+recorded ones over full rollouts.
+
+The forward model is ONE jitted ``lax.scan``: the candidate parameters
+enter as traced scalars via ``dataclasses.replace`` on the (frozen)
+``CoolingConfig`` — every fitted field is only ever used in jnp
+arithmetic, so swapping tracers in costs nothing and scipy's
+``least_squares`` iterates without a single recompile.
+
+The result is a ``FittedParams`` JSON: the fitted values plus a
+*residual envelope* (per-channel RMSE on the calibration window). The
+envelope is a regression gate — tests/test_calibrate.py recomputes the
+residuals of the committed fixture and fails if they widened, so a
+physics change that silently degrades calibration cannot land.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.cooling import model as cooling
+from repro.systems.config import CoolingConfig
+from repro.traces.errors import TraceError
+
+# Fittable CoolingConfig fields and their search bounds (physical, wide).
+FIT_BOUNDS: dict[str, tuple[float, float]] = {
+    "ua_w_k": (1e4, 1e7),
+    "tau_hx_s": (10.0, 2000.0),
+    "tau_valve_s": (5.0, 600.0),
+    "basin_margin_c": (0.5, 10.0),
+    "tower_tau_s": (60.0, 3600.0),
+}
+DEFAULT_FIT = ("ua_w_k", "tau_hx_s", "basin_margin_c")
+
+# Residual scales: one unit of weighted residual ~ "equally bad" across
+# channels (1 °C of water-temperature error vs 0.01 of PUE error).
+# Supply/return are the channels that actually observe ``ua_w_k`` /
+# ``tau_hx_s`` (the HX sits between basin and supply; the basin only
+# sees the heat passthrough), basin + PUE observe the tower-side
+# parameters — a useful fit wants at least one from each side.
+_SCALES = {"t_basin_c": 1.0, "t_supply_c": 1.0, "t_return_c": 1.0,
+           "pue": 0.01}
+
+
+@dataclasses.dataclass
+class FittedParams:
+    """A calibration result: fitted values + its regression envelope."""
+    params: dict          # fitted CoolingConfig fields -> value
+    envelope: dict        # channel -> RMSE on the calibration window
+    cost: float           # final least-squares cost (0.5 * sum r^2)
+    meta: dict            # n_steps / dt / discard / channels / digests
+
+    def save(self, path: str | pathlib.Path) -> None:
+        blob = dataclasses.asdict(self)
+        pathlib.Path(path).write_text(json.dumps(blob, indent=2,
+                                                 sort_keys=True) + "\n")
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "FittedParams":
+        try:
+            blob = json.loads(pathlib.Path(path).read_text())
+            return cls(params=blob["params"], envelope=blob["envelope"],
+                       cost=float(blob["cost"]), meta=blob["meta"])
+        except (OSError, KeyError, ValueError) as e:
+            raise TraceError(f"cannot read fitted-params JSON "
+                             f"{path}: {e}") from e
+
+
+def _as_group_heat(heat_w: np.ndarray, n_groups: int) -> jnp.ndarray:
+    """f32[S] total IT power or f32[S, G] per-group heat -> f32[S, G]."""
+    h = np.asarray(heat_w, np.float32)
+    if h.ndim == 1:
+        h = np.repeat(h[:, None] / n_groups, n_groups, axis=1)
+    if h.ndim != 2 or h.shape[1] != n_groups:
+        raise TraceError(f"heat trace must be [S] or [S, {n_groups}], "
+                         f"got {h.shape}")
+    if not np.isfinite(h).all() or (h < 0).any():
+        raise TraceError("heat trace has non-finite or negative samples")
+    return jnp.asarray(h)
+
+
+def make_forward(cfg: CoolingConfig, names: tuple[str, ...],
+                 group_heat_w: jnp.ndarray, dt: float,
+                 t_wetbulb_c: jnp.ndarray):
+    """Build the jitted rollout: theta f64[len(names)] -> per-step
+    observables {t_basin_c: f32[S], pue: f32[S]}. The parameters are
+    traced, so every candidate reuses one compiled graph."""
+    for n in names:
+        if n not in FIT_BOUNDS:
+            raise TraceError(f"unknown fittable parameter {n!r} "
+                             f"(know: {sorted(FIT_BOUNDS)})")
+    wb = jnp.asarray(t_wetbulb_c, jnp.float32)
+
+    @jax.jit
+    def forward(theta):
+        c = dataclasses.replace(
+            cfg, **{n: theta[i].astype(jnp.float32)
+                    for i, n in enumerate(names)})
+
+        def body(state, inp):
+            q, w = inp
+            new, out = cooling.step(c, state, q, dt, t_wetbulb_c=w)
+            p_it = jnp.sum(q)
+            return new, (out.t_basin, out.t_supply_max,
+                         out.t_tower_return,
+                         cooling.pue(p_it, 0.0, out.p_cooling))
+        _, (tb, ts, tr, pu) = jax.lax.scan(body, cooling.init_state(cfg),
+                                           (group_heat_w, wb))
+        return {"t_basin_c": tb, "t_supply_c": ts, "t_return_c": tr,
+                "pue": pu}
+    return forward
+
+
+def simulate_plant(cfg: CoolingConfig, heat_w: np.ndarray, dt: float,
+                   t_wetbulb_c: np.ndarray,
+                   overrides: dict | None = None) -> dict:
+    """Roll the cooling plant over a heat + weather trace -> observables
+    as numpy arrays. ``overrides`` replaces fittable CoolingConfig
+    fields — used both to generate synthetic calibration truth in tests
+    and to evaluate a fit's residuals."""
+    overrides = overrides or {}
+    names = tuple(overrides)
+    heat = _as_group_heat(heat_w, cfg.n_groups)
+    if len(t_wetbulb_c) != heat.shape[0]:
+        raise TraceError(f"weather ({len(t_wetbulb_c)}) and heat "
+                         f"({heat.shape[0]}) traces disagree on steps")
+    fwd = make_forward(cfg, names, heat, dt, t_wetbulb_c)
+    theta = jnp.asarray([float(overrides[n]) for n in names], jnp.float32)
+    return {k: np.asarray(v) for k, v in fwd(theta).items()}
+
+
+def _residuals(sim: dict, obs: dict, discard: int) -> np.ndarray:
+    rs = []
+    for ch, scale in _SCALES.items():
+        if ch in obs:
+            r = (np.asarray(sim[ch], np.float64)[discard:]
+                 - np.asarray(obs[ch], np.float64)[discard:]) / scale
+            rs.append(r)
+    if not rs:
+        raise TraceError(f"telemetry carries none of the calibration "
+                         f"channels {sorted(_SCALES)}")
+    return np.concatenate(rs)
+
+
+def _envelope(sim: dict, obs: dict, discard: int) -> dict:
+    env = {}
+    for ch in _SCALES:
+        if ch in obs:
+            r = (np.asarray(sim[ch], np.float64)[discard:]
+                 - np.asarray(obs[ch], np.float64)[discard:])
+            env[f"{ch}_rmse"] = float(np.sqrt(np.mean(r * r)))
+    return env
+
+
+def calibrate(cfg: CoolingConfig, heat_w: np.ndarray, dt: float,
+              t_wetbulb_c: np.ndarray, obs: dict,
+              fit: tuple[str, ...] = DEFAULT_FIT,
+              discard_frac: float = 0.1,
+              meta: dict | None = None) -> FittedParams:
+    """Fit ``fit`` CoolingConfig fields to recorded facility telemetry.
+
+    Args:
+      cfg: the plant, holding the initial guess in its current values.
+      heat_w: replayed IT heat, f32[S] total or f32[S, G] per group (W).
+      dt: step (s) — both traces and the plant advance on this grid.
+      t_wetbulb_c: recorded ambient wet-bulb, f32[S] (°C).
+      obs: recorded observables — any of ``t_basin_c`` (f32[S], °C) and
+        ``pue`` (f32[S]); at least one required.
+      fit: which fields to fit (subset of ``FIT_BOUNDS``).
+      discard_frac: leading fraction of the window excluded from the
+        residual (plant spin-up from the idle initial condition).
+      meta: extra provenance (trace digests, system name) stored in the
+        result.
+
+    Returns:
+      ``FittedParams`` — fitted values, residual envelope (per-channel
+      RMSE), final cost and provenance.
+    """
+    from scipy.optimize import least_squares
+    heat = _as_group_heat(heat_w, cfg.n_groups)
+    S = heat.shape[0]
+    if len(t_wetbulb_c) != S:
+        raise TraceError(f"weather ({len(t_wetbulb_c)}) and heat ({S}) "
+                         f"traces disagree on steps")
+    for ch in obs:
+        if ch in _SCALES and len(obs[ch]) != S:
+            raise TraceError(f"telemetry channel {ch!r} has "
+                             f"{len(obs[ch])} steps, heat has {S}")
+    discard = int(S * discard_frac)
+    fwd = make_forward(cfg, tuple(fit), heat, dt, t_wetbulb_c)
+
+    x0 = np.array([float(getattr(cfg, n)) for n in fit])
+    lo = np.array([FIT_BOUNDS[n][0] for n in fit])
+    hi = np.array([FIT_BOUNDS[n][1] for n in fit])
+
+    def f(theta):
+        sim = fwd(jnp.asarray(theta, jnp.float32))
+        return _residuals({k: np.asarray(v) for k, v in sim.items()},
+                          obs, discard)
+
+    # diff_step must clear the f32 forward's quantization noise — the
+    # default (~sqrt(eps) relative) produces an identically-zero numeric
+    # Jacobian and the fit never leaves x0
+    res = least_squares(f, np.clip(x0, lo, hi), bounds=(lo, hi),
+                        x_scale=np.maximum(np.abs(x0), 1.0),
+                        diff_step=1e-3, method="trf")
+    params = {n: float(v) for n, v in zip(fit, res.x)}
+    sim = {k: np.asarray(v)
+           for k, v in fwd(jnp.asarray(res.x, jnp.float32)).items()}
+    return FittedParams(
+        params=params,
+        envelope=_envelope(sim, obs, discard),
+        cost=float(res.cost),
+        meta={"n_steps": int(S), "dt": float(dt), "discard": discard,
+              "fit": list(fit), "channels": sorted(set(obs) & set(_SCALES)),
+              **(meta or {})})
+
+
+def check_envelope(fitted: FittedParams, cfg: CoolingConfig,
+                   heat_w: np.ndarray, dt: float,
+                   t_wetbulb_c: np.ndarray, obs: dict,
+                   slack: float = 1.05) -> dict:
+    """The regression gate: re-simulate with the committed fitted params
+    and compare fresh residuals against the committed envelope.
+
+    Returns the fresh per-channel RMSEs; raises ``TraceError`` if any
+    channel widened beyond ``envelope * slack`` (the documented 5%
+    numerical slack — jit/toolchain noise, not physics drift)."""
+    sim = simulate_plant(cfg, heat_w, dt, t_wetbulb_c,
+                         overrides=fitted.params)
+    fresh = _envelope(sim, obs, int(fitted.meta.get("discard", 0)))
+    for ch, committed in fitted.envelope.items():
+        got = fresh.get(ch)
+        if got is None:
+            raise TraceError(f"regression telemetry lost channel {ch!r}")
+        if got > committed * slack + 1e-12:
+            raise TraceError(
+                f"calibration envelope widened: {ch} = {got:.6g} > "
+                f"{committed:.6g} * {slack} — the cooling physics no "
+                f"longer reproduces the committed calibration")
+    return fresh
+
+
+def _load_telemetry_npz(path: pathlib.Path) -> dict:
+    try:
+        z = np.load(path, allow_pickle=False)
+    except Exception as e:
+        raise TraceError(f"cannot read telemetry NPZ {path}: {e}") from e
+    return {k: z[k] for k in z.files}
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI: ``simulate.py calibrate`` — fit or check a plant calibration.
+
+    The facility telemetry NPZ carries ``dt`` (s), a heat trace
+    (``p_it_w`` f32[S] or ``group_heat_w`` f32[S, G]), the recorded
+    observables (``t_basin_c`` / ``pue``) and, unless ``--weather-trace``
+    overrides it, the recorded ``t_wetbulb_c``.
+    """
+    import argparse
+    from repro.systems import config as SC
+    ap = argparse.ArgumentParser(
+        prog="simulate.py calibrate",
+        description="fit cooling-plant parameters to recorded telemetry")
+    ap.add_argument("--telemetry", required=True,
+                    help="facility telemetry NPZ (see --help)")
+    ap.add_argument("--system", default="frontier",
+                    choices=sorted(SC.SYSTEMS))
+    ap.add_argument("--weather-trace", default=None,
+                    help="measured weather CSV/NPZ (repro.traces.weather); "
+                         "default: the NPZ's t_wetbulb_c channel")
+    ap.add_argument("--fit", default=",".join(DEFAULT_FIT),
+                    help=f"comma list from {sorted(FIT_BOUNDS)}")
+    ap.add_argument("--out", default=None,
+                    help="write fitted-params JSON here")
+    ap.add_argument("--check", default=None,
+                    help="fitted-params JSON to verify instead of fitting "
+                         "(the regression gate; exits 1 on a widened "
+                         "envelope)")
+    args = ap.parse_args(argv)
+
+    tel = _load_telemetry_npz(pathlib.Path(args.telemetry))
+    if "dt" not in tel:
+        raise TraceError(f"{args.telemetry}: missing 'dt'")
+    dt = float(tel["dt"])
+    heat = tel.get("group_heat_w", tel.get("p_it_w"))
+    if heat is None:
+        raise TraceError(f"{args.telemetry}: missing 'p_it_w' or "
+                         f"'group_heat_w'")
+    obs = {ch: tel[ch] for ch in _SCALES if ch in tel}
+    cfg = SC.SYSTEMS[args.system].cooling
+    if args.weather_trace:
+        from repro.traces.weather import load_weather
+        S = np.asarray(heat).shape[0]
+        wb = np.asarray(load_weather(args.weather_trace, S, dt).t_wetbulb_c)
+    elif "t_wetbulb_c" in tel:
+        wb = np.asarray(tel["t_wetbulb_c"], np.float64)
+    else:
+        raise TraceError("no weather: pass --weather-trace or include "
+                         "t_wetbulb_c in the telemetry NPZ")
+
+    if args.check:
+        fitted = FittedParams.load(args.check)
+        try:
+            fresh = check_envelope(fitted, cfg, heat, dt, wb, obs)
+        except TraceError as e:
+            print(f"FAIL {e}")
+            return 1
+        print("calibration envelope holds:")
+        for ch, v in sorted(fresh.items()):
+            print(f"  {ch}: {v:.6g} (committed "
+                  f"{fitted.envelope[ch]:.6g})")
+        return 0
+
+    fit = tuple(s for s in args.fit.split(",") if s)
+    fitted = calibrate(cfg, heat, dt, wb, obs, fit=fit,
+                       meta={"system": args.system,
+                             "telemetry": str(args.telemetry)})
+    for n, v in sorted(fitted.params.items()):
+        print(f"  {n}: {v:.6g}  (initial {float(getattr(cfg, n)):.6g})")
+    for ch, v in sorted(fitted.envelope.items()):
+        print(f"  {ch}: {v:.6g}")
+    if args.out:
+        fitted.save(args.out)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

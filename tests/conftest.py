@@ -8,6 +8,7 @@ test_train.py — import them directly (``from conftest import make_case``);
 pytest's prepend import mode puts this directory on ``sys.path``.
 """
 import dataclasses
+import pathlib
 
 import jax
 import numpy as np
@@ -16,6 +17,10 @@ import pytest
 from repro.datasets.synthetic import WorkloadSpec, generate
 from repro.grid import signals as gsig
 from repro.systems.config import FacilityTopology, get_system
+
+# golden trace fixtures (tools/make_trace_fixtures.py) — committed bytes,
+# consumed by test_traces*.py / test_calibrate.py and the docs quickstart
+DATA_DIR = pathlib.Path(__file__).resolve().parent / "data"
 
 
 def pytest_configure(config):
@@ -46,6 +51,25 @@ def small_jobs(small_system):
 def small_table(small_jobs, small_system):
     small_jobs.assign_prepop_placement(0.0, small_system.n_nodes)
     return small_jobs.to_table(96)
+
+
+@pytest.fixture(scope="session")
+def trace_jobset(tmp_path_factory):
+    """The joblive/jobprofile golden fixture as a replay-capable JobSet
+    (measured ``power_profile`` attached; NPZ cache in a session tmp
+    dir so the repo stays clean)."""
+    from repro.traces import load_telemetry
+    return load_telemetry(
+        DATA_DIR / "joblive", DATA_DIR / "jobprofile", prof_dt=20.0,
+        cache_dir=tmp_path_factory.mktemp("trace_cache"))
+
+
+@pytest.fixture(scope="session")
+def trace_weather():
+    """The weather-week golden fixture resampled to a 2 h / 20 s grid."""
+    from repro.traces import load_weather
+    return load_weather(DATA_DIR / "weather_week.csv", n_steps=360,
+                        dt=20.0)
 
 
 # ---------------------------------------------------------------------------

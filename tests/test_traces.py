@@ -1,0 +1,268 @@
+"""Trace ingestion + telemetry replay (repro.traces): oracle tests.
+
+The contract with the rest of the twin, in test form:
+
+* **Roundtrip digest invariance** — a PM100-style parquet job table, its
+  SWF export and a ``write_job_table`` re-export all ingest to the same
+  ``transport.job_digest`` (whole-second rounding is the shared
+  canonical form).
+* **Cache identity** — the content-addressed NPZ cache serves the exact
+  bytes of the cold parse: cold-with-cache, cache-hit and a direct
+  ``jobset_from_npz`` load are leaf-for-leaf bit-identical.
+* **Replay exactness** — with ``to_table(replay_power=True)`` the
+  per-step power of a measured job pointwise-equals its recorded
+  profile sample (LOCF work-time indexing), while profile-less jobs
+  (all ``-1`` sentinel rows) reproduce the model **bit-for-bit**, both
+  at the kernel and through a full engine rollout.
+* **Replay composes with events** — killing a profiled job moves its
+  measured-accrued energy into the energy-not-served ledger; nothing
+  is double-counted.
+* **Weather traces** — the measured-weather loader hands the cooling
+  model a finite wet-bulb that never exceeds its dry-bulb.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import DATA_DIR, assert_trees_equal
+from repro.core import engine as eng
+from repro.core import transport
+from repro.core import types as T
+from repro.datasets import loaders, swf
+from repro.events import EventConfig
+from repro.power import model as pm
+from repro.traces import (TraceError, jobset_from_npz, load_telemetry,
+                          read_job_table, source_digest, write_job_table)
+
+HORIZON = 120  # engine steps per rollout test
+
+
+# ---------------------------------------------------------------------------
+# Roundtrip digest invariance
+# ---------------------------------------------------------------------------
+def test_parquet_and_swf_ingest_to_same_digest():
+    js_pq = read_job_table(DATA_DIR / "pm100_small.parquet")
+    js_swf = swf.read_swf(DATA_DIR / "pm100_small.swf")
+    assert len(js_pq) == 200
+    assert transport.job_digest(js_pq) == transport.job_digest(js_swf)
+
+
+def test_write_job_table_roundtrip_digest_stable(tmp_path):
+    js = read_job_table(DATA_DIR / "pm100_small.parquet")
+    for ext in ("parquet", "csv"):
+        out = tmp_path / f"rt.{ext}"
+        write_job_table(js, out)
+        back = read_job_table(out)
+        assert transport.job_digest(back) == transport.job_digest(js), ext
+        # the digest-covered columns are exactly equal, not merely
+        # digest-colliding
+        for col in ("submit", "limit", "wall", "nodes", "account"):
+            np.testing.assert_array_equal(getattr(back, col),
+                                          getattr(js, col), err_msg=col)
+
+
+def test_swf_export_roundtrips_through_datasets_swf(tmp_path):
+    js = read_job_table(DATA_DIR / "pm100_small.parquet")
+    swf.write_swf(js, tmp_path / "rt.swf")
+    back = swf.read_swf(tmp_path / "rt.swf")
+    assert transport.job_digest(back) == transport.job_digest(js)
+
+
+def test_malformed_rows_raise_trace_error(tmp_path):
+    import pandas as pd
+    df = pd.read_parquet(DATA_DIR / "pm100_small.parquet")
+    bad = df.copy()
+    bad.loc[3, "num_nodes"] = 0
+    bad.to_parquet(tmp_path / "bad.parquet", index=False)
+    with pytest.raises(TraceError):
+        read_job_table(tmp_path / "bad.parquet")
+
+
+# ---------------------------------------------------------------------------
+# Telemetry parse + NPZ cache identity
+# ---------------------------------------------------------------------------
+def test_telemetry_parse_shape_and_sentinels(trace_jobset):
+    js = trace_jobset
+    assert len(js) == 30
+    assert js.power_profile is not None
+    prof = np.asarray(js.power_profile)
+    measured = (prof >= 0).any(axis=1)
+    # fixture: two thirds of the jobs are profiled, the rest are all -1
+    assert 0 < measured.sum() < len(js)
+    profileless = prof[~measured]
+    assert (profileless < 0).all(), "profile-less rows must be all-sentinel"
+    # measured rows are fully populated (LOCF fills the job's whole wall)
+    assert np.isfinite(prof[measured]).all()
+
+
+def test_npz_cache_bit_identical_to_cold_parse(tmp_path, trace_jobset):
+    cache = tmp_path / "cache"
+    cold = load_telemetry(DATA_DIR / "joblive", DATA_DIR / "jobprofile",
+                          prof_dt=20.0, cache_dir=cache)
+    digest = source_digest(DATA_DIR / "joblive", DATA_DIR / "jobprofile")
+    npz = cache / f"trace-{digest[:16]}.npz"
+    assert npz.exists(), "cache file must be content-addressed by digest"
+    hit = load_telemetry(DATA_DIR / "joblive", DATA_DIR / "jobprofile",
+                         prof_dt=20.0, cache_dir=cache)
+    direct = jobset_from_npz(npz)
+    nocache = load_telemetry(DATA_DIR / "joblive", DATA_DIR / "jobprofile",
+                             prof_dt=20.0)
+    for name, other in (("cache hit", hit), ("direct npz", direct),
+                        ("no-cache parse", nocache),
+                        ("session fixture", trace_jobset)):
+        assert_trees_equal(vars(cold), vars(other), f"cold vs {name}")
+
+
+def test_load_trace_dispatch(tmp_path):
+    js_dir = loaders.load_trace([DATA_DIR / "joblive", DATA_DIR / "jobprofile"],
+                                cache_dir=tmp_path)
+    js_pq = loaders.load_trace([DATA_DIR / "pm100_small.parquet"])
+    assert js_dir.power_profile is not None
+    assert js_pq.power_profile is None and len(js_pq) == 200
+    digest = source_digest(DATA_DIR / "joblive", DATA_DIR / "jobprofile")
+    js_npz = loaders.load_trace([tmp_path / f"trace-{digest[:16]}.npz"])
+    assert_trees_equal(vars(js_dir), vars(js_npz), "dir vs cached npz")
+    with pytest.raises(TraceError):
+        loaders.load_trace([DATA_DIR / "does_not_exist.xyz"])
+
+
+# ---------------------------------------------------------------------------
+# Replay exactness
+# ---------------------------------------------------------------------------
+def test_to_table_replay_gate(trace_jobset):
+    js = trace_jobset
+    plain = js.to_table(len(js) + 8)
+    assert plain.power_profile is None, "replay must be off by default"
+    table = js.to_table(len(js) + 8, replay_power=True)
+    prof = np.asarray(table.power_profile)
+    assert prof.shape[0] == len(js) + 8
+    assert (prof[len(js):] == -1.0).all(), "padded rows must be sentinel"
+    bare = dataclasses.replace(js, power_profile=None)
+    with pytest.raises(ValueError):
+        bare.to_table(replay_power=True)
+
+
+def test_replay_power_pointwise_equals_measurement(trace_jobset):
+    js = trace_jobset
+    table = js.to_table(replay_power=True)
+    J, Q = np.asarray(table.power_profile).shape
+    running = jnp.full((J,), T.RUNNING, jnp.int32)
+    prof = np.asarray(table.power_profile)
+    model = np.asarray(table.power_prof)
+    measured = (prof >= 0).any(axis=1)
+    for elapsed_s in (0.0, 10.0, 45.0, 300.0, 1e6):
+        el = jnp.full((J,), elapsed_s, jnp.float32)
+        p = np.asarray(pm.job_node_power_elapsed(table, running, el, 20.0))
+        idx = min(int(elapsed_s / 20.0), Q - 1)
+        # measured jobs play back the recorded sample verbatim
+        np.testing.assert_array_equal(p[measured], prof[measured, idx],
+                                      err_msg=f"elapsed={elapsed_s}")
+        # profile-less jobs keep the model bit-for-bit
+        np.testing.assert_array_equal(p[~measured], model[~measured, 0],
+                                      err_msg=f"elapsed={elapsed_s}")
+
+
+def test_all_sentinel_profile_is_bit_identical_to_model(small_system,
+                                                        trace_jobset):
+    """Attaching an all--1 ``power_profile`` compiles the replay graph but
+    must reproduce the no-field run bit-for-bit — the fallback path is the
+    model, exactly."""
+    js = trace_jobset
+    table = js.to_table(len(js) + 8)
+    Q = np.asarray(js.power_profile).shape[1]
+    sentinel = jnp.full((table.num_jobs, Q), -1.0, jnp.float32)
+    table_neg = dataclasses.replace(table, power_profile=sentinel)
+    scen = T.Scenario.make("fcfs", "easy")
+    t1 = HORIZON * small_system.dt
+    f_off, h_off = eng.simulate(small_system, table, scen, 0.0, t1)
+    f_neg, h_neg = eng.simulate(small_system, table_neg, scen, 0.0, t1)
+    assert_trees_equal(h_off, h_neg, "all-sentinel replay hist")
+    assert_trees_equal(f_off, f_neg, "all-sentinel replay final")
+
+
+@pytest.fixture(scope="module")
+def replay_run(small_system, trace_jobset):
+    table = trace_jobset.to_table(len(trace_jobset) + 8, replay_power=True)
+    scen = T.Scenario.make("fcfs", "easy")
+    t1 = HORIZON * small_system.dt
+    final, hist = eng.simulate(small_system, table, scen, 0.0, t1)
+    return table, final, hist
+
+
+def test_replay_changes_power_and_stays_finite(small_system, trace_jobset,
+                                               replay_run):
+    _, final, hist = replay_run
+    plain = trace_jobset.to_table(len(trace_jobset) + 8)
+    scen = T.Scenario.make("fcfs", "easy")
+    f0, h0 = eng.simulate(small_system, plain, scen, 0.0,
+                          HORIZON * small_system.dt)
+    p_rep = np.asarray(hist.power_total, np.float64)
+    p_mod = np.asarray(h0.power_total, np.float64)
+    assert np.isfinite(p_rep).all()
+    # the fixture's measured powers differ from the synthetic model, so
+    # replay must actually move the power trajectory
+    assert not np.array_equal(p_rep, p_mod), \
+        "replay mode changed nothing — measured profiles were ignored"
+    # ... without touching the schedule: same jobs started at same times
+    np.testing.assert_array_equal(np.asarray(final.jstate),
+                                  np.asarray(f0.jstate))
+    np.testing.assert_array_equal(np.asarray(final.start),
+                                  np.asarray(f0.start))
+
+
+def test_replay_energy_ledger_integrates_measured_power(small_system,
+                                                        replay_run):
+    _, final, hist = replay_run
+    np.testing.assert_allclose(
+        float(np.asarray(final.energy_total)),
+        float(np.asarray(hist.power_total, np.float64).sum()
+              * small_system.dt),
+        rtol=1e-4)
+
+
+def test_replay_composes_with_events(small_system, trace_jobset):
+    """Killed profiled jobs hand their measured-accrued energy to the
+    energy-not-served ledger — replay and the failure engine compose."""
+    table = trace_jobset.to_table(len(trace_jobset) + 8, replay_power=True)
+    scen = T.Scenario.make("fcfs", "easy", failure_seed=3.0,
+                           node_fail_rate=5e-4, cdu_fail_rate=2e-5,
+                           failure_corr=0.5, repair_s=900.0)
+    t1 = HORIZON * small_system.dt
+    final, hist = eng.simulate(small_system, table, scen, 0.0, t1,
+                               events=EventConfig())
+    assert float(np.asarray(final.events.jobs_killed)) > 0, \
+        "kill fixture drew no failures — the composition test is vacuous"
+    lost_j = float(np.asarray(final.events.energy_lost_j))
+    assert lost_j > 0.0
+    # conservation: surviving accrual + not-served never exceeds the IT
+    # integral (accrual excludes the idle floor, hence <=)
+    jobs_j = float(np.asarray(final.jenergy, np.float64).sum())
+    energy_it = float(np.asarray(final.energy_it))
+    assert jobs_j + lost_j <= energy_it * (1.0 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Measured weather
+# ---------------------------------------------------------------------------
+def test_weather_trace_is_finite_and_physical(trace_weather):
+    wb = np.asarray(trace_weather.t_wetbulb_c)
+    db = np.asarray(trace_weather.t_drybulb_c)
+    assert wb.shape == (360,) and db.shape == (360,)
+    assert np.isfinite(wb).all() and np.isfinite(db).all()
+    assert (wb <= db + 1e-6).all(), "wet-bulb must not exceed dry-bulb"
+
+
+def test_weather_trace_drives_the_engine(small_system, trace_jobset,
+                                         trace_weather):
+    table = trace_jobset.to_table(len(trace_jobset) + 8, replay_power=True)
+    scen = T.Scenario.make("fcfs", "easy")
+    t1 = 360 * small_system.dt
+    _, h_wx = eng.simulate(small_system, table, scen, 0.0, t1,
+                           weather=trace_weather)
+    _, h0 = eng.simulate(small_system, table, scen, 0.0, t1)
+    assert np.isfinite(np.asarray(h_wx.power_total)).all()
+    assert not np.array_equal(np.asarray(h_wx.power_cooling),
+                              np.asarray(h0.power_cooling)), \
+        "measured weather did not reach the cooling model"

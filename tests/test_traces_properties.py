@@ -1,0 +1,255 @@
+"""Property battery for trace ingestion (repro.traces).
+
+The loaders promise exact structural invariants, not best-effort parsing:
+
+* **Roundtrip closure.** Any valid job table — arbitrary times, node
+  counts, user labels, never-started jobs — survives a
+  ``read -> write_job_table -> read`` cycle with its ``job_digest``
+  (and every digest-covered column) unchanged: whole-second rounding is
+  idempotent and first-seen account densification is a fixed point.
+* **Loud failure.** A malformed row (NaN time, non-positive duration,
+  fractional or zero nodes, start before submit) raises ``TraceError``
+  naming the row. Rows are never silently dropped: a frame either loads
+  with *all* its rows or not at all.
+* **Physical weather.** For any monotone trace, the resampled wet-bulb
+  is finite everywhere and never exceeds its dry-bulb, on and off the
+  source grid; non-monotone timestamps and out-of-range humidity raise
+  ``TraceError`` instead of interpolating garbage.
+
+Runs under hypothesis where installed; every property also runs with
+fixed seeds so the battery works without the dev extras (mirroring
+tests/test_events_properties.py).
+"""
+import numpy as np
+import pandas as pd
+import pytest
+
+from repro.core import transport
+from repro.traces import (TraceError, jobset_from_frame, load_weather,
+                          read_job_table, wet_bulb_stull, write_job_table)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:       # local runs without the dev extras
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Inert stand-in so @given/strategy expressions still import."""
+        def __call__(self, *a, **k):
+            return self
+
+        def __or__(self, other):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return lambda f: f
+
+    settings = given
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="hypothesis not installed")
+
+SEEDS = st.integers(min_value=0, max_value=2 ** 16)
+SIZES = st.integers(min_value=1, max_value=64)
+
+
+# ---------------------------------------------------------------------------
+# Frame generator shared by the hypothesis and seeded lanes.
+# ---------------------------------------------------------------------------
+def random_frame(seed: int, n: int) -> pd.DataFrame:
+    """A valid random job table: exponential-ish times, duplicate and
+    exotic user labels, a sprinkle of never-started jobs (NaN start/end
+    with a recorded run_time)."""
+    rng = np.random.default_rng(seed)
+    submit = np.sort(rng.uniform(0, 1e6, n))
+    wall = rng.uniform(1.0, 1e5, n)
+    start = submit + rng.exponential(1e3, n)
+    never = rng.random(n) < 0.15
+    start[never] = np.nan
+    users = rng.choice(
+        ["alice", "bob", "u-10", "u-2", "群", "x" * 30, "9", "10"], n)
+    return pd.DataFrame({
+        "job_id": np.arange(n),
+        "submit_time": submit,
+        "start_time": start,
+        "end_time": start + wall,
+        "run_time": wall,
+        "num_nodes": rng.integers(1, 128, n),
+        "time_limit": np.ceil(wall / 60.0) * rng.uniform(1.0, 4.0, n),
+        "user_id": users,
+    })
+
+
+def _check_roundtrip(seed, n, tmp_path, ext):
+    src = tmp_path / f"src_{seed}_{n}.{ext}"
+    random_frame(seed, n).to_csv(src, index=False) if ext == "csv" \
+        else random_frame(seed, n).to_parquet(src, index=False)
+    js = read_job_table(src)
+    assert len(js) == n, "valid rows must never be dropped"
+    out = tmp_path / f"rt_{seed}_{n}.{ext}"
+    write_job_table(js, out)
+    back = read_job_table(out)
+    assert transport.job_digest(back) == transport.job_digest(js)
+    for col in ("submit", "limit", "wall", "nodes", "account"):
+        np.testing.assert_array_equal(getattr(back, col), getattr(js, col),
+                                      err_msg=f"{col} seed={seed}")
+    # rec_start survives too (inf marks never-started on both sides)
+    np.testing.assert_array_equal(back.rec_start, js.rec_start)
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS, n=SIZES)
+def test_roundtrip_closure_hypothesis(seed, n, tmp_path_factory):
+    _check_roundtrip(seed, n, tmp_path_factory.mktemp("rt"), "csv")
+
+
+def test_roundtrip_closure_seeded(tmp_path):
+    for seed in (0, 7, 12345):
+        for n in (1, 13, 64):
+            _check_roundtrip(seed, n, tmp_path, "csv")
+    _check_roundtrip(99, 40, tmp_path, "parquet")
+
+
+def test_rounding_is_idempotent(tmp_path):
+    """Second ingest of an exported table is byte-stable: whole-second
+    rounding applied twice equals once."""
+    src = tmp_path / "a.csv"
+    random_frame(3, 32).to_csv(src, index=False)
+    js1 = read_job_table(src)
+    write_job_table(js1, tmp_path / "b.csv")
+    js2 = read_job_table(tmp_path / "b.csv")
+    write_job_table(js2, tmp_path / "c.csv")
+    js3 = read_job_table(tmp_path / "c.csv")
+    for col in ("submit", "limit", "wall", "nodes", "account", "rec_start"):
+        np.testing.assert_array_equal(getattr(js2, col), getattr(js3, col),
+                                      err_msg=col)
+
+
+# ---------------------------------------------------------------------------
+# Loud failure: malformed rows raise, never a silent drop.
+# ---------------------------------------------------------------------------
+CORRUPTIONS = {
+    "nan submit": ("submit_time", 0, np.nan),
+    "nan duration": ("run_time", 1, np.nan),
+    "negative duration": ("run_time", 2, -5.0),
+    "zero duration": ("run_time", 2, 0.0),
+    "zero nodes": ("num_nodes", 3, 0),
+    "negative nodes": ("num_nodes", 4, -2),
+    "start before submit": ("start_time", 5, -1e9),
+    "zero limit": ("time_limit", 6, 0.0),
+}
+
+
+def _corrupt(seed, name):
+    col, row, val = CORRUPTIONS[name]
+    df = random_frame(seed, 16)
+    if name.endswith("duration"):
+        # duration comes from end-start when end resolves; break both
+        df.loc[row, "end_time"] = df.loc[row, "start_time"] + val
+    df.loc[row, col] = val
+    with pytest.raises(TraceError) as exc:
+        jobset_from_frame(df)
+    assert str(row) in str(exc.value), \
+        f"{name}: error must name the offending row"
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS, name=st.sampled_from(sorted(CORRUPTIONS)))
+def test_malformed_rows_raise_hypothesis(seed, name):
+    _corrupt(seed, name)
+
+
+def test_malformed_rows_raise_seeded():
+    for seed in (0, 11):
+        for name in CORRUPTIONS:
+            _corrupt(seed, name)
+
+
+def test_missing_columns_raise():
+    df = random_frame(5, 8).drop(columns=["num_nodes"])
+    with pytest.raises(TraceError):
+        jobset_from_frame(df)
+    df = random_frame(5, 8).drop(columns=["end_time", "run_time"])
+    with pytest.raises(TraceError):
+        jobset_from_frame(df)
+    with pytest.raises(TraceError):
+        jobset_from_frame(pd.DataFrame({"submit_time": []}))
+
+
+# ---------------------------------------------------------------------------
+# Weather: always finite, always physical.
+# ---------------------------------------------------------------------------
+def random_weather(seed: int, rows: int) -> pd.DataFrame:
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.uniform(60.0, 7200.0, rows))
+    return pd.DataFrame({
+        "timestamp": t,
+        "t_drybulb_c": rng.uniform(-30.0, 48.0, rows),
+        "rh_pct": rng.uniform(0.0, 100.0, rows),
+    })
+
+
+def _check_weather(seed, rows, n_steps, dt, tmp_path):
+    src = tmp_path / f"wx_{seed}_{rows}.csv"
+    random_weather(seed, rows).to_csv(src, index=False)
+    w = load_weather(src, n_steps, dt)
+    wb = np.asarray(w.t_wetbulb_c, np.float64)
+    db = np.asarray(w.t_drybulb_c, np.float64)
+    assert wb.shape == (n_steps,) and db.shape == (n_steps,)
+    assert np.isfinite(wb).all(), "wet-bulb must be finite everywhere"
+    assert np.isfinite(db).all()
+    assert (wb <= db + 1e-6).all(), "wet-bulb must not exceed dry-bulb"
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS, rows=st.integers(min_value=2, max_value=200),
+       n_steps=st.integers(min_value=1, max_value=500))
+def test_weather_physical_hypothesis(seed, rows, n_steps, tmp_path_factory):
+    _check_weather(seed, rows, n_steps, 20.0, tmp_path_factory.mktemp("wx"))
+
+
+def test_weather_physical_seeded(tmp_path):
+    for seed in (0, 4, 99):
+        for rows, n_steps, dt in ((2, 1, 20.0), (24, 360, 20.0),
+                                  (200, 500, 900.0)):
+            _check_weather(seed, rows, n_steps, dt, tmp_path)
+
+
+def test_weather_stull_clamp_extremes():
+    # dry air at the formula's edge: Stull can nominally exceed the
+    # dry-bulb near 0% RH — the loader clamp keeps wb <= db
+    t = np.array([-40.0, 0.0, 25.0, 50.0])
+    for rh in (0.0, 1e-3, 50.0, 100.0):
+        wb = wet_bulb_stull(t, np.full_like(t, rh))
+        assert np.isfinite(wb).all()
+        assert (wb <= t + 1e-9).all()
+
+
+def test_weather_rejects_non_monotone(tmp_path):
+    df = random_weather(1, 16)
+    df.loc[7, "timestamp"] = df.loc[3, "timestamp"]   # duplicate -> not
+    df = df.sort_values("timestamp")                  # strictly increasing
+    df.to_csv(tmp_path / "wx.csv", index=False)
+    with pytest.raises(TraceError):
+        load_weather(tmp_path / "wx.csv", 10, 20.0)
+
+
+def test_weather_rejects_bad_humidity(tmp_path):
+    df = random_weather(2, 16)
+    df.loc[5, "rh_pct"] = 130.0
+    df.to_csv(tmp_path / "wx.csv", index=False)
+    with pytest.raises(TraceError):
+        load_weather(tmp_path / "wx.csv", 10, 20.0)
+    df.loc[5, "rh_pct"] = np.nan
+    df.to_csv(tmp_path / "wx.csv", index=False)
+    with pytest.raises(TraceError):
+        load_weather(tmp_path / "wx.csv", 10, 20.0)

@@ -1,0 +1,228 @@
+"""Regenerate the golden trace fixtures under tests/data/.
+
+The fixtures are *committed* — tests consume the bytes in the repo, not
+this script — so regeneration must be bit-deterministic (fixed seeds, no
+clocks). Rerun after changing a loader's on-disk contract, then re-commit:
+
+    PYTHONPATH=src python tools/make_trace_fixtures.py
+
+Produces:
+  pm100_small.parquet / pm100_small.swf   ~200-job PM100-style job table
+      (datetime columns) and its SWF export — the roundtrip pair.
+  joblive/date=2024-01-18/joblive.csv     RAPS-style telemetry dump:
+  jobprofile/date=2024-01-18/jobprofile.csv   scheduler rows + measured
+      per-node power samples (two thirds of the jobs are profiled).
+  weather_week.csv                        one week of hourly dry-bulb/RH
+      including a heat-wave day (drives the calibration fixture into the
+      regime where the HX parameters are observable).
+  calibration/telemetry.npz               facility telemetry from a
+      *known-parameter* plant (truth stored as true_* keys) driven by the
+      replayed fixture power + fixture weather.
+  calibration/fitted_params.json          the committed calibration and
+      its residual envelope — the regression gate tests enforce.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+import pandas as pd
+
+DATA = pathlib.Path(__file__).resolve().parent.parent / "tests" / "data"
+EPOCH = 1705536000.0   # 2024-01-18 00:00:00 UTC — fixed fixture origin
+
+# the known "true" plant the calibration fixture must recover, as
+# multipliers / absolutes on the frontier CoolingConfig defaults
+CAL_TRUTH = {"ua_w_k": 0.7, "tau_hx_s": 0.6, "basin_margin_c": 4.5}
+# calibration window: 48 h from the cool day-3 morning through the
+# heat-wave peak — the cool phase observes the fan-staging threshold
+# (basin target = setpoint - margin), the hot phase unpins the CDU
+# supply from its setpoint and observes UA / tau_hx
+CAL_T0 = 3.0 * 86400.0
+CAL_STEPS = 8640
+CAL_DT = 20.0
+
+
+def _dt(seconds: np.ndarray) -> pd.Series:
+    return pd.to_datetime(np.asarray(seconds, np.float64) + EPOCH,
+                          unit="s", utc=True)
+
+
+def make_pm100(out: pathlib.Path) -> None:
+    rng = np.random.default_rng(42)
+    J = 200
+    submit = np.sort(rng.uniform(0, 2 * 86400, J)).round()
+    wall = np.clip(rng.lognormal(7.6, 1.0, J), 600, 6 * 3600).round()
+    wait = np.clip(rng.exponential(900, J), 0, 4 * 3600).round()
+    start = submit + wait
+    nodes = np.clip(rng.geometric(0.12, J), 1, 64)
+    limit_min = np.ceil(wall / 60 * rng.uniform(1.1, 3.0, J))
+    users = rng.integers(0, 24, J)
+    df = pd.DataFrame({
+        "job_id": np.arange(1, J + 1),
+        "submit_time": _dt(submit),
+        "start_time": _dt(start),
+        "end_time": _dt(start + wall),
+        "num_nodes": nodes.astype(np.int64),
+        "time_limit": limit_min,
+        "user_id": [f"user{u:02d}" for u in users],
+    })
+    df.to_parquet(out / "pm100_small.parquet", index=False)
+
+    from repro.datasets import swf
+    from repro.traces import read_job_table
+    js = read_job_table(out / "pm100_small.parquet")
+    swf.write_swf(js, out / "pm100_small.swf")
+
+
+def make_telemetry(out: pathlib.Path) -> None:
+    rng = np.random.default_rng(7)
+    J = 30
+    live_dir = out / "joblive" / "date=2024-01-18"
+    prof_dir = out / "jobprofile" / "date=2024-01-18"
+    live_dir.mkdir(parents=True, exist_ok=True)
+    prof_dir.mkdir(parents=True, exist_ok=True)
+
+    submit = np.sort(rng.uniform(0, 3 * 3600, J)).round()
+    wall = np.clip(rng.lognormal(7.0, 0.8, J), 300, 2 * 3600).round()
+    start = submit + np.clip(rng.exponential(300, J), 0, 1800).round()
+    nodes = np.clip(rng.geometric(0.3, J), 1, 8)
+    pd.DataFrame({
+        "job_id": 1000 + np.arange(J),
+        "time_submission": submit,
+        "time_start": start,
+        "time_end": start + wall,
+        "time_limit": (wall * rng.uniform(1.2, 2.5, J)).round(),
+        "node_count": nodes.astype(np.int64),
+        "user": [f"u{rng.integers(0, 8)}" for _ in range(J)],
+    }).to_csv(live_dir / "joblive.csv", index=False)
+
+    # measured per-node power for two thirds of the jobs, sampled at a
+    # cadence (45 s) deliberately off the engine grid (20 s) so the LOCF
+    # resample path is exercised
+    rows = []
+    for j in range(J):
+        if j % 3 == 2:
+            continue   # profile-less job: replay falls back to the model
+        t = np.arange(start[j], start[j] + wall[j], 45.0)
+        base = rng.uniform(350, 1500)
+        p = base * (1.0 + 0.2 * np.sin(2 * np.pi * (t - start[j]) / 600.0)
+                    + rng.normal(0, 0.03, len(t)))
+        rows.append(pd.DataFrame({
+            "timestamp": t, "job_id": 1000 + j,
+            "node_power_w": np.clip(p, 50.0, None).round(1)}))
+    pd.concat(rows, ignore_index=True).to_csv(
+        prof_dir / "jobprofile.csv", index=False)
+
+
+def make_weather(out: pathlib.Path) -> None:
+    rng = np.random.default_rng(11)
+    hours = np.arange(0, 7 * 24 + 1)
+    t = hours * 3600.0
+    day = 2 * np.pi * (hours % 24) / 24.0
+    db = 24.0 + 7.0 * np.sin(day - 2 * np.pi * 10 / 24) \
+        + rng.normal(0, 0.4, len(hours))
+    # heat-wave days 3.5-5.5: push dry-bulb toward 40 °C and keep the air
+    # humid enough that the wet-bulb clears the tower's comfortable range
+    wave = np.clip(1 - np.abs(hours / 24.0 - 4.5) / 1.0, 0, 1)
+    db = db + 11.0 * wave
+    rh = np.clip(55 + 15 * np.cos(day) + 10 * wave
+                 + rng.normal(0, 2, len(hours)), 20, 95)
+    pd.DataFrame({
+        "timestamp": _dt(t),
+        "t_drybulb_c": db.round(2),
+        "rh_pct": rh.round(1),
+    }).to_csv(out / "weather_week.csv", index=False)
+
+
+def _replayed_heat(out: pathlib.Path, n_groups: int) -> np.ndarray:
+    """Host-side replay of the telemetry fixture's measured power onto
+    the calibration grid: at each step, sum nodes x measured node power
+    over the jobs recorded as running — the 'replayed power trace' the
+    calibration consumes, derived from fixture bytes alone (no engine in
+    the loop, so a scheduler change can't invalidate the calibration
+    fixture)."""
+    live = pd.read_csv(out / "joblive" / "date=2024-01-18" / "joblive.csv")
+    prof = pd.read_csv(out / "jobprofile" / "date=2024-01-18"
+                       / "jobprofile.csv")
+    tgrid = np.arange(CAL_STEPS) * CAL_DT
+    # loop the ~4 h telemetry window over the 12 h calibration window
+    span = float(live["time_end"].max())
+    p_it = np.zeros(CAL_STEPS)
+    for jid, g in prof.groupby("job_id"):
+        row = live[live["job_id"] == jid].iloc[0]
+        ts = g["timestamp"].to_numpy(np.float64)
+        pw = g["node_power_w"].to_numpy(np.float64)
+        tt = np.mod(tgrid, span)
+        running = (tt >= row["time_start"]) & (tt < row["time_end"])
+        idx = np.clip(np.searchsorted(ts, tt, side="right") - 1,
+                      0, len(ts) - 1)
+        p_it += np.where(running, pw[idx] * row["node_count"], 0.0)
+    # scale the toy fleet to plant load so the HX actually works
+    return p_it * (25e6 / max(p_it.mean(), 1.0))
+
+
+def make_calibration(out: pathlib.Path) -> None:
+    from repro.systems.config import SYSTEMS
+    from repro.traces import load_weather
+    import repro.traces.calibrate as cal
+
+    cal_dir = out / "calibration"
+    cal_dir.mkdir(parents=True, exist_ok=True)
+    cfg = SYSTEMS["frontier"].cooling
+    heat = _replayed_heat(out, cfg.n_groups)
+    wb = np.asarray(load_weather(out / "weather_week.csv", CAL_STEPS,
+                                 CAL_DT, t0=CAL_T0).t_wetbulb_c, np.float64)
+    truth = {
+        "ua_w_k": cfg.ua_w_k * CAL_TRUTH["ua_w_k"],
+        "tau_hx_s": cfg.tau_hx_s * CAL_TRUTH["tau_hx_s"],
+        "basin_margin_c": CAL_TRUTH["basin_margin_c"],
+    }
+    obs = cal.simulate_plant(cfg, heat, CAL_DT, wb, overrides=truth)
+    # sensor noise on the recorded channels: without it the fit is exact
+    # and the committed envelope collapses to zero — a gate that then
+    # demands bit-identical floats across backends instead of "the
+    # physics still reproduces the calibration"
+    nrng = np.random.default_rng(23)
+    for ch, sig in (("t_basin_c", 0.05), ("t_supply_c", 0.05),
+                    ("t_return_c", 0.05), ("pue", 5e-4)):
+        obs[ch] = obs[ch] + nrng.normal(0.0, sig, len(obs[ch]))
+    np.savez(cal_dir / "telemetry.npz",
+             dt=np.float64(CAL_DT), p_it_w=heat.astype(np.float32),
+             t_wetbulb_c=wb.astype(np.float32),
+             **{k: v.astype(np.float32) for k, v in obs.items()},
+             **{f"true_{k}": np.float64(v) for k, v in truth.items()})
+
+    # fit from the *committed bytes* (f32 NPZ round-trip), not the f64
+    # in-memory arrays — the envelope must equal exactly what the
+    # regression gate recomputes from the fixture
+    z = np.load(cal_dir / "telemetry.npz")
+    heat, wb = z["p_it_w"], z["t_wetbulb_c"]
+    obs = {ch: z[ch] for ch in ("t_basin_c", "t_supply_c", "t_return_c",
+                                "pue")}
+    fitted = cal.calibrate(cfg, heat, CAL_DT, wb, obs,
+                           meta={"system": "frontier",
+                                 "fixture": "tests/data/calibration",
+                                 "truth": truth})
+    fitted.save(cal_dir / "fitted_params.json")
+    for n, v in fitted.params.items():
+        err = abs(v - truth[n]) / truth[n]
+        print(f"  {n}: fitted {v:.6g} truth {truth[n]:.6g} "
+              f"rel err {err:.3%}")
+    print(f"  envelope: {fitted.envelope}")
+
+
+def main() -> None:
+    DATA.mkdir(parents=True, exist_ok=True)
+    make_pm100(DATA)
+    print("pm100_small.parquet / .swf")
+    make_telemetry(DATA)
+    print("joblive/ + jobprofile/")
+    make_weather(DATA)
+    print("weather_week.csv")
+    make_calibration(DATA)
+    print(f"fixtures -> {DATA}")
+
+
+if __name__ == "__main__":
+    main()
